@@ -1,0 +1,47 @@
+"""Shared benchmark plumbing: workload construction, timing, CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` CSV rows (plus human-
+readable tables to stderr-style comment lines prefixed with '#').
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from repro.core import generate_cluster
+
+# Paper §4 experiment scale stand-in: live Meta tier data is proprietary;
+# this is the calibrated synthetic workload (5 tiers, paper SLO table,
+# tier 3 hot — see core/telemetry.py).
+NUM_APPS = 1200
+SEED = 0
+
+# Paper timeout knobs (seconds) -> deterministic iteration budgets
+TIMEOUTS = (30, 60, 600)
+
+
+def load_cluster(num_apps: int = NUM_APPS, seed: int = SEED):
+    return generate_cluster(num_apps=num_apps, seed=seed)
+
+
+def emit(name: str, us_per_call: float, derived):
+    print(f"{name},{us_per_call:.1f},{derived}")
+    sys.stdout.flush()
+
+
+def comment(text: str):
+    print(f"# {text}")
+    sys.stdout.flush()
+
+
+def timeit(fn, *args, warmup: int = 1, reps: int = 3, **kw):
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        times.append(time.perf_counter() - t0)
+    return out, float(np.median(times)) * 1e6

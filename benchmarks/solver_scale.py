@@ -1,0 +1,86 @@
+"""Solver hot-spot scaling: move_eval throughput + LocalSearch iteration rate
+vs problem size (the paper's "TBs per second" scale argument applied to the
+scheduler itself).
+
+Also benches the Pallas kernel in interpret mode for *correct-path* parity;
+interpret-mode timing is NOT a TPU number (the roofline for the kernel is
+derived in EXPERIMENTS.md §Roofline from its arithmetic intensity instead).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import comment, emit
+from repro.core import LocalSearchConfig, generate_cluster, solve_local
+from repro.kernels import ops
+
+
+def bench_move_eval(N: int, T: int, reps: int = 5):
+    rng = np.random.default_rng(0)
+    demand = jnp.asarray(rng.lognormal(1, 0.8, (N, 2)), jnp.float32)
+    tasks = jnp.asarray(rng.integers(1, 40, N), jnp.float32)
+    crit = jnp.asarray(rng.random(N), jnp.float32)
+    x = jnp.asarray(rng.integers(0, T, N), jnp.int32)
+    x0 = jnp.asarray(rng.integers(0, T, N), jnp.int32)
+    cap = jnp.asarray(rng.uniform(400, 900, (T, 2)), jnp.float32)
+    klim = jnp.asarray(rng.uniform(800, 2000, T), jnp.float32)
+    ideal = jnp.full((T, 2), 0.7, jnp.float32)
+    ideal_t = jnp.full((T,), 0.8, jnp.float32)
+    util = jax.ops.segment_sum(demand, x, num_segments=T)
+    tt = jax.ops.segment_sum(tasks, x, num_segments=T)
+    w = jnp.asarray([1e4, 1e3, 1e2, 1e1, 1e0], jnp.float32)
+    args = (demand, tasks, crit, x, x0, cap, klim, ideal, ideal_t, util, tt, w)
+
+    fn = jax.jit(lambda *a: ops.move_eval(*a, impl="xla"))
+    fn(*args).block_until_ready()
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn(*args).block_until_ready()
+        times.append(time.perf_counter() - t0)
+    us = float(np.median(times)) * 1e6
+    candidates_per_s = N * T / (us / 1e6)
+    emit(f"solver_scale/move_eval/N{N}xT{T}", us,
+         f"candidates_per_s={candidates_per_s:.3e}")
+    return us
+
+
+def bench_local_search(N: int, iters: int = 64):
+    cluster = generate_cluster(num_apps=N, seed=1)
+    p = cluster.problem
+    solve_local(p, LocalSearchConfig(max_iters=4))        # compile
+    t0 = time.perf_counter()
+    res = solve_local(p, LocalSearchConfig(max_iters=iters))
+    dt = time.perf_counter() - t0
+    emit(f"solver_scale/local_search/N{N}", dt * 1e6,
+         f"iters={res.iterations};iters_per_s={res.iterations / dt:.1f};"
+         f"moved={res.num_moved}")
+    return dt
+
+
+def run():
+    comment("--- solver hot-spot scaling (XLA path, CPU) ---")
+    for N, T in ((1_000, 5), (10_000, 16), (100_000, 64), (100_000, 128)):
+        bench_move_eval(N, T)
+    for N in (300, 1_000, 3_000, 10_000):
+        bench_local_search(N)
+    # Pallas interpret-mode parity (not a perf number on CPU)
+    rngN, rngT = 4_096, 128
+    t0 = time.perf_counter()
+    comment("pallas interpret-mode parity check (runs the kernel body)")
+    from tests.test_kernels import _random_problem_arrays  # reuse builder
+    args = _random_problem_arrays(rngN, rngT, seed=7)
+    d_ref = ops.move_eval(*args, impl="xla")
+    d_pal = ops.move_eval(*args, impl="pallas")
+    err = float(jnp.max(jnp.abs(d_ref - d_pal))
+                / (jnp.max(jnp.abs(d_ref)) + 1e-9))
+    emit("solver_scale/move_eval_pallas_parity", (time.perf_counter() - t0) * 1e6,
+         f"rel_err={err:.2e}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,2 @@
+"""repro: SPTLB hierarchical multi-objective scheduling + JAX training framework."""
+__version__ = "0.1.0"

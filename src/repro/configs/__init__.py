@@ -1,0 +1,52 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config(arch_id)`` returns the exact published config;
+``list_archs()`` enumerates all ten.  Input-shape sets are defined in
+``repro.configs.shapes``.
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = (
+    "zamba2_2p7b",
+    "phi3_vision_4p2b",
+    "gemma2_9b",
+    "qwen2p5_3b",
+    "smollm_360m",
+    "olmo_1b",
+    "deepseek_v2_lite_16b",
+    "granite_moe_1b",
+    "xlstm_125m",
+    "hubert_xlarge",
+)
+
+# CLI aliases (--arch accepts either form)
+ALIASES = {
+    "zamba2-2.7b": "zamba2_2p7b",
+    "phi-3-vision-4.2b": "phi3_vision_4p2b",
+    "gemma2-9b": "gemma2_9b",
+    "qwen2.5-3b": "qwen2p5_3b",
+    "smollm-360m": "smollm_360m",
+    "olmo-1b": "olmo_1b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "granite-moe-1b-a400m": "granite_moe_1b",
+    "xlstm-125m": "xlstm_125m",
+    "hubert-xlarge": "hubert_xlarge",
+}
+
+
+def canonical(arch: str) -> str:
+    return ALIASES.get(arch, arch)
+
+
+def get_config(arch: str):
+    name = canonical(arch)
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCHS}")
+    mod = importlib.import_module(f"repro.configs.{name}")
+    return mod.config()
+
+
+def list_archs():
+    return list(ARCHS)

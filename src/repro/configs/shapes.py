@@ -1,0 +1,101 @@
+"""Assigned input shapes x per-arch applicability + ShapeDtypeStruct specs.
+
+Shapes (LM-family; seq_len x global_batch):
+  train_4k     4,096 x 256   -> lowers train_step
+  prefill_32k  32,768 x 32   -> lowers prefill (serve)
+  decode_32k   32,768 x 128  -> lowers serve_step (1 new token, full KV cache)
+  long_500k    524,288 x 1   -> serve_step; SUB-QUADRATIC ARCHS ONLY
+
+Skips (documented in DESIGN.md §5):
+  * long_500k skipped for pure full-attention archs (dense/moe/vlm/audio)
+  * decode shapes skipped for encoder-only archs (hubert)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str              # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": Shape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    """(runnable?, reason-if-not)."""
+    s = SHAPES[shape_name]
+    if cfg.is_encoder_only and s.kind == "decode":
+        return False, "encoder-only arch has no decode step"
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        return False, "full-attention arch; long_500k needs sub-quadratic attention"
+    return True, ""
+
+
+def cells(arch: str | None = None):
+    """All runnable (arch, shape) cells — the dry-run grid."""
+    from repro.configs import ARCHS
+    out = []
+    for a in ([arch] if arch else ARCHS):
+        cfg = get_config(a)
+        for sname in SHAPES:
+            ok, _ = shape_applicable(cfg, sname)
+            if ok:
+                out.append((a, sname))
+    return out
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    Weak-type-correct, shardable, no device allocation (dry-run contract).
+    For "decode" kinds the spec describes the serve_step inputs: one new
+    token per sequence plus the *full* KV cache of seq_len (built separately
+    via model.init_cache as ShapeDtypeStructs by the dry-run driver).
+    """
+    s = SHAPES[shape_name]
+    B, S = s.global_batch, s.seq_len
+    act_dtype = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+
+    if cfg.family == "audio":
+        if s.kind == "train":
+            return {
+                "frames": _sds((B, S, cfg.d_model), act_dtype),
+                "mask": _sds((B, S), jnp.bool_),
+                "targets": _sds((B, S), jnp.int32),
+            }
+        return {"frames": _sds((B, S, cfg.d_model), act_dtype)}
+
+    if s.kind == "decode":
+        return {"token": _sds((B, 1), jnp.int32)}
+
+    batch = {}
+    if cfg.family == "vlm":
+        P = cfg.num_patches
+        batch["vision_embeds"] = _sds((B, P, cfg.d_model), act_dtype)
+        text = S - P
+    else:
+        text = S
+    batch["tokens"] = _sds((B, text), jnp.int32)
+    if s.kind == "train":
+        batch["targets"] = _sds((B, text), jnp.int32)
+    return batch

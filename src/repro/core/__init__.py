@@ -1,0 +1,27 @@
+"""SPTLB core: the paper's contribution as a composable JAX module."""
+from repro.core.problem import (GoalWeights, Problem, make_problem,
+                                tier_loads, utilization_fraction)
+from repro.core.goals import goal_terms, objective
+from repro.core.constraints import Violations, validate
+from repro.core.solver_local import LocalSearchConfig, SolveResult, solve_local
+from repro.core.solver_optimal import OptimalSearchConfig, solve_optimal
+from repro.core.greedy import GreedyConfig, solve_greedy
+from repro.core.hierarchy import (CooperationResult, HostScheduler,
+                                  RegionScheduler, cooperate)
+from repro.core.telemetry import ClusterState, ResourceMonitor, generate_cluster
+from repro.core.metrics import (difference_to_balance, network_p99_ms,
+                                projected_metrics)
+from repro.core.sptlb import BalanceDecision, Sptlb, engine_fn
+from repro.core.controller import BalanceController, ControllerConfig
+
+__all__ = [
+    "GoalWeights", "Problem", "make_problem", "tier_loads",
+    "utilization_fraction", "goal_terms", "objective", "Violations",
+    "validate", "LocalSearchConfig", "SolveResult", "solve_local",
+    "OptimalSearchConfig", "solve_optimal", "GreedyConfig", "solve_greedy",
+    "CooperationResult", "HostScheduler", "RegionScheduler", "cooperate",
+    "ClusterState", "ResourceMonitor", "generate_cluster",
+    "difference_to_balance", "network_p99_ms", "projected_metrics",
+    "BalanceDecision", "Sptlb", "engine_fn",
+    "BalanceController", "ControllerConfig",
+]

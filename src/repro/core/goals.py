@@ -1,0 +1,101 @@
+"""Goal terms (paper §3.2.1, items 5-9) and the scalarized objective.
+
+All goals are "always lower priority to constraints"; hard constraints are
+handled in constraints.py / the solvers' move masks.  Each term below is a
+pure function of (problem, assignment) so both solvers and the Pallas
+move_eval kernel's oracle share a single definition.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.problem import Problem, tier_loads
+
+
+def goal_terms(problem: Problem, assignment: jax.Array) -> dict[str, jax.Array]:
+    """All five goal terms for an assignment.  Lower is better for each."""
+    util, tasks = tier_loads(problem, assignment)
+    util_frac = util / problem.capacity                  # [T, R]
+    task_frac = tasks / problem.task_limit               # [T]
+
+    # Goal 5: prefer under the ideal utilization limit (70% default).
+    # Hinge^2 — a valid solution can violate it ("allowing for solutions to
+    # be provided when multiple tiers [are] under heavy load").
+    over = jnp.maximum(util_frac - problem.ideal_frac, 0.0)
+    over_t = jnp.maximum(task_frac - problem.ideal_task_frac, 0.0)
+    under_ideal = jnp.sum(over * over) + jnp.sum(over_t * over_t)
+
+    # Goal 6: resource usage balanced across tiers — relative to each tier's
+    # capacity (paper: "this is relative to each tier, due to statements 1, 4").
+    mean_frac = jnp.mean(util_frac, axis=0, keepdims=True)
+    resource_balance = jnp.sum((util_frac - mean_frac) ** 2)
+
+    # Goal 7: task count balanced across tiers (relative, statements 2, 3).
+    task_balance = jnp.sum((task_frac - jnp.mean(task_frac)) ** 2)
+
+    # Movement indicator.
+    moved = (assignment != problem.assignment0).astype(jnp.float32)
+
+    # Goal 8: low downtime — task_count as the cost of movement.
+    total_tasks = jnp.maximum(jnp.sum(problem.tasks), 1.0)
+    movement_cost = jnp.sum(moved * problem.tasks) / total_tasks
+
+    # Goal 9: high-criticality apps moved less frequently — criticality as a
+    # (negative) affinity for the current container.
+    total_crit = jnp.maximum(jnp.sum(problem.criticality), 1.0)
+    criticality = jnp.sum(moved * problem.criticality) / total_crit
+
+    return {
+        "under_ideal": under_ideal,
+        "resource_balance": resource_balance,
+        "task_balance": task_balance,
+        "movement_cost": movement_cost,
+        "criticality": criticality,
+    }
+
+
+def objective(problem: Problem, assignment: jax.Array) -> jax.Array:
+    """Scalarized multi-objective cost (lower is better)."""
+    terms = goal_terms(problem, assignment)
+    w = problem.weights
+    return (w.under_ideal * terms["under_ideal"]
+            + w.resource_balance * terms["resource_balance"]
+            + w.task_balance * terms["task_balance"]
+            + w.movement_cost * terms["movement_cost"]
+            + w.criticality * terms["criticality"])
+
+
+def soft_objective(problem: Problem, probs: jax.Array) -> jax.Array:
+    """Relaxed objective over a row-stochastic assignment matrix P[N, T].
+
+    Used by OptimalSearch (solver_optimal.py).  Expectations of the hard
+    assignment goals under independent per-app categorical distributions.
+    """
+    util = probs.T @ problem.demand                      # [T, R] expected load
+    tasks = probs.T @ problem.tasks                      # [T]
+    util_frac = util / problem.capacity
+    task_frac = tasks / problem.task_limit
+
+    over = jnp.maximum(util_frac - problem.ideal_frac, 0.0)
+    over_t = jnp.maximum(task_frac - problem.ideal_task_frac, 0.0)
+    under_ideal = jnp.sum(over * over) + jnp.sum(over_t * over_t)
+
+    mean_frac = jnp.mean(util_frac, axis=0, keepdims=True)
+    resource_balance = jnp.sum((util_frac - mean_frac) ** 2)
+    task_balance = jnp.sum((task_frac - jnp.mean(task_frac)) ** 2)
+
+    # P(move) = 1 - P[n, x0_n]
+    stay = jnp.take_along_axis(probs, problem.assignment0[:, None], axis=1)[:, 0]
+    moved = 1.0 - stay
+    total_tasks = jnp.maximum(jnp.sum(problem.tasks), 1.0)
+    movement_cost = jnp.sum(moved * problem.tasks) / total_tasks
+    total_crit = jnp.maximum(jnp.sum(problem.criticality), 1.0)
+    criticality = jnp.sum(moved * problem.criticality) / total_crit
+
+    w = problem.weights
+    return (w.under_ideal * under_ideal
+            + w.resource_balance * resource_balance
+            + w.task_balance * task_balance
+            + w.movement_cost * movement_cost
+            + w.criticality * criticality)

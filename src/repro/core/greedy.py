@@ -1,0 +1,94 @@
+"""Baseline greedy scheduler (paper §4.1) — the stand-in for manual balancing.
+
+Per-objective variants (cpu / mem / task count):
+  1. identify the tier with the most resources used given the utilization
+     target (used / target) and the least,
+  2. identify the largest app (on that objective) in the hot tier that has
+     not already been moved,
+  3. move it to the tier with the lowest utilization,
+  4. loop from 1 until x% of apps moved or timeout.
+
+Faithful notes: the greedy variants respect SLO placement (a human operator
+would), but are otherwise single-objective — which is exactly what Fig. 3
+punishes them for.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.problem import Problem
+from repro.core.solver_local import SolveResult
+
+OBJECTIVES = ("cpu", "mem", "task")
+
+
+@dataclasses.dataclass(frozen=True)
+class GreedyConfig:
+    objective: str = "cpu"        # one of OBJECTIVES
+    max_steps: int = 10_000       # "timeout"
+
+
+def solve_greedy(problem: Problem, config: GreedyConfig = GreedyConfig()) -> SolveResult:
+    assert config.objective in OBJECTIVES, config.objective
+    t0 = time.perf_counter()
+
+    demand = np.asarray(problem.demand)
+    tasks = np.asarray(problem.tasks)
+    slo = np.asarray(problem.slo)
+    capacity = np.asarray(problem.capacity)
+    task_limit = np.asarray(problem.task_limit)
+    ideal = np.asarray(problem.ideal_frac)
+    ideal_task = np.asarray(problem.ideal_task_frac)
+    slo_allowed = np.asarray(problem.slo_allowed)
+    x = np.asarray(problem.assignment0).copy()
+    x0 = np.asarray(problem.assignment0)
+    N, T = demand.shape[0], capacity.shape[0]
+    budget = int(problem.move_budget)   # same f32 rounding as the solvers
+
+    if config.objective == "task":
+        load_of = lambda: np.bincount(x, weights=tasks, minlength=T)
+        target = ideal_task * task_limit
+        app_size = tasks
+    else:
+        r = OBJECTIVES.index(config.objective)
+        load_of = lambda: np.bincount(x, weights=demand[:, r], minlength=T)
+        target = ideal[:, r] * capacity[:, r]
+        app_size = demand[:, r]
+
+    moved: set[int] = set()
+    steps = 0
+    while len(moved) < budget and steps < config.max_steps:
+        steps += 1
+        load = load_of()
+        ratio = load / np.maximum(target, 1e-9)          # used / util target
+        src = int(np.argmax(ratio))
+        dst = int(np.argmin(ratio))
+        if src == dst or ratio[src] <= ratio[dst] + 1e-9:
+            break
+        # Largest unmoved app (on this objective) in the hot tier that the
+        # destination tier's SLO table accepts.
+        cand = [n for n in np.where(x == src)[0]
+                if n not in moved and slo_allowed[dst, slo[n]]]
+        if not cand:
+            break
+        n = max(cand, key=lambda i: app_size[i])
+        # No look-ahead: greedy moves the largest app even when that flips
+        # the imbalance — faithful to §4.1 (step 3 is unconditional).
+        x[n] = dst
+        moved.add(n)
+
+    dt = time.perf_counter() - t0
+    from repro.core import goals   # local import to avoid cycles at module load
+    import jax.numpy as jnp
+    xj = jnp.asarray(x)
+    return SolveResult(
+        assignment=xj,
+        iterations=steps,
+        converged=len(moved) >= budget,
+        objective=float(goals.objective(problem, xj)),
+        num_moved=int(np.sum(x != x0)),
+        solve_time_s=dt,
+    )

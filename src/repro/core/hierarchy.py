@@ -1,0 +1,211 @@
+"""Hierarchy co-operation (paper §3.4 + Fig. 2).
+
+Three lower-level-scheduler integration variants for SPTLB:
+
+  * ``no_cnst``     — solve once, ignore lower levels (best balance, worst
+                      network latency; Fig. 4/5 baseline),
+  * ``w_cnst``      — bake region-awareness into the solver: a tier->tier
+                      transition is valid only if the tiers share a majority
+                      (>50%) of regions.  Static constraints, "vastly
+                      increasing its complexity",
+  * ``manual_cnst`` — the paper's proposal: SPTLB proposes a mapping; the
+                      region scheduler then the host scheduler accept or
+                      reject each placement; rejections return to SPTLB as
+                      avoid constraints ("similar to Constraint 3 in section
+                      3.2.1") and it re-solves.  "These iterations continue
+                      until SPTLB times out or the number of iterations limit
+                      is reached."
+
+The region and host schedulers are themselves small, self-contained
+schedulers — the paper treats them as black boxes that answer accept/reject,
+and that contract is exactly what we implement.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Literal
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.problem import Problem
+from repro.core.solver_local import SolveResult
+from repro.core.telemetry import ClusterState
+
+Variant = Literal["no_cnst", "w_cnst", "manual_cnst"]
+
+
+class RegionScheduler:
+    """Region-preference placement (paper [4]-style shard placement).
+
+    Accepts a placement iff the destination tier has hosts within a latency
+    budget of the app's data-source region — "if it isn't possible to keep an
+    app near its data source with the given tier, it returns false".
+    """
+
+    def __init__(self, cluster: ClusterState, latency_budget_ms: float = 36.0):
+        self.cluster = cluster
+        self.budget = latency_budget_ms
+
+    def check(self, app: int, tier: int) -> bool:
+        """Accept iff *any* host region the tier may place the app in stays
+        within the latency budget of the app's data source — the region
+        scheduler can steer placement within a tier, but host capacity is
+        fungible across the tier's regions, so the guarantee must hold for
+        the worst region (max), not the best."""
+        c = self.cluster
+        dst_regions = np.where(c.tier_regions[tier])[0]
+        worst = c.region_latency[c.app_region[app], dst_regions].max()
+        return bool(worst <= self.budget)
+
+
+class HostScheduler:
+    """Host allocation: first-fit-decreasing bin-packing into tier hosts.
+
+    Accepts a placement iff every app mapped to the tier still fits after
+    packing — "if there are available hosts to allocate the application to,
+    it accepts the mapping".  Rejections name the specific apps that failed
+    to pack (the ones whose placement SPTLB must avoid).
+    """
+
+    def __init__(self, cluster: ClusterState):
+        self.cluster = cluster
+
+    def check_tier(self, tier: int, apps: np.ndarray) -> list[int]:
+        """Returns the app ids that could NOT be packed into this tier."""
+        c = self.cluster
+        demand = np.asarray(c.problem.demand)[apps]          # [M, R]
+        order = np.argsort(-demand.max(axis=1))              # decreasing
+        hosts = np.tile(c.host_capacity, (int(c.hosts_per_tier[tier]), 1))
+        rejected: list[int] = []
+        for i in order:
+            fit = np.all(hosts >= demand[i], axis=1)
+            if not fit.any():
+                rejected.append(int(apps[i]))
+                continue
+            h = int(np.argmax(fit))                          # first fit
+            hosts[h] -= demand[i]
+        return rejected
+
+
+@dataclasses.dataclass
+class CooperationResult:
+    result: SolveResult
+    variant: str
+    feedback_rounds: int
+    num_rejections: int
+    total_time_s: float
+    accepted: bool
+
+
+def region_overlap_avoid(cluster: ClusterState) -> np.ndarray:
+    """w_cnst static constraint: avoid[n, t] unless >50% of the regions of
+    app n's current tier overlap with tier t (paper §4.2.2 item 2)."""
+    c = cluster
+    T = c.tier_regions.shape[0]
+    overlap_ok = np.zeros((T, T), bool)
+    for a in range(T):
+        na = c.tier_regions[a].sum()
+        for b in range(T):
+            shared = (c.tier_regions[a] & c.tier_regions[b]).sum()
+            overlap_ok[a, b] = shared > 0.5 * na
+    x0 = np.asarray(c.problem.assignment0)
+    return ~overlap_ok[x0]                                   # [N, T]
+
+
+def cooperate(
+    cluster: ClusterState,
+    solve_fn: Callable[[Problem], SolveResult],
+    variant: Variant = "manual_cnst",
+    *,
+    max_rounds: int = 8,
+    timeout_s: float = float("inf"),
+    region_budget_ms: float = 36.0,
+) -> CooperationResult:
+    """Run one SPTLB balancing pass under the chosen integration variant."""
+    t0 = time.perf_counter()
+    problem = cluster.problem
+    region = RegionScheduler(cluster, latency_budget_ms=region_budget_ms)
+    host = HostScheduler(cluster)
+
+    if variant == "w_cnst":
+        problem = problem.with_avoid(jnp.asarray(region_overlap_avoid(cluster)))
+        res = solve_fn(problem)
+        return CooperationResult(res, variant, 1, 0, time.perf_counter() - t0, True)
+
+    if variant == "no_cnst":
+        res = solve_fn(problem)
+        return CooperationResult(res, variant, 1, 0, time.perf_counter() - t0, True)
+
+    assert variant == "manual_cnst", variant
+    x0 = np.asarray(problem.assignment0)
+    total_rejections = 0
+    res = solve_fn(problem)
+    rounds = 1
+    x_accepted = None
+    while rounds <= max_rounds and (time.perf_counter() - t0) < timeout_s:
+        x = np.asarray(res.assignment)
+        moved = np.where(x != x0)[0]
+        rejected_pairs: list[tuple[int, int]] = []
+
+        # Fig. 2 order: region scheduler first...
+        region_ok = np.ones(len(moved), bool)
+        for i, n in enumerate(moved):
+            if not region.check(int(n), int(x[n])):
+                rejected_pairs.append((int(n), int(x[n])))
+                region_ok[i] = False
+        # ...then host allocation for the placements the region level kept.
+        surviving = moved[region_ok]
+        for t in np.unique(x[surviving]) if len(surviving) else []:
+            apps_t = np.concatenate([
+                np.where((x == t) & (x == x0))[0],           # incumbents
+                surviving[x[surviving] == t],                # newcomers
+            ])
+            for n in host.check_tier(int(t), apps_t):
+                if x[n] != x0[n]:                            # only newcomers bounce
+                    rejected_pairs.append((int(n), int(x[n])))
+
+        if not rejected_pairs:
+            return CooperationResult(res, variant, rounds, total_rejections,
+                                     time.perf_counter() - t0, True)
+
+        # Feedback: rejections become avoid constraints; re-solve, warm-
+        # started from the vetted subset of the proposal.  Accepted moves are
+        # *locked* (the lower level ack'd them — Fig. 2's acknowledgement):
+        # the solver may keep them or send them home, but not churn them to a
+        # third, unvetted tier.  This makes the unknown-placement set shrink
+        # every round, so the loop converges instead of exploring forever.
+        total_rejections += len(rejected_pairs)
+        extra = np.zeros((problem.num_apps, problem.num_tiers), bool)
+        x_accepted = x.copy()
+        rejected_apps = {n for n, _ in rejected_pairs}
+        for n, t in rejected_pairs:
+            extra[n, t] = True
+            x_accepted[n] = x0[n]
+        for n in moved:
+            n = int(n)
+            if n not in rejected_apps:                       # ack'd placement
+                extra[n, :] = True
+                extra[n, x[n]] = False
+                extra[n, x0[n]] = False
+        problem = problem.with_avoid(jnp.asarray(extra))
+        res = solve_fn(problem, init_assignment=jnp.asarray(x_accepted))
+        rounds += 1
+
+    # Iteration/timeout limit: drop still-rejected moves (stay-home is safe —
+    # the app's original placement was already accepted by the lower levels).
+    x = np.asarray(res.assignment).copy()
+    for n in np.where(x != x0)[0]:
+        if not region.check(int(n), int(x[n])):
+            x[n] = x0[n]
+    for t in np.unique(x[x != x0]):
+        apps_t = np.where(x == t)[0]
+        for n in host.check_tier(int(t), apps_t):
+            if x[n] != x0[n]:
+                x[n] = x0[n]
+    res = dataclasses.replace(
+        res, assignment=jnp.asarray(x),
+        num_moved=int(np.sum(x != x0)))
+    return CooperationResult(res, variant, rounds, total_rejections,
+                             time.perf_counter() - t0, False)

@@ -1,0 +1,203 @@
+"""Load-balance problem model (paper §3.2): apps, tiers, resources as JAX arrays.
+
+The problem mirrors Rebalancer's "compliant data structures" (paper §3.2):
+  * entities  = streaming applications (N of them)
+  * containers = tiers (T of them)
+  * dimensions = cpu, mem (continuous) and task count (integral)
+plus the app properties the paper balances/avoids over: SLO score, criticality
+score, and the dynamic ``avoid`` matrix that the hierarchy-cooperation loop
+(§3.4) feeds back into the solver.
+
+Everything is a flat JAX array so the solvers (solver_local / solver_optimal)
+and the Pallas move_eval kernel can operate on device without host round trips.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Resource axes of the continuous dimensions (paper: cpu, mem).
+RESOURCES = ("cpu", "mem")
+NUM_RESOURCES = len(RESOURCES)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GoalWeights:
+    """Priority-ordered goal weights (paper §3.2.1 goals 5-9).
+
+    The paper orders goals by "default priority"; Rebalancer treats them
+    lexicographically below the hard constraints. We scalarize with
+    decade-separated weights; permuting priorities is the paper's "tuning
+    knob" (explored + found non-significant, §3.2.1 last paragraph).
+    """
+
+    # Goal 5: tiers prefer to stay under their ideal utilization limit.
+    under_ideal: jax.Array
+    # Goal 6: resource usage (cpu, mem) balanced across tiers.
+    resource_balance: jax.Array
+    # Goal 7: task count balanced across tiers.
+    task_balance: jax.Array
+    # Goal 8: low downtime — movement cost proportional to task count.
+    movement_cost: jax.Array
+    # Goal 9: high-criticality apps not moved.
+    criticality: jax.Array
+
+    @staticmethod
+    def default() -> "GoalWeights":
+        # Decade separation emulates lexicographic goal priorities.
+        return GoalWeights(
+            under_ideal=jnp.float32(1e4),
+            resource_balance=jnp.float32(1e3),
+            task_balance=jnp.float32(1e2),
+            movement_cost=jnp.float32(1e1),
+            criticality=jnp.float32(1e0),
+        )
+
+    @staticmethod
+    def from_priority(order: tuple[str, ...]) -> "GoalWeights":
+        """Build weights from a priority permutation (highest first)."""
+        names = ("under_ideal", "resource_balance", "task_balance",
+                 "movement_cost", "criticality")
+        assert sorted(order) == sorted(names), f"bad priority order {order}"
+        vals = {name: jnp.float32(10.0 ** (len(order) - i)) for i, name in enumerate(order)}
+        return GoalWeights(**vals)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Problem:
+    """One SPTLB load-balancing instance.
+
+    Shapes: N apps, T tiers, S SLO classes, R = NUM_RESOURCES.
+    """
+
+    # --- apps (entities) ---
+    demand: jax.Array        # f32[N, R]  p99 resource demand (cpu cores, mem GB)
+    tasks: jax.Array         # f32[N]     task count of the app (integral-valued)
+    slo: jax.Array           # i32[N]     SLO class id
+    criticality: jax.Array   # f32[N]     criticality score in [0, 1]
+    assignment0: jax.Array   # i32[N]     current app -> tier assignment
+
+    # --- tiers (containers) ---
+    capacity: jax.Array      # f32[T, R]  hard headroom capacity (constraint 1)
+    task_limit: jax.Array    # f32[T]     hard task-count limit (constraint 2)
+    ideal_frac: jax.Array    # f32[T, R]  ideal utilization fraction (default 0.70)
+    ideal_task_frac: jax.Array  # f32[T]  ideal task fraction (default 0.80)
+
+    # --- cross ---
+    slo_allowed: jax.Array   # bool[T, S] tier supports SLO class (constraint 4)
+    avoid: jax.Array         # bool[N, T] dynamic avoid matrix (hierarchy feedback)
+
+    # --- knobs ---
+    move_frac: jax.Array     # f32[]      movement allowance as fraction of N (constraint 3)
+    weights: GoalWeights
+
+    @property
+    def num_apps(self) -> int:
+        return self.demand.shape[0]
+
+    @property
+    def num_tiers(self) -> int:
+        return self.capacity.shape[0]
+
+    @property
+    def move_budget(self) -> jax.Array:
+        """Constraint 3: at most ceil(move_frac * N) apps may move."""
+        return jnp.ceil(self.move_frac * self.num_apps).astype(jnp.int32)
+
+    def feasible_mask(self) -> jax.Array:
+        """bool[N, T]: app n may be placed in tier t (SLO + avoid only;
+
+        capacity/task feasibility is assignment-dependent and handled by the
+        solvers' move masking)."""
+        slo_ok = self.slo_allowed[:, self.slo].T  # [N, T]
+        return slo_ok & ~self.avoid
+
+    def with_avoid(self, extra_avoid: jax.Array) -> "Problem":
+        """Return a copy with additional (app, tier) avoid pairs OR-ed in.
+
+        This is the §3.4 feedback channel: rejections from lower-level
+        schedulers become avoid constraints "similar to Constraint 3".
+        """
+        return dataclasses.replace(self, avoid=self.avoid | extra_avoid)
+
+    def with_assignment0(self, assignment: jax.Array) -> "Problem":
+        return dataclasses.replace(self, assignment0=assignment)
+
+
+def tier_loads(problem: Problem, assignment: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Aggregate per-tier loads for an assignment.
+
+    Returns (util f32[T, R], tasks f32[T]).  segment_sum keeps this O(N).
+    """
+    T = problem.num_tiers
+    util = jax.ops.segment_sum(problem.demand, assignment, num_segments=T)
+    tasks = jax.ops.segment_sum(problem.tasks, assignment, num_segments=T)
+    return util, tasks
+
+
+def utilization_fraction(problem: Problem, assignment: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-tier utilization as fraction of capacity — the quantity plotted in
+    the paper's Fig. 3 ("percentage relative to each tier's capacity limit")."""
+    util, tasks = tier_loads(problem, assignment)
+    return util / problem.capacity, tasks / problem.task_limit
+
+
+def make_problem(
+    demand: np.ndarray,
+    tasks: np.ndarray,
+    slo: np.ndarray,
+    criticality: np.ndarray,
+    assignment0: np.ndarray,
+    capacity: np.ndarray,
+    task_limit: np.ndarray,
+    slo_allowed: np.ndarray,
+    *,
+    ideal_frac: float | np.ndarray = 0.70,
+    ideal_task_frac: float | np.ndarray = 0.80,
+    move_frac: float = 0.10,
+    avoid: Optional[np.ndarray] = None,
+    weights: Optional[GoalWeights] = None,
+) -> Problem:
+    """Construct a Problem from host arrays with paper-default knobs.
+
+    Defaults follow the paper: 70% ideal resource utilization, 80% ideal task
+    count, 10% movement bound.
+    """
+    demand = jnp.asarray(demand, jnp.float32)
+    N = demand.shape[0]
+    capacity = jnp.asarray(capacity, jnp.float32)
+    T = capacity.shape[0]
+    if np.isscalar(ideal_frac):
+        ideal_frac = jnp.full((T, NUM_RESOURCES), float(ideal_frac), jnp.float32)
+    else:
+        ideal_frac = jnp.asarray(ideal_frac, jnp.float32)
+    if np.isscalar(ideal_task_frac):
+        ideal_task_frac = jnp.full((T,), float(ideal_task_frac), jnp.float32)
+    else:
+        ideal_task_frac = jnp.asarray(ideal_task_frac, jnp.float32)
+    if avoid is None:
+        avoid = jnp.zeros((N, T), bool)
+    else:
+        avoid = jnp.asarray(avoid, bool)
+    return Problem(
+        demand=demand,
+        tasks=jnp.asarray(tasks, jnp.float32),
+        slo=jnp.asarray(slo, jnp.int32),
+        criticality=jnp.asarray(criticality, jnp.float32),
+        assignment0=jnp.asarray(assignment0, jnp.int32),
+        capacity=capacity,
+        task_limit=jnp.asarray(task_limit, jnp.float32),
+        ideal_frac=ideal_frac,
+        ideal_task_frac=ideal_task_frac,
+        slo_allowed=jnp.asarray(slo_allowed, bool),
+        avoid=avoid,
+        move_frac=jnp.float32(move_frac),
+        weights=weights or GoalWeights.default(),
+    )

@@ -1,0 +1,140 @@
+"""LocalSearch engine (paper §3.2.1): greedy exploration of the move space.
+
+"LocalSearch: Greedy exploration of search space to find a solution, can get
+stuck in local minimums."
+
+Each iteration scores *every* feasible single-app move with the exact
+closed-form objective delta (core/delta.py — optionally the Pallas
+move_eval kernel) and applies the best one; the loop runs under
+``jax.lax.while_loop`` until no improving feasible move exists or the
+iteration budget (the wall-clock "timeout" knob made deterministic) runs out.
+
+An optional temperature turns best-improvement into Gumbel-softmax sampling
+over improving moves — a restart-free way out of shallow local minima (kept 0
+by default to stay faithful to the paper's description).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import constraints as C
+from repro.core import goals
+from repro.core.delta import move_delta_cost
+from repro.core.problem import Problem, tier_loads
+
+
+@dataclasses.dataclass(frozen=True)
+class LocalSearchConfig:
+    max_iters: int = 512          # deterministic stand-in for the timeout knob
+    tol: float = 1e-7             # minimum improvement to keep moving
+    temperature: float = 0.0      # 0 = pure best-improvement
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class SolveResult:
+    assignment: jax.Array
+    iterations: int
+    converged: bool
+    objective: float
+    num_moved: int
+    solve_time_s: float
+    extra: dict = dataclasses.field(default_factory=dict)
+
+
+def _weights_vector(problem: Problem) -> jax.Array:
+    w = problem.weights
+    return jnp.stack([w.under_ideal, w.resource_balance, w.task_balance,
+                      w.movement_cost, w.criticality])
+
+
+@partial(jax.jit, static_argnames=("max_iters", "temperature", "tol", "move_eval_fn"))
+def _solve_local_jit(problem: Problem, key: jax.Array, x_init: jax.Array,
+                     *, max_iters: int, temperature: float, tol: float,
+                     move_eval_fn: Optional[Callable] = None):
+    eval_fn = move_eval_fn or move_delta_cost
+    wvec = _weights_vector(problem)
+    util0, tasks0 = tier_loads(problem, x_init)
+
+    def body(state):
+        x, util, tasks, it, _, key = state
+        moves_left = C.moves_remaining(problem, x)
+        delta = eval_fn(problem.demand, problem.tasks, problem.criticality,
+                        x, problem.assignment0,
+                        problem.capacity, problem.task_limit,
+                        problem.ideal_frac, problem.ideal_task_frac,
+                        util, tasks, wvec)
+        mask = C.move_mask(problem, x, util, tasks, moves_left)
+        scores = jnp.where(mask, delta, jnp.inf)
+
+        if temperature > 0.0:
+            key, sub = jax.random.split(key)
+            improving = scores < -tol
+            logits = jnp.where(improving, -scores / temperature, -jnp.inf)
+            flat = jax.random.categorical(sub, logits.reshape(-1))
+            # If nothing improves, categorical over all -inf is undefined;
+            # fall back to argmin (which will trigger convergence below).
+            any_improving = jnp.any(improving)
+            flat = jnp.where(any_improving, flat, jnp.argmin(scores))
+        else:
+            flat = jnp.argmin(scores)
+
+        n = flat // problem.num_tiers
+        t = flat % problem.num_tiers
+        best = scores[n, t]
+        improving = best < -tol
+
+        src = x[n]
+        x_new = x.at[n].set(jnp.where(improving, t, src).astype(x.dtype))
+        util_new = jnp.where(
+            improving,
+            util.at[src].add(-problem.demand[n]).at[t].add(problem.demand[n]),
+            util)
+        tasks_new = jnp.where(
+            improving,
+            tasks.at[src].add(-problem.tasks[n]).at[t].add(problem.tasks[n]),
+            tasks)
+        return x_new, util_new, tasks_new, it + 1, ~improving, key
+
+    def cond(state):
+        _, _, _, it, done, _ = state
+        return (~done) & (it < max_iters)
+
+    init = (x_init, util0, tasks0, jnp.int32(0), jnp.bool_(False), key)
+    x, util, tasks, it, done, _ = jax.lax.while_loop(cond, body, init)
+    obj = goals.objective(problem, x)
+    return x, it, done, obj
+
+
+def solve_local(problem: Problem, config: LocalSearchConfig = LocalSearchConfig(),
+                *, move_eval_fn: Optional[Callable] = None,
+                init_assignment: Optional[jax.Array] = None) -> SolveResult:
+    """Run LocalSearch; returns assignment + host-side stats.
+
+    ``init_assignment`` warm-starts the search (movement budget is still
+    accounted against ``problem.assignment0``) — used by OptimalSearch's
+    refinement pass and by incremental re-balancing after failures.
+    """
+    t0 = time.perf_counter()
+    key = jax.random.PRNGKey(config.seed)
+    x0 = problem.assignment0 if init_assignment is None else init_assignment
+    x, it, done, obj = _solve_local_jit(
+        problem, key, x0, max_iters=config.max_iters,
+        temperature=config.temperature, tol=config.tol,
+        move_eval_fn=move_eval_fn)
+    x = jax.block_until_ready(x)
+    dt = time.perf_counter() - t0
+    return SolveResult(
+        assignment=x,
+        iterations=int(it),
+        converged=bool(done),
+        objective=float(obj),
+        num_moved=int(jnp.sum(x != problem.assignment0)),
+        solve_time_s=dt,
+    )

@@ -1,0 +1,103 @@
+"""SPTLB orchestration (paper Fig. 1): collect -> construct -> solve -> execute.
+
+The three stages of §3:
+  1. data collection      -> telemetry.generate_cluster / ResourceMonitor
+  2. problem construction -> core.problem (Rebalancer-compliant structures)
+  3. output & execution   -> projected metrics, constraint validation,
+                             decision evaluation vs. the greedy baseline
+plus §3.4 hierarchy integration via core.hierarchy.cooperate.
+
+``Sptlb.balance`` is the public entry point used by the launch drivers and
+benchmarks; ``BalanceDecision`` is the §3.3 output record ("projected
+mappings from tier to app after load balancing and the projected metrics").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+from repro.core import constraints, metrics
+from repro.core.greedy import GreedyConfig, solve_greedy
+from repro.core.hierarchy import CooperationResult, Variant, cooperate
+from repro.core.problem import Problem
+from repro.core.solver_local import LocalSearchConfig, SolveResult, solve_local
+from repro.core.solver_optimal import OptimalSearchConfig, solve_optimal
+from repro.core.telemetry import ClusterState
+
+Engine = Literal["local", "optimal", "greedy-cpu", "greedy-mem", "greedy-task"]
+
+# Deterministic iteration budgets standing in for the paper's wall-clock
+# timeout knobs (30s / 60s / 10min / 30min) — see DESIGN.md §7(2).
+TIMEOUT_BUDGETS = {30: 256, 60: 512, 600: 2048, 1800: 8192}
+
+
+def engine_fn(engine: Engine, timeout_s: int = 30, seed: int = 0):
+    """Build a solve_fn(problem, init_assignment=None) for the chosen engine.
+
+    ``init_assignment`` warm-starts re-solves inside the manual_cnst feedback
+    loop (engines without warm-start support ignore it).
+    """
+    budget = TIMEOUT_BUDGETS.get(timeout_s, max(64, int(timeout_s * 8)))
+    if engine == "local":
+        cfg = LocalSearchConfig(max_iters=budget, seed=seed)
+        return lambda p, init_assignment=None: solve_local(
+            p, cfg, init_assignment=init_assignment)
+    if engine == "optimal":
+        cfg = OptimalSearchConfig(steps=budget, seed=seed)
+        return lambda p, init_assignment=None: solve_optimal(p, cfg)
+    if engine.startswith("greedy-"):
+        obj = engine.split("-", 1)[1]
+        obj = {"task-count": "task"}.get(obj, obj)
+        gcfg = GreedyConfig(objective=obj, max_steps=budget)
+        return lambda p, init_assignment=None: solve_greedy(p, gcfg)
+    raise ValueError(f"unknown engine {engine!r}")
+
+
+@dataclasses.dataclass
+class BalanceDecision:
+    """§3.3 solver output: projected mapping + metrics + evaluation hooks."""
+
+    assignment: object                       # i32[N] final app -> tier
+    projected: metrics.ProjectedMetrics
+    violations: constraints.Violations
+    difference_to_balance: float
+    network_p99_ms: float
+    solve: SolveResult
+    cooperation: CooperationResult | None
+
+
+class Sptlb:
+    """The Stream-Processing Tier Load Balancer."""
+
+    def __init__(self, cluster: ClusterState):
+        self.cluster = cluster
+
+    def balance(
+        self,
+        engine: Engine = "local",
+        *,
+        timeout_s: int = 30,
+        variant: Variant = "manual_cnst",
+        max_feedback_rounds: int = 8,
+        seed: int = 0,
+    ) -> BalanceDecision:
+        solve_fn = engine_fn(engine, timeout_s, seed)
+        if engine.startswith("greedy-"):
+            # The baseline greedy scheduler is hierarchy-unaware by design.
+            res = solve_fn(self.cluster.problem)
+            coop = None
+        else:
+            coop = cooperate(self.cluster, solve_fn, variant,
+                             max_rounds=max_feedback_rounds)
+            res = coop.result
+
+        problem: Problem = self.cluster.problem
+        return BalanceDecision(
+            assignment=res.assignment,
+            projected=metrics.projected_metrics(problem, res.assignment),
+            violations=constraints.validate(problem, res.assignment),
+            difference_to_balance=metrics.difference_to_balance(problem, res.assignment),
+            network_p99_ms=metrics.network_p99_ms(self.cluster, res.assignment),
+            solve=res,
+            cooperation=coop,
+        )

@@ -1,0 +1,8 @@
+from repro.distributed import sharding
+from repro.distributed.checkpoint import CheckpointManager
+from repro.distributed.compress import GradCompressor
+from repro.distributed.fault import (CapacityEvent, FaultInjector, Recovery,
+                                     apply_event, rebalance_after)
+
+__all__ = ["sharding", "CheckpointManager", "GradCompressor", "CapacityEvent", "FaultInjector",
+           "Recovery", "apply_event", "rebalance_after"]

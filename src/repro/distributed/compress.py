@@ -1,0 +1,95 @@
+"""Gradient compression for the data-parallel all-reduce.
+
+At 1000+ nodes the inter-pod (DCN) gradient reduction is the scaling wall;
+standard mitigations implemented here:
+
+  * bf16 compression — halve the wire for the all-reduce with an f32
+    *error-feedback accumulator* (the rounding residual is carried into the
+    next step, so compression introduces no bias drift),
+  * int8 block-quantized compression — 4x wire: per-block (128) max-abs
+    scale, symmetric int8 payload, same error feedback.
+
+Both are pure pytree transforms around the optimizer step:
+
+    comp = GradCompressor(mode="bf16")
+    grads_c, state = comp.compress(grads, state)       # before all-reduce
+    grads_d = comp.decompress(grads_c)                 # after all-reduce
+
+In pjit the all-reduce is implicit (sharding propagation); compressing the
+tensors that cross the data axis makes XLA move the compressed
+representation.  `wire_bytes` reports the measured payload for EXPERIMENTS.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Literal, Optional
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class GradCompressor:
+    mode: Literal["none", "bf16", "int8"] = "bf16"
+
+    # -- state -------------------------------------------------------------
+    def init_state(self, grads: Any) -> Any:
+        """Error-feedback residuals (f32, zero-initialized)."""
+        if self.mode == "none":
+            return None
+        return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    # -- compress / decompress ----------------------------------------------
+    def compress(self, grads: Any, state: Any) -> tuple[Any, Any]:
+        """-> (compressed pytree, new error-feedback state)."""
+        if self.mode == "none":
+            return grads, state
+
+        def one(g, e):
+            gf = g.astype(jnp.float32) + e                 # apply feedback
+            if self.mode == "bf16":
+                c = gf.astype(jnp.bfloat16)
+                err = gf - c.astype(jnp.float32)
+                return c, err
+            # int8 block quantization over the flattened tensor
+            flat = gf.reshape(-1)
+            pad = (-flat.shape[0]) % BLOCK
+            fp = jnp.pad(flat, (0, pad)).reshape(-1, BLOCK)
+            scale = jnp.max(jnp.abs(fp), axis=1, keepdims=True) / 127.0
+            scale = jnp.maximum(scale, 1e-12)
+            q = jnp.clip(jnp.round(fp / scale), -127, 127).astype(jnp.int8)
+            deq = (q.astype(jnp.float32) * scale).reshape(-1)[
+                :flat.shape[0]].reshape(gf.shape)
+            return {"q": q, "scale": scale.astype(jnp.float32),
+                    "shape": gf.shape}, gf - deq
+
+        flat, treedef = jax.tree.flatten(grads)
+        errs = treedef.flatten_up_to(state)
+        outs = [one(g, e) for g, e in zip(flat, errs)]
+        comp = treedef.unflatten([o[0] for o in outs])
+        new_state = treedef.unflatten([o[1] for o in outs])
+        return comp, new_state
+
+    def decompress(self, comp: Any) -> Any:
+        if self.mode == "none":
+            return comp
+        if self.mode == "bf16":
+            return jax.tree.map(lambda c: c.astype(jnp.float32), comp)
+
+        def one(c):
+            n = 1
+            for d in c["shape"]:
+                n *= d
+            deq = (c["q"].astype(jnp.float32) * c["scale"]).reshape(-1)[:n]
+            return deq.reshape(c["shape"])
+        return jax.tree.map(one, comp,
+                            is_leaf=lambda x: isinstance(x, dict)
+                            and "q" in x)
+
+    # -- accounting ----------------------------------------------------------
+    def wire_bytes(self, grads: Any) -> int:
+        n = sum(int(g.size) for g in jax.tree.leaves(grads))
+        return {"none": 4 * n, "bf16": 2 * n,
+                "int8": n + 4 * (n // BLOCK + 1)}[self.mode]

@@ -1,0 +1,118 @@
+"""Fault tolerance & elasticity — where the framework meets the paper.
+
+The cluster is organized exactly like the paper's tiers: pod slices with
+capacity headroom in three dimensions (compute FLOP/s, HBM bytes, stream-task
+slots).  Failures and stragglers are *capacity events*:
+
+  * host failure      -> the tier's capacity shrinks; jobs whose demand no
+                         longer fits must move.  SPTLB re-solves with the
+                         movement-minimizing objective (paper goal 8) so only
+                         the displaced work moves (checkpoint/restore cost
+                         is the "downtime" the paper's task-count movement
+                         cost models).
+  * straggler host    -> detected from step-time telemetry; modeled as a
+                         fractional capacity reduction, which biases SPTLB
+                         away from the slow tier without hard eviction.
+  * elastic scale-up  -> new hosts extend a tier's capacity; rebalancing is
+                         again bounded by the movement budget, so scale-up
+                         does not thrash placements.
+
+``FaultInjector`` drives simulated events for tests/examples; ``Recovery``
+implements the restart path: restore latest checkpoint -> rebuild mesh over
+the surviving devices -> re-route streams via SPTLB.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ClusterState, Sptlb
+from repro.core.solver_local import SolveResult
+
+
+@dataclasses.dataclass
+class CapacityEvent:
+    kind: str                  # "host_failure" | "straggler" | "scale_up"
+    tier: int
+    fraction: float            # capacity delta as a fraction of the tier
+    step: int = 0
+
+
+class FaultInjector:
+    """Deterministic, seeded failure scenario generator."""
+
+    def __init__(self, num_tiers: int, seed: int = 0,
+                 failure_rate: float = 0.02, straggler_rate: float = 0.05):
+        self.rng = np.random.default_rng(seed)
+        self.num_tiers = num_tiers
+        self.failure_rate = failure_rate
+        self.straggler_rate = straggler_rate
+
+    def sample(self, step: int) -> list[CapacityEvent]:
+        events = []
+        if self.rng.random() < self.failure_rate:
+            events.append(CapacityEvent(
+                "host_failure", int(self.rng.integers(self.num_tiers)),
+                fraction=float(self.rng.uniform(0.05, 0.25)), step=step))
+        if self.rng.random() < self.straggler_rate:
+            events.append(CapacityEvent(
+                "straggler", int(self.rng.integers(self.num_tiers)),
+                fraction=float(self.rng.uniform(0.05, 0.15)), step=step))
+        return events
+
+
+def apply_event(cluster: ClusterState, event: CapacityEvent) -> ClusterState:
+    """Shrink/extend tier capacity (and host count for hard failures)."""
+    problem = cluster.problem
+    cap = np.asarray(problem.capacity).copy()
+    klim = np.asarray(problem.task_limit).copy()
+    hosts = cluster.hosts_per_tier.copy()
+    t = event.tier
+    if event.kind in ("host_failure", "straggler"):
+        scale = 1.0 - event.fraction
+    else:                                           # scale_up
+        scale = 1.0 + event.fraction
+    cap[t] *= scale
+    klim[t] *= scale
+    if event.kind in ("host_failure", "scale_up"):
+        hosts[t] = max(1, int(round(hosts[t] * scale)))
+
+    new_problem = dataclasses.replace(
+        problem,
+        capacity=jnp.asarray(cap),
+        task_limit=jnp.asarray(klim))
+    return dataclasses.replace(cluster, problem=new_problem,
+                               hosts_per_tier=hosts)
+
+
+def rebalance_after(cluster: ClusterState, event: CapacityEvent,
+                    *, engine: str = "local",
+                    variant: str = "manual_cnst") -> tuple[ClusterState, SolveResult]:
+    """The paper's loop, triggered by infrastructure: capacity change ->
+    SPTLB re-solve (movement-bounded) -> new app->tier mapping."""
+    degraded = apply_event(cluster, event)
+    decision = Sptlb(degraded).balance(engine, variant=variant)
+    new_problem = degraded.problem.with_assignment0(
+        jnp.asarray(decision.assignment))
+    rebalanced = dataclasses.replace(degraded, problem=new_problem)
+    return rebalanced, decision
+
+
+@dataclasses.dataclass
+class Recovery:
+    """Checkpoint-restart path used by launch/train.py."""
+
+    ckpt_manager: object                  # distributed.checkpoint.CheckpointManager
+    rebuild_mesh: Callable[[], object]    # () -> Mesh over surviving devices
+    on_rebalance: Optional[Callable] = None
+
+    def recover(self, template_state):
+        """-> (state, step): restore the latest complete checkpoint."""
+        state, step = self.ckpt_manager.restore(template_state)
+        mesh = self.rebuild_mesh()
+        if self.on_rebalance is not None:
+            self.on_rebalance(mesh)
+        return state, step, mesh

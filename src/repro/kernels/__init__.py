@@ -1,0 +1,4 @@
+"""Pallas TPU kernels (+ XLA reference paths) for the framework hot-spots."""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

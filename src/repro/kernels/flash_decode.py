@@ -1,0 +1,128 @@
+"""Flash-decode (Pallas TPU): single-token attention against a long KV cache.
+
+The serving hot-spot (§Perf A): one query token per sequence attends over a
+32k-524k cache.  Roofline: ~2 flops per cache byte — pure HBM-bandwidth
+work, so the kernel's only job is to stream K/V through VMEM exactly once
+with no S x S materialization and no f32 cache copies (the two CPU-path
+overheads measured in EXPERIMENTS.md §Perf A2).
+
+Layout: grid (B * KV_heads, kv_blocks); each program owns one kv head's G
+query heads (GQA group) and accumulates online softmax over its kv stream.
+The written-length of the cache arrives as an SMEM scalar so wholly-invalid
+blocks are skipped (`pl.when`) — decode at pos p only touches
+ceil(p / bk) blocks.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BK = 512
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
+                   l_ref, *, scale: float, softcap: Optional[float],
+                   bk: int, num_kv_blocks: int, G: int):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    valid_len = len_ref[0]
+    k_start = ki * bk
+
+    @pl.when(k_start < valid_len)
+    def _body():
+        q = q_ref[0].astype(jnp.float32) * scale            # [G, D]
+        k = k_ref[0].astype(jnp.float32)                    # [bk, D]
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)             # [G, bk]
+        if softcap is not None:
+            logits = softcap * jnp.tanh(logits / softcap)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (G, bk), 1)
+        logits = jnp.where(k_pos < valid_len, logits, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(logits, -1, keepdims=True))
+        p = jnp.exp(logits - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32)                    # [bk, D]
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = m_new
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _emit():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "softcap", "bk",
+                                             "interpret"))
+def flash_decode(q, k, v, kv_len, *, scale: Optional[float] = None,
+                 softcap: Optional[float] = None, bk: int = DEFAULT_BK,
+                 interpret: bool = True):
+    """q: [B, 1, H, D]; k/v: [B, Smax, KV, D]; kv_len: i32[] (written slots).
+
+    -> [B, 1, H, D].  All cache positions < kv_len participate (causality of
+    a decode step over an append-only cache).
+    """
+    B, _, H, D = q.shape
+    _, Smax, KV, _ = k.shape
+    G = H // KV
+    scale = scale if scale is not None else D ** -0.5
+
+    bk = min(bk, Smax)
+    Skp = -(-Smax // bk) * bk
+    Dp = -(-D // 128) * 128
+    Gp = -(-G // 8) * 8                                     # sublane pad
+
+    qp = jnp.pad(q[:, 0].reshape(B, KV, G, D),
+                 ((0, 0), (0, 0), (0, Gp - G), (0, Dp - D)))
+    qp = qp.reshape(B * KV, Gp, Dp)
+    kp = jnp.pad(k, ((0, 0), (0, Skp - Smax), (0, 0), (0, Dp - D)))
+    vp = jnp.pad(v, ((0, 0), (0, Skp - Smax), (0, 0), (0, Dp - D)))
+    kp = kp.transpose(0, 2, 1, 3).reshape(B * KV, Skp, Dp)
+    vp = vp.transpose(0, 2, 1, 3).reshape(B * KV, Skp, Dp)
+
+    nk = Skp // bk
+    grid = (B * KV, nk)
+    len_arr = jnp.asarray(kv_len, jnp.int32).reshape(1)
+
+    kernel = functools.partial(
+        _decode_kernel, scale=scale, softcap=softcap, bk=bk,
+        num_kv_blocks=nk, G=Gp)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, Gp, Dp), lambda bh, ki: (bh, 0, 0)),
+            pl.BlockSpec((1, bk, Dp), lambda bh, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, bk, Dp), lambda bh, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Gp, Dp), lambda bh, ki: (bh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KV, Gp, Dp), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((Gp, Dp), jnp.float32),
+            pltpu.VMEM((Gp, 1), jnp.float32),
+            pltpu.VMEM((Gp, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(len_arr, qp, kp, vp)
+
+    out = out.reshape(B, KV, Gp, Dp)[:, :, :G, :D]
+    return out.reshape(B, 1, H, D)

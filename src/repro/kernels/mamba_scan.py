@@ -1,0 +1,130 @@
+"""Pallas TPU kernel for the Mamba2 SSD per-chunk compute (zamba2 hot-spot).
+
+The chunked SSD algorithm splits into:
+  (1) per-chunk, per-head dense compute — intra-chunk "attention" (two
+      [Q x Q] x [Q x P] matmuls) + the chunk's contribution to the carried
+      state ([N x Q] x [Q x P]).  O(S * Q * (P + N)) FLOPs — the hot spot.
+  (2) a tiny inter-chunk linear recurrence over C = S/Q chunk states.
+
+The kernel implements (1) with one program per (batch, chunk, head):
+VMEM working set = Q*(P + 2N) inputs + Q*Q decay kernel + P*N state
+≈ 128*(64+128)*4B + 128*128*4B + 64*64*4B ≈ 180 KiB — comfortably VMEM-
+resident, with all matmul dims 64/128 (MXU-aligned).  (2) stays in jnp —
+it is O(C*H*P*N) and memory-trivial.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_chunk_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref,
+                      y_ref, state_ref, cum_ref, *, chunk: int):
+    Q = chunk
+    x = x_ref[0, 0, :, 0, :].astype(jnp.float32)        # [Q, P]
+    dt = dt_ref[0, 0, :, :].astype(jnp.float32)         # [Q, 1]
+    a = a_ref[0, 0]                                     # scalar A (negative)
+    Bm = b_ref[0, 0].astype(jnp.float32)                # [Q, N]
+    Cm = c_ref[0, 0].astype(jnp.float32)                # [Q, N]
+
+    dA = dt * a                                         # [Q, 1] log-decay
+    cum = jnp.cumsum(dA, axis=0)                        # [Q, 1]
+    total = cum[Q - 1:Q, :]                             # [1, 1]
+
+    # intra-chunk: y[i] = sum_{j<=i} (C_i.B_j) exp(cum_i - cum_j) dt_j x_j
+    Lmat = cum - cum.reshape(1, Q)                      # [Q, Q] (cum_i - cum_j)
+    iota_i = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    iota_j = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    # mask before exp (matches ref: overflow-safe in fwd and bwd)
+    decay = jnp.exp(jnp.where(iota_j <= iota_i, Lmat, -1e30))
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # [Q, Q]
+    w = scores * decay * dt.reshape(1, Q)
+    y = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)       # [Q, P]
+
+    # chunk state contribution: state[p, n] = sum_j exp(total-cum_j) dt_j B_j[n] x_j[p]
+    decay_out = jnp.exp(total - cum)                    # [Q, 1]
+    xw = x * (decay_out * dt)                           # [Q, P]
+    state = jax.lax.dot_general(xw, Bm, (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)   # [P, N]
+
+    y_ref[0, 0, :, 0, :] = y.astype(y_ref.dtype)
+    state_ref[0, 0, 0] = state.astype(state_ref.dtype)
+    cum_ref[0, 0, :, :] = cum.astype(cum_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk_pallas(x, dt, A, Bm, Cm, *, interpret: bool = True):
+    """Per-chunk compute.  x: [B, C, Q, H, P]; dt: [B, C, Q, H]; A: [H];
+    Bm/Cm: [B, C, Q, N].  Returns (y_intra [B,C,Q,H,P],
+    state_c [B,C,H,P,N], cum [B,C,Q,H])."""
+    Bb, C, Q, H, P = x.shape
+    N = Bm.shape[-1]
+    grid = (Bb, C, H)
+
+    a2d = A.reshape(H, 1).astype(jnp.float32)
+
+    y, state, cum = pl.pallas_call(
+        functools.partial(_ssd_chunk_kernel, chunk=Q),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, 1, P), lambda b, c, h: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, Q, 1), lambda b, c, h: (b, c, 0, h)),
+            pl.BlockSpec((1, 1), lambda b, c, h: (h, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, c, h: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, c, h: (b, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, 1, P), lambda b, c, h: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, 1, P, N), lambda b, c, h: (b, c, h, 0, 0)),
+            pl.BlockSpec((1, 1, Q, 1), lambda b, c, h: (b, c, 0, h)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bb, C, Q, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((Bb, C, H, P, N), jnp.float32),
+            jax.ShapeDtypeStruct((Bb, C, Q, H), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, a2d, Bm, Cm)
+    return y, state, cum
+
+
+def ssd_chunked_kernel(x, dt, A, Bm, Cm, D, h0=None, *, interpret: bool = True):
+    """Full SSD scan using the Pallas per-chunk kernel + jnp inter-chunk
+    recurrence.  Same contract as models.mamba2.ssd_chunked."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    from repro.models.mamba2 import CHUNK
+    Q = min(CHUNK, S)
+    assert S % Q == 0
+    C = S // Q
+
+    xc = x.reshape(Bsz, C, Q, H, P)
+    dtc = dt.reshape(Bsz, C, Q, H)
+    Bc = Bm.reshape(Bsz, C, Q, N)
+    Cc = Cm.reshape(Bsz, C, Q, N)
+
+    y_intra, state_c, cum = ssd_chunk_pallas(xc, dtc, A, Bc, Cc,
+                                             interpret=interpret)
+
+    total = cum[:, :, -1, :]                               # [B, C, H]
+    chunk_decay = jnp.exp(total)
+
+    def scan_fn(h, inp):
+        dec, s = inp
+        return h * dec[:, :, None, None] + s, h
+
+    init = (jnp.zeros((Bsz, H, P, N), jnp.float32) if h0 is None
+            else h0.astype(jnp.float32))
+    hT, h_prev = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(state_c, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                    # [B, C, H, P, N]
+
+    y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", Cc, jnp.exp(cum), h_prev)
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P) + D[None, None, :, None] * x
+    return y.astype(x.dtype), hT

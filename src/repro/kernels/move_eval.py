@@ -1,0 +1,174 @@
+"""Pallas TPU kernel for the SPTLB candidate-move delta-cost (paper hot-spot).
+
+At Meta scale a LocalSearch iteration scores N x T candidate moves
+(1e5 apps x 1e2 tiers).  The math is closed-form (core/delta.py); the
+kernel tiles the app axis into VMEM-resident blocks and evaluates all tiers
+for a block entirely in registers — a pure-VPU (elementwise) kernel, so the
+roofline target is HBM bandwidth: ~13 input floats per app vs ~T outputs.
+
+Per-app *source-side* quantities are O(N) and precomputed outside (gathers
+are not TPU-vectorizer-friendly); the kernel handles the O(N*T) part.
+
+Layout: app block BN=256 (sublane-aligned), tiers padded to 128 lanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BN = 256          # apps per block (sublane-dim tiling)
+LANE = 128        # tier padding (lane alignment)
+
+
+def _move_eval_kernel(
+    # per-app blocks [BN, ...]
+    a_src_ref, a0_ref,
+    f_src_ref, f_src_new_ref, dC_src_ref, ideal_src_ref,   # [BN, R]
+    g_src_ref, g_src_new_ref, dK_src_ref, gideal_src_ref,  # [BN, 1]
+    d_ref,                                                  # [BN, R]
+    k_ref, mc_ref, cc_ref,                                  # [BN, 1]
+    # tier-side (full, padded to Tp) [1 or R, Tp]
+    f_ref, inv_cap_ref, ideal_ref,                          # [R, Tp]
+    g_ref, inv_klim_ref, gideal_t_ref,                      # [1, Tp]
+    mean_ref,                                               # [1, R+1] (mean_f, mean_g)
+    w_ref,                                                  # [1, 8] weights (padded)
+    out_ref,                                                # [BN, Tp]
+    *, num_tiers: int, num_resources: int,
+):
+    T = num_tiers
+    Tp = out_ref.shape[-1]
+    iota_t = jax.lax.broadcasted_iota(jnp.int32, (BN, Tp), 1)
+    a_src = a_src_ref[...]                                  # [BN, 1]
+    a0 = a0_ref[...]
+
+    def h2(x, ideal):
+        h = jnp.maximum(x - ideal, 0.0)
+        return h * h
+
+    d_under = jnp.zeros((BN, Tp), jnp.float32)
+    d_res_bal = jnp.zeros((BN, Tp), jnp.float32)
+    for r in range(num_resources):
+        dC = d_ref[:, r:r + 1] * inv_cap_ref[r:r + 1, :]    # [BN, Tp]
+        f_dst = f_ref[r:r + 1, :]                           # [1, Tp]
+        f_dst_new = f_dst + dC
+        d_sumsq = (f_src_new_ref[:, r:r + 1] ** 2 - f_src_ref[:, r:r + 1] ** 2
+                   + f_dst_new ** 2 - f_dst ** 2)
+        d_mean = (dC - dC_src_ref[:, r:r + 1]) / T
+        mean_f = mean_ref[0, r]
+        new_mean = mean_f + d_mean
+        d_res_bal += d_sumsq - T * (new_mean ** 2 - mean_f ** 2)
+        d_under += (h2(f_src_new_ref[:, r:r + 1], ideal_src_ref[:, r:r + 1])
+                    - h2(f_src_ref[:, r:r + 1], ideal_src_ref[:, r:r + 1])
+                    + h2(f_dst_new, ideal_ref[r:r + 1, :])
+                    - h2(f_dst, ideal_ref[r:r + 1, :]))
+
+    # task-count analogue
+    dK = k_ref[...] * inv_klim_ref[0:1, :]                  # [BN, Tp]
+    g_dst = g_ref[0:1, :]
+    g_dst_new = g_dst + dK
+    d_sumsq_t = (g_src_new_ref[...] ** 2 - g_src_ref[...] ** 2
+                 + g_dst_new ** 2 - g_dst ** 2)
+    d_mean_t = (dK - dK_src_ref[...]) / T
+    mean_g = mean_ref[0, num_resources]
+    new_mean_t = mean_g + d_mean_t
+    d_task_bal = d_sumsq_t - T * (new_mean_t ** 2 - mean_g ** 2)
+    d_under += (h2(g_src_new_ref[...], gideal_src_ref[...])
+                - h2(g_src_ref[...], gideal_src_ref[...])
+                + h2(g_dst_new, gideal_t_ref[0:1, :])
+                - h2(g_dst, gideal_t_ref[0:1, :]))
+
+    # movement indicator delta
+    was_moved = (a_src != a0).astype(jnp.float32)           # [BN, 1]
+    will_move = (iota_t != a0).astype(jnp.float32)          # [BN, Tp]
+    d_moved = will_move - was_moved
+    d_move_cost = d_moved * mc_ref[...]
+    d_crit = d_moved * cc_ref[...]
+
+    delta = (w_ref[0, 0] * d_under
+             + w_ref[0, 1] * d_res_bal
+             + w_ref[0, 2] * d_task_bal
+             + w_ref[0, 3] * d_move_cost
+             + w_ref[0, 4] * d_crit)
+    delta = jnp.where(iota_t == a_src, 0.0, delta)          # self-moves
+    delta = jnp.where(iota_t >= T, jnp.inf, delta)          # tier padding
+    out_ref[...] = delta
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def move_eval_pallas(
+    demand, tasks, criticality, assignment, assignment0,
+    capacity, task_limit, ideal_frac, ideal_task_frac,
+    util, tier_tasks, weights, *, interpret: bool = True,
+):
+    """Same flat signature as core.delta.move_delta_cost -> delta[N, T]."""
+    N, R = demand.shape
+    T = capacity.shape[0]
+    Np = -(-N // BN) * BN
+    Tp = -(-T // LANE) * LANE
+
+    f = (util / capacity).astype(jnp.float32)               # [T, R]
+    g = (tier_tasks / task_limit).astype(jnp.float32)       # [T]
+    mean_f = jnp.mean(f, axis=0)
+    mean_g = jnp.mean(g)
+
+    # per-app source-side precompute (O(N), outside the kernel)
+    src = assignment
+    dC_src = demand / capacity[src]                         # [N, R]
+    f_src = f[src]
+    f_src_new = f_src - dC_src
+    ideal_src = ideal_frac[src]
+    dK_src = (tasks / task_limit[src])[:, None]             # [N, 1]
+    g_src = g[src][:, None]
+    g_src_new = g_src - dK_src
+    gideal_src = ideal_task_frac[src][:, None]
+    total_tasks = jnp.maximum(jnp.sum(tasks), 1.0)
+    total_crit = jnp.maximum(jnp.sum(criticality), 1.0)
+    mc = (tasks / total_tasks)[:, None]
+    cc = (criticality / total_crit)[:, None]
+
+    def pad_n(x, fill=0):
+        pad = [(0, Np - N)] + [(0, 0)] * (x.ndim - 1)
+        return jnp.pad(x.astype(jnp.float32 if x.dtype != jnp.int32 else x.dtype),
+                       pad, constant_values=fill)
+
+    def pad_t(x):                                            # [T,...] -> [.., Tp] row-major
+        return jnp.pad(x.astype(jnp.float32), [(0, 0)] * (x.ndim - 1) + [(0, Tp - T)])
+
+    app_inputs = [
+        pad_n(assignment[:, None]), pad_n(assignment0[:, None]),
+        pad_n(f_src), pad_n(f_src_new), pad_n(dC_src), pad_n(ideal_src),
+        pad_n(g_src), pad_n(g_src_new), pad_n(dK_src), pad_n(gideal_src),
+        pad_n(demand), pad_n(tasks[:, None]), pad_n(mc), pad_n(cc),
+    ]
+    tier_inputs = [
+        pad_t(f.T), pad_t((1.0 / capacity).T), pad_t(ideal_frac.T),
+        pad_t(g[None, :]), pad_t((1.0 / task_limit)[None, :]),
+        pad_t(ideal_task_frac[None, :]),
+    ]
+    mean_in = jnp.concatenate([mean_f, mean_g[None]])[None, :]      # [1, R+1]
+    w_in = jnp.pad(weights.astype(jnp.float32), (0, 8 - weights.shape[0]))[None, :]
+
+    grid = (Np // BN,)
+    app_spec = lambda width: pl.BlockSpec((BN, width), lambda i: (i, 0))
+    full_spec = lambda rows, cols: pl.BlockSpec((rows, cols), lambda i: (0, 0))
+
+    out = pl.pallas_call(
+        functools.partial(_move_eval_kernel, num_tiers=T, num_resources=R),
+        grid=grid,
+        in_specs=[
+            app_spec(1), app_spec(1),
+            app_spec(R), app_spec(R), app_spec(R), app_spec(R),
+            app_spec(1), app_spec(1), app_spec(1), app_spec(1),
+            app_spec(R), app_spec(1), app_spec(1), app_spec(1),
+            full_spec(R, Tp), full_spec(R, Tp), full_spec(R, Tp),
+            full_spec(1, Tp), full_spec(1, Tp), full_spec(1, Tp),
+            full_spec(1, R + 1), full_spec(1, 8),
+        ],
+        out_specs=pl.BlockSpec((BN, Tp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Np, Tp), jnp.float32),
+        interpret=interpret,
+    )(*app_inputs, *tier_inputs, mean_in, w_in)
+    return out[:N, :T]

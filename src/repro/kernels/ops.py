@@ -1,0 +1,62 @@
+"""jit'd dispatch wrappers: one entry point per kernel, impl-selectable.
+
+``impl="xla"``    — pure-jnp path (CPU container, dry-run lowering, oracle)
+``impl="pallas"`` — Pallas TPU kernel (``interpret=True`` on CPU for tests;
+                    compiled on real TPU)
+
+The dry-run/roofline always lowers the XLA path (Pallas does not lower for
+the CPU backend); on-TPU deployments flip ``ModelConfig.attn_impl`` /
+``LocalSearchConfig`` wiring to "pallas".
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels import ref as _ref
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.mamba_scan import ssd_chunked_kernel as _mamba_pallas
+from repro.kernels.move_eval import move_eval_pallas as _move_pallas
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+def _interp() -> bool:
+    return not _ON_TPU
+
+
+def move_eval(*args, impl: str = "xla"):
+    """delta[N, T] — see core.delta.move_delta_cost for the signature."""
+    if impl == "xla":
+        return _ref.move_eval_ref(*args)
+    return _move_pallas(*args, interpret=_interp())
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    scale: Optional[float] = None,
+                    impl: str = "xla"):
+    if impl == "xla":
+        return _ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                        softcap=softcap, scale=scale)
+    return _flash_pallas(q, k, v, causal=causal, window=window,
+                         softcap=softcap, scale=scale, interpret=_interp())
+
+
+def mamba_scan(x, dt, A, Bm, Cm, D, h0=None, *, impl: str = "xla"):
+    if impl == "xla":
+        return _ref.mamba_scan_ref(x, dt, A, Bm, Cm, D, h0)
+    return _mamba_pallas(x, dt, A, Bm, Cm, D, h0, interpret=_interp())
+
+
+def flash_decode(q, k, v, kv_len, *, scale=None, softcap=None,
+                 impl: str = "xla"):
+    """Single-token decode attention over an append-only KV cache."""
+    if impl == "xla":
+        return _ref.flash_decode_ref(q, k, v, kv_len, scale=scale,
+                                     softcap=softcap)
+    from repro.kernels.flash_decode import flash_decode as _fd
+    return _fd(q, k, v, kv_len, scale=scale, softcap=softcap,
+               interpret=_interp())

@@ -1,0 +1,182 @@
+"""Roofline analysis over the dry-run records (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape) cell on the single-pod mesh, derive the three terms from
+the compiled artifact (all quantities PER DEVICE, so dividing by per-chip
+peaks matches the spec's total/(chips x peak) formula for balanced SPMD):
+
+    compute term    = HLO_FLOPs_corrected / 197 TFLOP/s (bf16)
+    memory term     = HLO_bytes_corrected / 819 GB/s
+    collective term = collective_wire_bytes / 50 GB/s   (1 ICI link,
+                      conservative; v5e has multiple links per chip)
+
+plus MODEL_FLOPS (6 N_eff D for training, 2 N_eff D for prefill/decode),
+the useful-compute ratio MODEL_FLOPS / HLO_FLOPs, the dominant bottleneck,
+and an MFU bound = (MODEL_FLOPS / peak) / max(term) — the fraction of the
+chip's peak the step could reach if it ran exactly at the dominant-resource
+bound.  This MFU bound is the §Perf score that the hillclimb drives up.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS, get_config
+from repro.configs.shapes import SHAPES
+from repro.models import build_model
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+LINK_BW = 50e9             # bytes/s / link
+CHIPS = 256                # single-pod (16 data x 16 model) mesh
+# MODEL_FLOPS is the *useful* work and divides over ALL chips (data x model
+# parallelism); a cell whose HLO per-device FLOPs is ~16x the per-chip
+# useful share has its tensor parallelism silently broken (XLA replicated
+# the compute) — exactly what the useful-ratio column is for.
+
+
+def count_params(cfg) -> dict:
+    """Exact parameter counts from the abstract tree (no allocation)."""
+    model = build_model(cfg)
+    abs_params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    flat = jax.tree_util.tree_flatten_with_path(abs_params)[0]
+    total = 0
+    routed_expert = 0
+    embed = 0
+    shared_block = 0
+    for path, leaf in flat:
+        keys = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        n = int(np.prod(leaf.shape))
+        total += n
+        if "moe" in keys and "shared" not in keys and any(
+                k in keys for k in ("w_gate", "w_up", "w_down")):
+            routed_expert += n
+        if "embed" in keys and "mask_embed" not in keys or "lm_head" in keys:
+            embed += n
+        if cfg.family == "hybrid" and "shared" in keys and "out_proj" not in keys:
+            shared_block += n
+    return {"total": total, "routed_expert": routed_expert, "embed": embed,
+            "shared_block": shared_block}
+
+
+def model_flops_per_token(cfg) -> float:
+    """Active matmul params x 2 (the 6ND/2ND convention's N)."""
+    counts = count_params(cfg)
+    n = counts["total"] - counts["embed"]          # embeddings are gathers
+    if cfg.num_experts:
+        n -= counts["routed_expert"] * (1 - cfg.top_k / cfg.num_experts)
+    if cfg.family == "hybrid" and cfg.attn_every:
+        apps = cfg.num_layers // cfg.attn_every
+        n += counts["shared_block"] * (apps - 1)   # shared block reused
+    # lm head matmul is real compute (tied or not)
+    n += cfg.d_model * cfg.vocab_size
+    return 2.0 * n
+
+
+def model_flops(cfg, shape_name: str) -> float:
+    """Per-device useful FLOPs for this cell (6ND train, 2ND serve)."""
+    s = SHAPES[shape_name]
+    per_tok = model_flops_per_token(cfg)
+    if s.kind == "train":
+        tokens = s.global_batch * s.seq_len / CHIPS
+        return 3.0 * per_tok * tokens              # fwd + bwd = 3 x fwd
+    if s.kind == "prefill":
+        tokens = s.global_batch * s.seq_len / CHIPS
+        return per_tok * tokens
+    tokens = s.global_batch / CHIPS        # decode: 1 token/seq
+    return per_tok * tokens
+
+
+def analyze(rec: dict) -> dict:
+    cfg = get_config(rec["arch"])
+    cost = rec.get("cost_corrected") or rec["cost"]
+    flops = cost["flops"]
+    bytes_ = cost["bytes_accessed"]
+    coll = cost.get("collective_bytes",
+                    rec["collectives"]["total_bytes"])
+    t_comp = flops / PEAK_FLOPS
+    t_mem = bytes_ / HBM_BW
+    t_coll = coll / LINK_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, rec["shape"])
+    mfu_bound = (mf / PEAK_FLOPS) / max(max(terms.values()), 1e-30)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "tag": rec.get("tag", ""),
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_ratio": mf / max(flops, 1e-30),
+        "mfu_bound": mfu_bound,
+        "hbm_gib_per_dev": (rec["memory"]["argument_bytes"]
+                            + rec["memory"]["output_bytes"]
+                            + rec["memory"]["temp_bytes"]) / 2**30
+        if rec.get("memory") else float("nan"),
+    }
+
+
+def action_note(row: dict) -> str:
+    d = row["dominant"]
+    if d == "compute" and row["useful_ratio"] < 0.5:
+        return ("compute-bound with low useful ratio — cut remat/recompute "
+                "or attention waste to move HLO FLOPs toward model FLOPs")
+    if d == "compute":
+        return "compute-bound near useful peak — healthy; only kernel-level wins left"
+    if d == "memory":
+        return ("memory-bound — shrink bytes/step: fuse elementwise chains, "
+                "bf16 intermediates, smaller KV cache (windowed layers), or "
+                "re-shard to cut per-device working set")
+    return ("collective-bound — re-shard to reduce wire bytes (2D sharding, "
+            "overlap collectives with compute, hierarchical all-reduce)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--tag", default="", help="analyze a perf-variant tag")
+    ap.add_argument("--out", default="results/roofline.md")
+    args = ap.parse_args()
+
+    rows = []
+    for path in sorted(Path(args.dir).glob("*--single*.json")):
+        rec = json.loads(path.read_text())
+        if rec.get("skipped") or not rec.get("ok"):
+            continue
+        if rec.get("tag", "") != args.tag:
+            continue
+        rows.append(analyze(rec))
+
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    lines = [
+        "| arch | shape | t_comp (ms) | t_mem (ms) | t_coll (ms) | dominant "
+        "| useful FLOP ratio | MFU bound | HBM GiB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']*1e3:9.2f} "
+            f"| {r['t_memory_s']*1e3:9.2f} | {r['t_collective_s']*1e3:9.2f} "
+            f"| {r['dominant']} | {r['useful_ratio']:.2f} "
+            f"| {r['mfu_bound']:.3f} | {r['hbm_gib_per_dev']:.1f} |")
+    table = "\n".join(lines)
+    print(table)
+
+    print("\n### per-cell action notes")
+    for r in rows:
+        print(f"- **{r['arch']} / {r['shape']}** ({r['dominant']}-bound, "
+              f"MFU bound {r['mfu_bound']:.2f}): {action_note(r)}")
+
+    Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+    Path(args.out).write_text(table + "\n")
+    # machine-readable dump for EXPERIMENTS.md generation
+    Path(args.out).with_suffix(".json").write_text(
+        json.dumps(rows, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,196 @@
+"""Batched serving driver: SLO-class request routing + KV-cache decode.
+
+The serving-side counterpart of launch/train.py and the reason the paper's
+SLO table exists: requests arrive tagged with an SLO class; SPTLB has
+already placed each model replica on a tier that supports that class
+(constraint 4), so admission is a table lookup; the engine then runs
+continuous batched greedy decoding against a shared KV cache.
+
+Components:
+  * RequestQueue  — per-SLO-class FIFO with deadline bookkeeping,
+  * ServeEngine   — slot-based continuous batcher (prefill on admit,
+                    batched decode_step, eviction on EOS/length),
+  * latency report per SLO class (the p99s the paper's tiers are sized for).
+
+Run (reduced config, CPU):
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b \
+      --requests 24 --max-new 16
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model, reduce_for_smoke
+from repro.train.serve_step import make_decode_step
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # i32[prompt_len]
+    slo: int                      # latency class (paper SLO1..4)
+    max_new_tokens: int
+    arrival_s: float = 0.0
+    first_token_s: Optional[float] = None
+    done_s: Optional[float] = None
+    tokens: list = dataclasses.field(default_factory=list)
+
+
+class RequestQueue:
+    """Per-SLO FIFO; lower class id = tighter latency target."""
+
+    def __init__(self, num_classes: int = 4):
+        self.queues = [deque() for _ in range(num_classes)]
+
+    def push(self, req: Request):
+        self.queues[req.slo].append(req)
+
+    def pop(self) -> Optional[Request]:
+        for q in self.queues:               # strict priority by SLO class
+            if q:
+                return q.popleft()
+        return None
+
+    def __len__(self):
+        return sum(map(len, self.queues))
+
+
+class ServeEngine:
+    """Slot-based continuous batching over a fixed decode batch."""
+
+    def __init__(self, model, params, *, slots: int, max_seq: int,
+                 eos_token: int = 0):
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_seq = max_seq
+        self.eos = eos_token
+        self.cache = model.init_cache(slots, max_seq)
+        self.decode = jax.jit(make_decode_step(model))
+        # NOTE: a shared cache with per-slot positions requires per-slot
+        # pos tracking; this engine admits waves of equal-length prompts
+        # (left-padded otherwise) — the standard static-batch TPU pattern.
+        self.active: list[Optional[Request]] = [None] * slots
+        self.tokens = jnp.zeros((slots, 1), jnp.int32)
+
+    def admit_wave(self, reqs: list[Request]):
+        """Prefill a wave of requests (padded to a common length)."""
+        assert len(reqs) <= self.slots
+        maxlen = max(len(r.prompt) for r in reqs)
+        batch = np.zeros((self.slots, maxlen), np.int32)
+        for i, r in enumerate(reqs):
+            batch[i, maxlen - len(r.prompt):] = r.prompt   # left-pad
+            self.active[i] = r
+        self.cache = self.model.init_cache(self.slots, self.max_seq)
+        prefill = jax.jit(self.model.prefill)
+        logits, self.cache = prefill(self.params,
+                                     {"tokens": jnp.asarray(batch)},
+                                     self.cache)
+        self.tokens = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        now = time.perf_counter()
+        for i, r in enumerate(reqs):
+            r.first_token_s = now
+            r.tokens.append(int(self.tokens[i, 0]))
+
+    def step(self) -> int:
+        """One batched decode step; returns #still-active requests."""
+        self.tokens, self.cache = self.decode(self.params, self.tokens,
+                                              self.cache)
+        now = time.perf_counter()
+        alive = 0
+        for i, r in enumerate(self.active):
+            if r is None or r.done_s is not None:
+                continue
+            tok = int(self.tokens[i, 0])
+            r.tokens.append(tok)
+            if len(r.tokens) >= r.max_new_tokens:
+                r.done_s = now
+            else:
+                alive += 1
+        return alive
+
+
+def latency_report(requests: list[Request]) -> dict:
+    by_slo: dict = {}
+    for r in requests:
+        if r.done_s is None:
+            continue
+        d = by_slo.setdefault(r.slo, {"ttft_ms": [], "total_ms": []})
+        d["ttft_ms"].append((r.first_token_s - r.arrival_s) * 1e3)
+        d["total_ms"].append((r.done_s - r.arrival_s) * 1e3)
+    out = {}
+    for slo, d in sorted(by_slo.items()):
+        out[slo] = {
+            "n": len(d["ttft_ms"]),
+            "ttft_p50_ms": float(np.percentile(d["ttft_ms"], 50)),
+            "ttft_p99_ms": float(np.percentile(d["ttft_ms"], 99)),
+            "total_p99_ms": float(np.percentile(d["total_ms"], 99)),
+        }
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = reduce_for_smoke(get_config(args.arch))
+    if cfg.is_encoder_only:
+        raise SystemExit(f"{args.arch} is encoder-only")
+    model = build_model(cfg)
+    rng = np.random.default_rng(args.seed)
+    params = model.init(jax.random.PRNGKey(args.seed))
+
+    queue = RequestQueue()
+    t0 = time.perf_counter()
+    for i in range(args.requests):
+        queue.push(Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size,
+                                rng.integers(4, args.prompt_len + 1)
+                                ).astype(np.int32),
+            slo=int(rng.choice(4, p=[0.2, 0.2, 0.45, 0.15])),
+            max_new_tokens=args.max_new,
+            arrival_s=t0,
+        ))
+
+    engine = ServeEngine(model, params, slots=args.slots,
+                         max_seq=args.prompt_len + args.max_new + 8)
+    finished: list[Request] = []
+    while len(queue) or any(r and r.done_s is None for r in engine.active):
+        wave = []
+        while len(wave) < args.slots and len(queue):
+            wave.append(queue.pop())
+        if wave:
+            engine.admit_wave(wave)
+        while engine.step():
+            pass
+        finished.extend(r for r in engine.active if r is not None)
+        engine.active = [None] * engine.slots
+
+    report = latency_report(finished)
+    print(f"served {len(finished)} requests on arch={cfg.arch_id} (reduced)")
+    for slo, stats in report.items():
+        print(f"  SLO{slo + 1}: n={stats['n']:3d} "
+              f"ttft p50 {stats['ttft_p50_ms']:8.1f} ms  "
+              f"p99 {stats['ttft_p99_ms']:8.1f} ms  "
+              f"total p99 {stats['total_p99_ms']:8.1f} ms")
+    return report
+
+
+if __name__ == "__main__":
+    main()

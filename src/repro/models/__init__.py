@@ -1,0 +1,4 @@
+from repro.models.config import ModelConfig, reduce_for_smoke
+from repro.models.model import build_model
+
+__all__ = ["ModelConfig", "build_model", "reduce_for_smoke"]

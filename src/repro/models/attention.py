@@ -1,0 +1,215 @@
+"""Attention blocks: standard GQA (7/10 archs) and MLA (deepseek-v2).
+
+Each block exposes:
+  init(cfg, key) -> params
+  apply(cfg, params, x, *, positions, cache=None, cache_pos=None, layer_window)
+      -> (y, new_cache_entry)
+where ``cache`` is this layer's KV slice.  ``cache=None`` is the pure
+training/encoder path; with a cache the same code covers prefill (S large,
+cache_pos=0) and decode (S=1).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+# ---------------------------------------------------------------------------
+# standard GQA attention
+# ---------------------------------------------------------------------------
+
+def gqa_init(cfg, key, dtype):
+    D = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": L.dense_init(ks[0], cfg.d_model, cfg.num_heads * D, dtype),
+        "wk": L.dense_init(ks[1], cfg.d_model, cfg.num_kv_heads * D, dtype),
+        "wv": L.dense_init(ks[2], cfg.d_model, cfg.num_kv_heads * D, dtype),
+        "wo": L.dense_init(ks[3], cfg.num_heads * D, cfg.d_model, dtype, scale=0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros(cfg.num_heads * D, dtype)
+        p["bk"] = jnp.zeros(cfg.num_kv_heads * D, dtype)
+        p["bv"] = jnp.zeros(cfg.num_kv_heads * D, dtype)
+    return p
+
+
+def gqa_apply(cfg, params, x, *, positions, cache=None, cache_pos=None,
+              window: Optional[int] = None):
+    B, S, _ = x.shape
+    D = cfg.resolved_head_dim
+    if cfg.attn_batch_shard and cache is None:
+        # Head-count-agnostic tensor parallelism: run the whole attention
+        # section batch-sharded over (dp x model).  x arrives model-
+        # replicated, so the forward reshard is a local slice; only the
+        # output pays one all-gather per layer.  This sidesteps head counts
+        # that do not divide the model axis (smollm: 15 q / 5 kv heads).
+        from repro.distributed.sharding import constrain
+        x = constrain(x, ("dpm", None, None))
+    q = L.linear(x, params["wq"], params.get("bq")).reshape(B, S, cfg.num_heads, D)
+    k = L.linear(x, params["wk"], params.get("bk")).reshape(B, S, cfg.num_kv_heads, D)
+    v = L.linear(x, params["wv"], params.get("bv")).reshape(B, S, cfg.num_kv_heads, D)
+
+    if cfg.use_rope:
+        q = L.apply_rope(q, positions, cfg.rope_theta, cfg.rope_dim)
+        k = L.apply_rope(k, positions, cfg.rope_theta, cfg.rope_dim)
+
+    if cache is None:
+        out = L.attention(
+            q, k, v, causal=cfg.causal,
+            q_positions=positions, kv_positions=positions,
+            window=window, softcap=cfg.attn_softcap, scale=cfg.query_scale)
+        new_cache = None
+    elif window is not None and cache["k"].shape[1] <= window:
+        # Ring cache (§Perf A4): sliding-window layers keep only the last
+        # ``window`` positions.  The ring invariantly holds exactly the
+        # causally-visible window of the current query, so no causal or
+        # window masking is needed — only a written-slot check early on.
+        W = cache["k"].shape[1]
+        ck, cv = cache["k"], cache["v"]
+        if S == 1:                                        # decode
+            slot = cache_pos % W
+            ck = jax.lax.dynamic_update_slice(
+                ck, k.astype(ck.dtype), (0, slot, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cv, v.astype(cv.dtype), (0, slot, 0, 0))
+            iota_w = jnp.broadcast_to(jnp.arange(W, dtype=jnp.int32), (B, W))
+            kv_valid = iota_w <= cache_pos
+            out = L.attention(
+                q, ck.astype(q.dtype), cv.astype(q.dtype), causal=False,
+                q_positions=positions, kv_positions=iota_w,
+                kv_valid=kv_valid, softcap=cfg.attn_softcap,
+                scale=cfg.query_scale)
+        else:                                             # prefill
+            # attend in-sequence (full k/v), then store the rotated tail
+            out = L.attention(
+                q, k, v, causal=cfg.causal,
+                q_positions=positions, kv_positions=positions,
+                window=window, softcap=cfg.attn_softcap,
+                scale=cfg.query_scale)
+            if S >= W:
+                tail_pos = S - W + jnp.arange(W)           # absolute positions
+                slots = tail_pos % W
+                ck = ck.at[:, slots].set(k[:, -W:].astype(ck.dtype))
+                cv = cv.at[:, slots].set(v[:, -W:].astype(cv.dtype))
+            else:
+                ck = jax.lax.dynamic_update_slice(
+                    ck, k.astype(ck.dtype), (0, cache_pos, 0, 0))
+                cv = jax.lax.dynamic_update_slice(
+                    cv, v.astype(cv.dtype), (0, cache_pos, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+    else:
+        ck, cv = cache["k"], cache["v"]                   # [B, Smax, KV, D]
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, cache_pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, cache_pos, 0, 0))
+        Smax = ck.shape[1]
+        kv_pos = jnp.broadcast_to(jnp.arange(Smax, dtype=jnp.int32), (B, Smax))
+        kv_valid = kv_pos < (cache_pos + S)
+        out = L.attention(
+            q, ck.astype(q.dtype), cv.astype(q.dtype), causal=cfg.causal,
+            q_positions=positions, kv_positions=kv_pos, kv_valid=kv_valid,
+            window=window, softcap=cfg.attn_softcap, scale=cfg.query_scale)
+        new_cache = {"k": ck, "v": cv}
+
+    y = L.linear(out.reshape(B, S, cfg.num_heads * D), params["wo"])
+    if cfg.attn_batch_shard and cache is None:
+        from repro.distributed.sharding import constrain
+        y = constrain(y, ("dp", None, None))
+    return y, new_cache
+
+
+def gqa_cache_shape(cfg, batch: int, max_seq: int, window: Optional[int] = None):
+    """KV-cache slice shape for one layer (window caps local-layer caches)."""
+    D = cfg.resolved_head_dim
+    s = max_seq if window is None else min(max_seq, window)
+    return {
+        "k": (batch, s, cfg.num_kv_heads, D),
+        "v": (batch, s, cfg.num_kv_heads, D),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (deepseek-v2)
+# ---------------------------------------------------------------------------
+
+def mla_init(cfg, key, dtype):
+    ks = jax.random.split(key, 6)
+    H = cfg.num_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    return {
+        # queries are not compressed at v2-lite size (q_lora_rank = None)
+        "wq": L.dense_init(ks[0], cfg.d_model, H * qk, dtype),
+        # joint KV compression to kv_lora_rank + decoupled rope key
+        "wkv_down": L.dense_init(ks[1], cfg.d_model, cfg.kv_lora_rank, dtype),
+        "kv_norm": jnp.ones(cfg.kv_lora_rank),
+        "wk_rope": L.dense_init(ks[2], cfg.d_model, cfg.qk_rope_dim, dtype),
+        "wk_up": L.dense_init(ks[3], cfg.kv_lora_rank, H * cfg.qk_nope_dim, dtype),
+        "wv_up": L.dense_init(ks[4], cfg.kv_lora_rank, H * cfg.v_head_dim, dtype),
+        "wo": L.dense_init(ks[5], H * cfg.v_head_dim, cfg.d_model, dtype, scale=0.5),
+    }
+
+
+def _mla_expand(cfg, params, c_kv, k_pe):
+    """Expand compressed cache (c_kv, rope key) to per-head K/V."""
+    B, S, _ = c_kv.shape
+    H = cfg.num_heads
+    k_nope = L.linear(c_kv, params["wk_up"]).reshape(B, S, H, cfg.qk_nope_dim)
+    v = L.linear(c_kv, params["wv_up"]).reshape(B, S, H, cfg.v_head_dim)
+    k_pe_b = jnp.broadcast_to(k_pe[:, :, None, :], (B, S, H, cfg.qk_rope_dim))
+    k = jnp.concatenate([k_nope, k_pe_b], axis=-1)
+    return k, v
+
+
+def mla_apply(cfg, params, x, *, positions, cache=None, cache_pos=None,
+              window: Optional[int] = None):
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+
+    q = L.linear(x, params["wq"]).reshape(B, S, H, qk)
+    q_nope, q_pe = q[..., :cfg.qk_nope_dim], q[..., cfg.qk_nope_dim:]
+    q_pe = L.apply_rope(q_pe, positions, cfg.rope_theta)
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+
+    c_kv = L.rmsnorm(L.linear(x, params["wkv_down"]), params["kv_norm"])
+    k_pe = L.apply_rope(
+        L.linear(x, params["wk_rope"])[:, :, None, :], positions,
+        cfg.rope_theta)[:, :, 0, :]
+
+    scale = cfg.query_scale or qk ** -0.5
+    if cache is None:
+        k, v = _mla_expand(cfg, params, c_kv, k_pe)
+        out = L.attention(q, k, v, causal=cfg.causal,
+                          q_positions=positions, kv_positions=positions,
+                          window=window, softcap=cfg.attn_softcap, scale=scale)
+        new_cache = None
+    else:
+        cc = jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, cache_pos, 0))
+        cp = jax.lax.dynamic_update_slice(
+            cache["k_pe"], k_pe.astype(cache["k_pe"].dtype), (0, cache_pos, 0))
+        Smax = cc.shape[1]
+        # Baseline decode expands the compressed cache to per-head K/V each
+        # step; the absorbed-matmul variant is a recorded perf iteration.
+        k, v = _mla_expand(cfg, params, cc.astype(x.dtype), cp.astype(x.dtype))
+        kv_pos = jnp.broadcast_to(jnp.arange(Smax, dtype=jnp.int32), (B, Smax))
+        kv_valid = kv_pos < (cache_pos + S)
+        out = L.attention(q, k, v, causal=cfg.causal,
+                          q_positions=positions, kv_positions=kv_pos,
+                          kv_valid=kv_valid, window=window,
+                          softcap=cfg.attn_softcap, scale=scale)
+        new_cache = {"c_kv": cc, "k_pe": cp}
+
+    y = L.linear(out.reshape(B, S, H * cfg.v_head_dim), params["wo"])
+    return y, new_cache
+
+
+def mla_cache_shape(cfg, batch: int, max_seq: int, window=None):
+    return {
+        "c_kv": (batch, max_seq, cfg.kv_lora_rank),
+        "k_pe": (batch, max_seq, cfg.qk_rope_dim),
+    }

@@ -1,0 +1,182 @@
+"""Shared neural-net building blocks (pure JAX, pytree params).
+
+Conventions:
+  * linear weights are [d_in, d_out]; ``x @ W (+ b)``
+  * attention tensors are [batch, seq, heads, head_dim]
+  * all matmuls accumulate in f32 (``preferred_element_type``) regardless of
+    the bf16/других param dtype — the TPU MXU contract.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# initializers / linear
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float = 1.0):
+    std = scale / jnp.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+def linear(x, w, b=None):
+    y = jnp.einsum("...i,io->...o", x, w,
+                   preferred_element_type=jnp.float32)
+    if b is not None:
+        y = y + b
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale, *, offset: bool = False, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        y = y * (1.0 + scale.astype(jnp.float32) if offset
+                 else scale.astype(jnp.float32))
+    return y.astype(x.dtype)
+
+
+def layernorm(x, scale=None, bias=None, *, eps: float = 1e-5):
+    """Non-parametric when scale/bias are None (OLMo)."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        y = y * scale.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def make_norm(cfg):
+    """Returns (init_fn(key) -> params|None, apply_fn(x, params) -> x)."""
+    if cfg.norm == "rmsnorm":
+        def init(key):
+            return jnp.zeros(cfg.d_model) if cfg.rms_offset else jnp.ones(cfg.d_model)
+        return init, lambda x, p: rmsnorm(x, p, offset=cfg.rms_offset)
+    if cfg.norm == "layernorm":
+        def init(key):
+            return {"scale": jnp.ones(cfg.d_model), "bias": jnp.zeros(cfg.d_model)}
+        return init, lambda x, p: layernorm(x, p["scale"], p["bias"])
+    if cfg.norm == "layernorm_np":                  # OLMo non-parametric LN
+        return (lambda key: None), (lambda x, p: layernorm(x))
+    raise ValueError(cfg.norm)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x, positions, theta: float, rope_dim: Optional[int] = None):
+    """x: [B, S, H, D]; positions: [B, S] (i32). Rotates first rope_dim dims."""
+    D = x.shape[-1]
+    rd = rope_dim or D
+    freqs = rope_frequencies(rd, theta)                        # [rd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B, S, rd/2]
+    cos = jnp.cos(angles)[:, :, None, :]                       # [B, S, 1, rd/2]
+    sin = jnp.sin(angles)[:, :, None, :]
+    xr, xp = x[..., :rd], x[..., rd:]
+    x1, x2 = jnp.split(xr.astype(jnp.float32), 2, axis=-1)
+    rotated = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return jnp.concatenate([rotated.astype(x.dtype), xp], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention core (XLA path; kernels/flash_attention.py is the Pallas path)
+# ---------------------------------------------------------------------------
+
+def _softcap(logits, cap: Optional[float]):
+    if cap is None:
+        return logits
+    return cap * jnp.tanh(logits / cap)
+
+
+def attention(
+    q,                       # [B, Sq, H, D]
+    k,                       # [B, Skv, KV, D]
+    v,                       # [B, Skv, KV, Dv]
+    *,
+    causal: bool,
+    q_positions,             # i32[B, Sq] absolute positions of the queries
+    kv_positions,            # i32[B, Skv]
+    kv_valid=None,           # bool[B, Skv] (decode: cache slots written)
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+):
+    """Grouped-query attention with causal/window masking — the pure-XLA
+    reference path used for lowering/dry-run and CPU tests."""
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    Dv = v.shape[-1]
+    G = H // KV                                   # query heads per kv head
+    scale = scale if scale is not None else D ** -0.5
+
+    # Keep q/k/v in their storage dtype (bf16) and accumulate the dots in
+    # f32 via preferred_element_type — casting a 32k-token KV cache to f32
+    # would triple the HBM traffic of a decode step (§Perf A2).  The scale
+    # is applied to the f32 logits to avoid a bf16 round-trip on q.
+    qs = q.reshape(B, Sq, KV, G, D)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qs, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = _softcap(logits, softcap)
+
+    mask = jnp.ones((B, Sq, k.shape[1]), bool)
+    if causal:
+        mask &= kv_positions[:, None, :] <= q_positions[:, :, None]
+    if window is not None:
+        mask &= kv_positions[:, None, :] > q_positions[:, :, None] - window
+    if kv_valid is not None:
+        mask &= kv_valid[:, None, :]
+    logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+
+    probs = jax.nn.softmax(logits, axis=-1)           # f32
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, H, Dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# gated MLP
+# ---------------------------------------------------------------------------
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True)}[name]
+
+
+def mlp_init(key, d_model: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype, scale=0.5),
+    }
+
+
+def mlp_apply(params, x, activation: str, *, act_sharding: bool = False):
+    gate = act_fn(activation)(linear(x, params["w_gate"]))
+    up = linear(x, params["w_up"])
+    h = (gate * up).astype(x.dtype)
+    if act_sharding:
+        from repro.distributed.sharding import constrain
+        # hidden activations follow the column-parallel w_gate/w_up shards
+        h = constrain(h, ("dp",) + (None,) * (h.ndim - 2) + ("model",))
+    return linear(h, params["w_down"])

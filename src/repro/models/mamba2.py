@@ -1,0 +1,367 @@
+"""Mamba2 (SSD) mixer + the Zamba2 hybrid model.
+
+Zamba2 = a backbone of Mamba2 layers with one *shared* transformer block
+(attention + MLP, single parameter set) applied every ``attn_every`` layers.
+Each application concatenates the current hidden state with the original
+embedding ([h; e] -> 2d -> d projection) and keeps its own KV cache.
+
+The SSD scan has three implementations:
+  * chunked parallel form (training/prefill) — pure jnp here, Pallas kernel in
+    kernels/mamba_scan.py for the per-chunk hot loop,
+  * recurrent single-step (decode) with O(1) state,
+both derived from the same discretization so they agree numerically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+CHUNK = 128
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 layer
+# ---------------------------------------------------------------------------
+
+def mamba_dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_headdim
+    return d_inner, nheads
+
+
+def mamba_init(cfg: ModelConfig, key, dtype):
+    d_inner, H = mamba_dims(cfg)
+    N = cfg.ssm_state
+    conv_ch = d_inner + 2 * N                       # x, B, C share the conv
+    ks = jax.random.split(key, 6)
+    return {
+        "norm": jnp.ones(cfg.d_model),
+        "in_proj": L.dense_init(ks[0], cfg.d_model,
+                                2 * d_inner + 2 * N + H, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch)) * 0.1
+                   ).astype(dtype),
+        "conv_b": jnp.zeros(conv_ch, dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones(H, jnp.float32),
+        "dt_bias": jnp.zeros(H, jnp.float32),
+        "gate_norm": jnp.ones(d_inner),
+        "out_proj": L.dense_init(ks[2], d_inner, cfg.d_model, dtype, scale=0.5),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv, width W (small, unrolled). x: [B, S, C]."""
+    W = w.shape[0]
+    pads = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    y = sum(pads[:, i:i + x.shape[1], :] * w[i] for i in range(W))
+    return y + b
+
+
+def _conv_step(conv_state, x_t, w, b):
+    """conv_state: [B, W-1, C]; x_t: [B, C] -> (y_t, new_state)."""
+    full = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)   # [B, W, C]
+    y = jnp.einsum("bwc,wc->bc", full, w) + b
+    return y, full[:, 1:, :]
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, D, h0=None):
+    """Chunked SSD scan (Mamba2 paper §6).
+
+    x: [B,S,H,P], dt: [B,S,H] (already softplus'd), A: [H] (negative),
+    Bm/Cm: [B,S,N], D: [H].  Returns (y [B,S,H,P], final_state [B,H,P,N]).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(CHUNK, S)
+    assert S % Q == 0, (S, Q)
+    C = S // Q
+
+    xc = x.reshape(Bsz, C, Q, H, P)
+    dtc = dt.reshape(Bsz, C, Q, H)
+    Bc = Bm.reshape(Bsz, C, Q, N)
+    Cc = Cm.reshape(Bsz, C, Q, N)
+
+    dA = dtc * A                                       # [B,C,Q,H] log-decay
+    cum = jnp.cumsum(dA, axis=2)                       # within-chunk cumsum
+    total = cum[:, :, -1:, :]                          # [B,C,1,H]
+
+    # intra-chunk (attention-like, lower-triangular decay kernel).
+    # Mask BEFORE the exp: exp of the (huge, positive) masked upper triangle
+    # would overflow and poison the backward pass (0 * inf = NaN in the VJP).
+    Lmat = cum[:, :, :, None, :] - cum[:, :, None, :, :]     # [B,C,Qi,Qj,H]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    Lmat = jnp.exp(jnp.where(mask[None, None, :, :, None], Lmat, -1e30))
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)           # [B,C,Qi,Qj]
+    weighted = scores[..., None] * Lmat                       # [B,C,Qi,Qj,H]
+    y_intra = jnp.einsum("bcijh,bcjh,bcjhp->bcihp", weighted, dtc, xc)
+
+    # chunk states: contribution of chunk c to the carried state
+    decay_out = jnp.exp(total - cum)                          # [B,C,Q,H]
+    state_c = jnp.einsum("bcqh,bcqh,bcqn,bcqhp->bchpn",
+                         decay_out, dtc, Bc, xc)              # [B,C,H,P,N]
+
+    # inter-chunk recurrence (scan over chunks)
+    chunk_decay = jnp.exp(total[:, :, 0, :])                  # [B,C,H]
+
+    def scan_fn(h, inp):
+        dec, s = inp                                          # [B,H], [B,H,P,N]
+        h_new = h * dec[:, :, None, None] + s
+        return h_new, h                                       # emit h_{c-1}
+
+    init = (jnp.zeros((Bsz, H, P, N), jnp.float32) if h0 is None
+            else h0.astype(jnp.float32))
+    hT, h_prev = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(state_c, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                       # [B,C,H,P,N]
+
+    y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp",
+                         Cc, jnp.exp(cum), h_prev)
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P) + D[None, None, :, None] * x
+    return y.astype(x.dtype), hT
+
+
+def ssd_step(h, x_t, dt_t, A, B_t, C_t, D):
+    """Single-token recurrent update.  h: [B,H,P,N]."""
+    dA = jnp.exp(dt_t * A)                                    # [B,H]
+    dBx = jnp.einsum("bh,bn,bhp->bhpn", dt_t, B_t, x_t)
+    h = h * dA[:, :, None, None] + dBx
+    y = jnp.einsum("bn,bhpn->bhp", C_t, h) + D[None, :, None] * x_t
+    return y, h
+
+
+def mamba_apply(cfg: ModelConfig, params, x, *, cache=None):
+    """x: [B,S,d].  cache (decode): {"ssm": [B,H,P,N], "conv": [B,W-1,C]}.
+
+    Training/prefill: S arbitrary (padded to CHUNK), cache out only if given.
+    Decode: S == 1, O(1) state update.
+    """
+    Bsz, S, _ = x.shape
+    d_inner, H = mamba_dims(cfg)
+    N, P = cfg.ssm_state, cfg.ssm_headdim
+    resid = x
+    x = L.rmsnorm(x, params["norm"])
+    proj = L.linear(x, params["in_proj"])
+    z, xbc, dt_raw = jnp.split(
+        proj, [d_inner, 2 * d_inner + 2 * N], axis=-1)
+    A = -jnp.exp(params["A_log"])
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+
+    if cache is None or S > 1:
+        conv_in = xbc
+        conv = jax.nn.silu(_causal_conv(conv_in, params["conv_w"],
+                                        params["conv_b"]))
+        xs, Bm, Cm = jnp.split(conv, [d_inner, d_inner + N], axis=-1)
+        xs = xs.reshape(Bsz, S, H, P)
+        pad = (-S) % CHUNK
+        if pad:
+            xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dtp = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+            Cmp = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        else:
+            dtp, Cmp = dt, Cm
+        h0 = cache["ssm"] if cache is not None else None
+        y, hT = ssd_chunked(xs.astype(jnp.float32), dtp, A,
+                            Bm.astype(jnp.float32), Cmp.astype(jnp.float32),
+                            params["D"], h0)
+        y = y[:, :S].reshape(Bsz, S, d_inner)
+        new_cache = None
+        if cache is not None:
+            W = cfg.ssm_conv
+            tail = jnp.pad(conv_in, ((0, 0), (W - 1, 0), (0, 0)))[:, -(W - 1):, :]
+            new_cache = {"ssm": hT.astype(cache["ssm"].dtype),
+                         "conv": tail.astype(cache["conv"].dtype)}
+    else:
+        conv_y, conv_state = _conv_step(
+            cache["conv"].astype(xbc.dtype), xbc[:, 0], params["conv_w"],
+            params["conv_b"])
+        conv_y = jax.nn.silu(conv_y)
+        xs, Bm, Cm = jnp.split(conv_y, [d_inner, d_inner + N], axis=-1)
+        y, h = ssd_step(cache["ssm"].astype(jnp.float32),
+                        xs.reshape(Bsz, H, P).astype(jnp.float32),
+                        dt[:, 0], A, Bm.astype(jnp.float32),
+                        Cm.astype(jnp.float32), params["D"])
+        y = y.reshape(Bsz, 1, d_inner)
+        new_cache = {"ssm": h.astype(cache["ssm"].dtype),
+                     "conv": conv_state.astype(cache["conv"].dtype)}
+
+    y = L.rmsnorm(y.astype(resid.dtype) * jax.nn.silu(z), params["gate_norm"])
+    out = L.linear(y, params["out_proj"])
+    return resid + out, new_cache
+
+
+def mamba_cache_shape(cfg: ModelConfig, batch: int):
+    d_inner, H = mamba_dims(cfg)
+    return {
+        "ssm": (batch, H, cfg.ssm_headdim, cfg.ssm_state),
+        "conv": (batch, cfg.ssm_conv - 1, d_inner + 2 * cfg.ssm_state),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Zamba2: Mamba2 backbone + shared attention block
+# ---------------------------------------------------------------------------
+
+class Zamba2:
+    """cfg.attn_every Mamba2 layers per shared-attention application."""
+
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.num_layers % cfg.attn_every == 0
+        self.cfg = cfg
+        self.num_apps = cfg.num_layers // cfg.attn_every
+        self.dtype = {"float32": jnp.float32,
+                      "bfloat16": jnp.bfloat16}[cfg.param_dtype]
+
+    def init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 8)
+        layer_keys = jax.random.split(ks[0], cfg.num_layers)
+        stacked = jax.vmap(lambda k: mamba_init(cfg, k, self.dtype))(layer_keys)
+        shared = {
+            "in_proj": L.dense_init(ks[1], 2 * cfg.d_model, cfg.d_model,
+                                    self.dtype),
+            "ln1": jnp.ones(cfg.d_model),
+            "attn": A.gqa_init(cfg, ks[2], self.dtype),
+            "ln2": jnp.ones(cfg.d_model),
+            "mlp": L.mlp_init(ks[3], cfg.d_model, cfg.d_ff, self.dtype),
+            # per-application output projections (cheap, application-specific)
+            "out_proj": jnp.stack([
+                L.dense_init(jax.random.fold_in(ks[4], i), cfg.d_model,
+                             cfg.d_model, self.dtype, scale=0.5)
+                for i in range(self.num_apps)]),
+        }
+        return {
+            "embed": L.embed_init(ks[5], cfg.vocab_size, cfg.d_model, self.dtype),
+            "layers": stacked,
+            "shared": shared,
+            "final_norm": jnp.ones(cfg.d_model),
+        }
+
+    def init_cache(self, batch: int, max_seq: int, dtype=None):
+        cfg = self.cfg
+        dtype = dtype or self.dtype
+        D = cfg.resolved_head_dim
+        mshape = mamba_cache_shape(cfg, batch)
+        return {
+            "pos": jnp.zeros((), jnp.int32),
+            "mamba": {k: jnp.zeros((cfg.num_layers,) + s, dtype)
+                      for k, s in mshape.items()},
+            "attn_k": jnp.zeros((self.num_apps, batch, max_seq,
+                                 cfg.num_kv_heads, D), dtype),
+            "attn_v": jnp.zeros((self.num_apps, batch, max_seq,
+                                 cfg.num_kv_heads, D), dtype),
+        }
+
+    def _shared_block(self, params, h, emb, app_idx, *, positions,
+                      kv=None, cache_pos=None):
+        cfg = self.cfg
+        s = params["shared"]
+        u = L.linear(jnp.concatenate([h, emb], axis=-1), s["in_proj"])
+        a_in = L.rmsnorm(u, s["ln1"])
+        attn_out, new_kv = A.gqa_apply(cfg, s["attn"], a_in,
+                                       positions=positions, cache=kv,
+                                       cache_pos=cache_pos)
+        u = u + attn_out
+        u = u + L.mlp_apply(s["mlp"], L.rmsnorm(u, s["ln2"]), cfg.activation)
+        return h + L.linear(u, s["out_proj"][app_idx]), new_kv
+
+    def _trunk(self, params, x, positions, cache=None, cache_pos=None):
+        cfg = self.cfg
+        emb = x
+        k_every = cfg.attn_every
+        new_cache = None if cache is None else jax.tree.map(lambda a: a, cache)
+
+        for app in range(self.num_apps):
+            kv = None
+            if cache is not None:
+                kv = {"k": cache["attn_k"][app], "v": cache["attn_v"][app]}
+            x, new_kv = self._shared_block(params, x, emb, app,
+                                           positions=positions, kv=kv,
+                                           cache_pos=cache_pos)
+            if cache is not None:
+                new_cache["attn_k"] = new_cache["attn_k"].at[app].set(new_kv["k"])
+                new_cache["attn_v"] = new_cache["attn_v"].at[app].set(new_kv["v"])
+
+            lo = app * k_every
+            sl = jax.tree.map(lambda a: a[lo:lo + k_every], params["layers"])
+
+            if cache is None:
+                def body(h, layer_params):
+                    h, _ = mamba_apply(cfg, layer_params, h)
+                    return h, None
+                if cfg.remat:
+                    body = jax.checkpoint(body)
+                if cfg.unroll_layers:
+                    for i in range(k_every):
+                        x, _ = body(x, jax.tree.map(lambda a: a[i], sl))
+                else:
+                    x, _ = jax.lax.scan(body, x, sl)
+            else:
+                mc = jax.tree.map(lambda a: a[lo:lo + k_every], cache["mamba"])
+
+                def body_c(h, xs):
+                    layer_params, layer_cache = xs
+                    h, nc = mamba_apply(cfg, layer_params, h, cache=layer_cache)
+                    return h, nc
+                if cfg.unroll_layers:
+                    parts = []
+                    for i in range(k_every):
+                        x, nc = body_c(x, jax.tree.map(lambda a: a[i], (sl, mc)))
+                        parts.append(nc)
+                    new_mc = jax.tree.map(lambda *ls: jnp.stack(ls), *parts)
+                else:
+                    x, new_mc = jax.lax.scan(body_c, x, (sl, mc))
+                new_cache["mamba"] = jax.tree.map(
+                    lambda full, part: jax.lax.dynamic_update_slice_in_dim(
+                        full, part, lo, axis=0),
+                    new_cache["mamba"], new_mc)
+        return x, new_cache
+
+    # -- public API (matches TransformerLM) --------------------------------
+    def forward_train(self, params, batch):
+        tokens = batch["tokens"]
+        x = params["embed"][tokens]
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        x, _ = self._trunk(params, x, positions)
+        logits = jnp.einsum("bsd,vd->bsv", L.rmsnorm(x, params["final_norm"]),
+                            params["embed"], preferred_element_type=jnp.float32)
+        return logits, 0.0
+
+    def prefill(self, params, batch, cache):
+        tokens = batch["tokens"]
+        x = params["embed"][tokens]
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        x, cache = self._trunk(params, x, positions, cache=cache, cache_pos=0)
+        cache["pos"] = jnp.asarray(S, jnp.int32)
+        logits = jnp.einsum("bsd,vd->bsv",
+                            L.rmsnorm(x[:, -1:], params["final_norm"]),
+                            params["embed"], preferred_element_type=jnp.float32)
+        return logits, cache
+
+    def decode_step(self, params, token, cache):
+        x = params["embed"][token]
+        B = x.shape[0]
+        pos = cache["pos"]
+        positions = jnp.full((B, 1), pos, jnp.int32)
+        x, cache = self._trunk(params, x, positions, cache=cache, cache_pos=pos)
+        cache["pos"] = pos + 1
+        logits = jnp.einsum("bsd,vd->bsv", L.rmsnorm(x, params["final_norm"]),
+                            params["embed"], preferred_element_type=jnp.float32)
+        return logits, cache
+
+    def loss_fn(self, params, batch):
+        logits, _ = self.forward_train(params, batch)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        ll = jnp.take_along_axis(logp, batch["targets"][..., None], axis=-1)[..., 0]
+        loss = -jnp.mean(ll)
+        return loss, {"ce": loss, "aux": 0.0}

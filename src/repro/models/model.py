@@ -1,0 +1,31 @@
+"""Unified model builder: ``build_model(cfg)`` -> family-specific model with a
+common interface:
+
+    model.init(key) -> params
+    model.loss_fn(params, batch) -> (loss, metrics)      # train objective
+    model.forward_train(params, batch) -> (logits, aux)
+    model.init_cache(batch, max_seq) -> cache            # None for encoders
+    model.prefill(params, batch, cache) -> (logits, cache)
+    model.decode_step(params, token, cache) -> (logits, cache)
+"""
+from __future__ import annotations
+
+from repro.models.config import ModelConfig, reduce_for_smoke
+from repro.models.encoder import Encoder
+from repro.models.mamba2 import Zamba2
+from repro.models.transformer import TransformerLM
+from repro.models.xlstm import XLSTM
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family == "audio":
+        return Encoder(cfg)
+    if cfg.family == "hybrid":
+        return Zamba2(cfg)
+    if cfg.family == "ssm":
+        return XLSTM(cfg)
+    # dense / moe / vlm share the TransformerLM trunk
+    return TransformerLM(cfg)
+
+
+__all__ = ["ModelConfig", "build_model", "reduce_for_smoke"]

@@ -1,0 +1,311 @@
+"""Decoder-only transformer LM covering the dense / MoE / VLM-backbone archs
+(qwen2.5, smollm, olmo, gemma2, phi-3-vision backbone, granite-moe,
+deepseek-v2-lite).
+
+Layers are *stacked* ([L, ...] leaves) and executed with ``jax.lax.scan`` so
+54-layer models lower to a small HLO (essential for 512-device AOT compiles
+on this container).  Heterogeneous layer patterns are handled by stacking a
+repeating *group* of layers and scanning over groups:
+  * gemma2: group = (local, global)            -> scan over L/2 groups
+  * deepseek: first k dense layers unrolled, then scan over MoE layers
+All other archs: group = 1 uniform layer.
+
+The same block code serves training (no cache), prefill (cache write) and
+decode (cache append) — see models/attention.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models.config import ModelConfig
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# one transformer block
+# ---------------------------------------------------------------------------
+
+def block_init(cfg: ModelConfig, key, *, is_moe: bool, dtype):
+    norm_init, _ = L.make_norm(cfg)
+    ks = jax.random.split(key, 8)
+    attn_init = A.mla_init if cfg.mla else A.gqa_init
+    p = {
+        "ln1": norm_init(ks[0]),
+        "attn": attn_init(cfg, ks[1], dtype),
+        "ln2": norm_init(ks[2]),
+    }
+    if is_moe:
+        p["moe"] = MOE.moe_init(cfg, ks[3], dtype)
+    else:
+        p["mlp"] = L.mlp_init(ks[3], cfg.d_model, cfg.d_ff, dtype)
+    if cfg.post_block_norms:                      # gemma2 sandwich norms
+        p["ln1_post"] = norm_init(ks[4])
+        p["ln2_post"] = norm_init(ks[5])
+    return p
+
+
+def block_apply(cfg: ModelConfig, params, x, *, positions, window,
+                cache=None, cache_pos=None, is_moe: bool = False):
+    from repro.distributed.sharding import constrain
+    _, norm = L.make_norm(cfg)
+    attn_apply = A.mla_apply if cfg.mla else A.gqa_apply
+    act_sh = cfg.activation_sharding
+
+    if act_sh:
+        # Propagation barrier: the residual stream is batch-sharded,
+        # model-replicated.  Keeps an attention block whose head count does
+        # not divide the model axis (e.g. smollm's 15 heads) from
+        # contaminating the MLP/vocab matmuls into full replication.
+        x = constrain(x, ("dp", None, None))
+
+    h = norm(x, params["ln1"])
+    attn_out, new_cache = attn_apply(
+        cfg, params["attn"], h, positions=positions,
+        cache=cache, cache_pos=cache_pos, window=window)
+    if cfg.post_block_norms:
+        attn_out = norm(attn_out, params["ln1_post"])
+    if act_sh:
+        attn_out = constrain(attn_out, ("dp", None, None))
+    x = x + attn_out
+
+    h = norm(x, params["ln2"])
+    if is_moe:
+        ffn_out, aux = MOE.moe_apply(cfg, params["moe"], h)
+    else:
+        ffn_out, aux = L.mlp_apply(params["mlp"], h, cfg.activation,
+                                   act_sharding=act_sh), 0.0
+    if cfg.post_block_norms:
+        ffn_out = norm(ffn_out, params["ln2_post"])
+    if act_sh:
+        ffn_out = constrain(ffn_out, ("dp", None, None))
+    return x + ffn_out, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# the full LM
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    """How the L layers decompose into (unrolled prefix, scanned groups)."""
+    prefix_moe: tuple[bool, ...]      # unrolled leading layers (deepseek dense)
+    group_windows: tuple[Optional[int], ...]   # windows within a scanned group
+    group_moe: tuple[bool, ...]
+    num_groups: int
+
+
+def layer_plan(cfg: ModelConfig) -> LayerPlan:
+    if cfg.local_global_pattern:
+        assert cfg.num_layers % 2 == 0
+        return LayerPlan((), (cfg.window, None), (False, False),
+                         cfg.num_layers // 2)
+    n_prefix = cfg.first_dense_layers
+    scanned = cfg.num_layers - n_prefix
+    is_moe = cfg.num_experts > 0
+    return LayerPlan(tuple(False for _ in range(n_prefix)),
+                     (cfg.window,), (is_moe,), scanned)
+
+
+class TransformerLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.plan = layer_plan(cfg)
+        self.dtype = _dtype(cfg.param_dtype)
+
+    # -- params ------------------------------------------------------------
+    def init(self, key) -> dict:
+        cfg, plan = self.cfg, self.plan
+        norm_init, _ = L.make_norm(cfg)
+        kemb, khead, kfinal, kpre, kstack = jax.random.split(key, 5)
+        params = {
+            "embed": L.embed_init(kemb, cfg.vocab_size, cfg.d_model, self.dtype),
+            "final_norm": norm_init(kfinal),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = L.dense_init(khead, cfg.d_model,
+                                             cfg.vocab_size, self.dtype)
+        # unrolled prefix layers
+        prefix = []
+        for i, is_moe in enumerate(plan.prefix_moe):
+            prefix.append(block_init(cfg, jax.random.fold_in(kpre, i),
+                                     is_moe=is_moe, dtype=self.dtype))
+        if prefix:
+            params["prefix"] = prefix
+        # scanned stacked groups: leaves [num_groups, ...]
+        G = len(plan.group_windows)
+
+        def init_group(key):
+            ks = jax.random.split(key, G)
+            return [block_init(cfg, ks[g], is_moe=plan.group_moe[g],
+                               dtype=self.dtype) for g in range(G)]
+
+        group_keys = jax.random.split(kstack, plan.num_groups)
+        stacked = jax.vmap(init_group)(group_keys)
+        params["layers"] = stacked
+        return params
+
+    # -- caches ------------------------------------------------------------
+    def init_cache(self, batch: int, max_seq: int, dtype=None) -> dict:
+        cfg, plan = self.cfg, self.plan
+        dtype = dtype or self.dtype
+        shape_fn = A.mla_cache_shape if cfg.mla else A.gqa_cache_shape
+
+        def zeros_for(window):
+            # ring_cache: sliding-window layers hold only `window` slots
+            s_alloc = (min(window, max_seq)
+                       if (window is not None and cfg.ring_cache) else max_seq)
+            return {k: jnp.zeros(s, dtype)
+                    for k, s in shape_fn(cfg, batch, s_alloc).items()}
+
+        cache = {"pos": jnp.zeros((), jnp.int32)}
+        if plan.prefix_moe:
+            cache["prefix"] = [zeros_for(None) for _ in plan.prefix_moe]
+        cache["layers"] = [
+            jax.tree.map(lambda z: jnp.broadcast_to(z, (plan.num_groups,) + z.shape)
+                         .astype(dtype), zeros_for(w))
+            for w in plan.group_windows
+        ]
+        return cache
+
+    # -- forward -----------------------------------------------------------
+    def _embed(self, params, tokens, vision_embeds=None):
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        if cfg.embed_scale:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+        if vision_embeds is not None:
+            x = jnp.concatenate([vision_embeds.astype(x.dtype), x], axis=1)
+        return x
+
+    def _unembed(self, params, x):
+        cfg = self.cfg
+        _, norm = L.make_norm(cfg)
+        x = norm(x, params["final_norm"])
+        w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = jnp.einsum("bsd,dv->bsv", x, w,
+                            preferred_element_type=jnp.float32)
+        if cfg.final_softcap:
+            logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+        return logits
+
+    def _run_layers(self, params, x, positions, cache=None, cache_pos=None):
+        """Shared trunk: unrolled prefix + scanned groups."""
+        cfg, plan = self.cfg, self.plan
+        aux_total = 0.0
+        new_prefix_cache = []
+        for i, is_moe in enumerate(plan.prefix_moe):
+            c = cache["prefix"][i] if cache is not None else None
+            x, nc, aux = block_apply(cfg, params["prefix"][i], x,
+                                     positions=positions, window=None,
+                                     cache=c, cache_pos=cache_pos,
+                                     is_moe=is_moe)
+            aux_total += aux
+            new_prefix_cache.append(nc)
+
+        G = len(plan.group_windows)
+
+        def scan_body(carry, xs):
+            x, aux_acc = carry
+            layer_params, layer_cache = xs
+            new_caches = []
+            for g in range(G):
+                c = layer_cache[g] if layer_cache is not None else None
+                x, nc, aux = block_apply(
+                    cfg, layer_params[g], x, positions=positions,
+                    window=plan.group_windows[g], cache=c,
+                    cache_pos=cache_pos, is_moe=plan.group_moe[g])
+                aux_acc = aux_acc + aux
+                new_caches.append(nc)
+            return (x, aux_acc), new_caches
+
+        body = scan_body
+        if cfg.remat and cache is None:
+            policy = (jax.checkpoint_policies.checkpoint_dots
+                      if cfg.remat_policy == "dots" else None)
+            body = jax.checkpoint(scan_body, policy=policy)
+
+        layer_cache = cache["layers"] if cache is not None else None
+        xs = (params["layers"], layer_cache)
+        if cfg.unroll_layers:
+            # Python loop over stacked slices: identical math, no while-loop —
+            # used by the dry-run cost calibration (XLA's HloCostAnalysis does
+            # not multiply while-loop bodies by trip count).
+            outs = []
+            for i in range(plan.num_groups):
+                xs_i = jax.tree.map(lambda a: a[i], xs)
+                (x, aux_total), nc = body((x, aux_total), xs_i)
+                outs.append(nc)
+            new_layer_caches = (jax.tree.map(
+                lambda *ls: jnp.stack(ls), *outs) if cache is not None else None)
+        else:
+            (x, aux_total), new_layer_caches = jax.lax.scan(
+                body, (x, aux_total), xs)
+
+        new_cache = None
+        if cache is not None:
+            new_cache = dict(cache)
+            if plan.prefix_moe:
+                new_cache["prefix"] = new_prefix_cache
+            new_cache["layers"] = new_layer_caches
+        return x, new_cache, aux_total
+
+    # -- public entry points -------------------------------------------------
+    def forward_train(self, params, batch):
+        """-> (logits over text positions, aux_loss)."""
+        tokens = batch["tokens"]
+        vision = batch.get("vision_embeds")
+        x = self._embed(params, tokens, vision)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        x, _, aux = self._run_layers(params, x, positions)
+        if vision is not None:
+            x = x[:, vision.shape[1]:]            # loss only on text positions
+        return self._unembed(params, x), aux
+
+    def prefill(self, params, batch, cache):
+        tokens = batch["tokens"]
+        vision = batch.get("vision_embeds")
+        x = self._embed(params, tokens, vision)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        x, cache, _ = self._run_layers(params, x, positions,
+                                       cache=cache, cache_pos=0)
+        cache["pos"] = jnp.asarray(S, jnp.int32)
+        logits = self._unembed(params, x[:, -1:])
+        return logits, cache
+
+    def decode_step(self, params, token, cache):
+        """token: i32[B, 1]; cache holds ``pos`` tokens already."""
+        x = self._embed(params, token)
+        B = x.shape[0]
+        pos = cache["pos"]
+        positions = jnp.full((B, 1), pos, jnp.int32)
+        x, cache, _ = self._run_layers(params, x, positions,
+                                       cache=cache, cache_pos=pos)
+        cache = dict(cache)
+        cache["pos"] = pos + 1
+        return self._unembed(params, x), cache
+
+    def loss_fn(self, params, batch):
+        logits, aux = self.forward_train(params, batch)
+        targets = batch["targets"]
+        mask = batch.get("loss_mask")
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+        if mask is None:
+            loss = -jnp.mean(ll)
+        else:
+            loss = -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        return loss + aux, {"ce": loss, "aux": aux}

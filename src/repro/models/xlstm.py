@@ -1,0 +1,286 @@
+"""xLSTM (sLSTM + mLSTM blocks) — arXiv:2405.04517.
+
+Blocks alternate: one sLSTM per ``slstm_every`` layers, the rest mLSTM.
+``d_ff == 0`` per the assigned config: feed-forward capacity lives inside the
+blocks (mLSTM pre-up-projection factor 2, sLSTM post-FFN factor 4/3), as in
+the paper.
+
+Both recurrences use log-space stabilized exponential gating (the paper's
+m-state trick).  Training/prefill run the recurrence with ``lax.scan`` over
+time; decode is the same cell applied once.  States are O(1) in sequence
+length, so xlstm runs the ``long_500k`` shape natively.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (matrix memory)
+# ---------------------------------------------------------------------------
+
+def mlstm_init(cfg: ModelConfig, key, dtype):
+    d = cfg.d_model
+    di = 2 * d                                   # up-projection factor 2
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": jnp.ones(d),
+        "w_up": L.dense_init(ks[0], d, di, dtype),
+        "w_gate_up": L.dense_init(ks[1], d, di, dtype),
+        "conv_w": (jax.random.normal(ks[2], (4, di)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros(di, dtype),
+        "wq": L.dense_init(ks[3], di, di, dtype),
+        "wk": L.dense_init(ks[4], di, di, dtype),
+        "wv": L.dense_init(ks[5], di, di, dtype),
+        "w_if": L.dense_init(ks[6], di, 2 * cfg.num_heads, dtype),
+        "out_norm": jnp.ones(di),
+        "w_down": L.dense_init(ks[7], di, d, dtype, scale=0.5),
+    }
+
+
+def _mlstm_cell(state, qkvif):
+    """One time step.  state: (C [B,H,Dh,Dh], n [B,H,Dh], m [B,H])."""
+    C, n, m = state
+    q, k, v, i_raw, f_raw = qkvif                 # q,k,v: [B,H,Dh]
+    Dh = q.shape[-1]
+    f_log = jax.nn.log_sigmoid(f_raw)             # [B,H]
+    m_new = jnp.maximum(f_log + m, i_raw)
+    f_act = jnp.exp(f_log + m - m_new)
+    i_act = jnp.exp(i_raw - m_new)
+    k_s = k / jnp.sqrt(Dh)
+    C = f_act[..., None, None] * C + i_act[..., None, None] * (
+        v[..., :, None] * k_s[..., None, :])      # [B,H,Dh,Dh]
+    n = f_act[..., None] * n + i_act[..., None] * k_s
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q)),
+                        jnp.exp(-m_new)) + 1e-6
+    h = jnp.einsum("bhij,bhj->bhi", C, q) / denom[..., None]
+    return (C, n, m_new), h
+
+
+def mlstm_apply(cfg: ModelConfig, params, x, *, cache=None):
+    B, S, d = x.shape
+    H = cfg.num_heads
+    di = 2 * d
+    Dh = di // H
+    resid = x
+    x = L.rmsnorm(x, params["norm"])
+    up = L.linear(x, params["w_up"])
+    gate = jax.nn.silu(L.linear(x, params["w_gate_up"]))
+
+    # causal conv feature path for q, k
+    W = params["conv_w"].shape[0]
+    if cache is None or S > 1:
+        padded = jnp.pad(up, ((0, 0), (W - 1, 0), (0, 0)))
+        conv = sum(padded[:, i:i + S, :] * params["conv_w"][i] for i in range(W))
+        conv = jax.nn.silu(conv + params["conv_b"])
+        conv_tail = jnp.pad(up, ((0, 0), (W - 1, 0), (0, 0)))[:, -(W - 1):, :]
+    else:
+        full = jnp.concatenate([cache["conv"].astype(up.dtype), up], axis=1)
+        conv = jax.nn.silu(jnp.einsum("bwc,wc->bc", full, params["conv_w"])
+                           + params["conv_b"])[:, None, :]
+        conv_tail = full[:, 1:, :]
+
+    q = L.linear(conv, params["wq"]).reshape(B, S, H, Dh).astype(jnp.float32)
+    k = L.linear(conv, params["wk"]).reshape(B, S, H, Dh).astype(jnp.float32)
+    v = L.linear(up, params["wv"]).reshape(B, S, H, Dh).astype(jnp.float32)
+    gif = L.linear(up, params["w_if"]).reshape(B, S, H, 2).astype(jnp.float32)
+    i_raw, f_raw = gif[..., 0], gif[..., 1]
+
+    if cache is None:
+        C0 = jnp.zeros((B, H, Dh, Dh), jnp.float32)
+        n0 = jnp.zeros((B, H, Dh), jnp.float32)
+        m0 = jnp.zeros((B, H), jnp.float32)
+    else:
+        C0 = cache["C"].astype(jnp.float32)
+        n0 = cache["n"].astype(jnp.float32)
+        m0 = cache["m"].astype(jnp.float32)
+
+    xs = (jnp.moveaxis(q, 1, 0), jnp.moveaxis(k, 1, 0), jnp.moveaxis(v, 1, 0),
+          jnp.moveaxis(i_raw, 1, 0), jnp.moveaxis(f_raw, 1, 0))
+    (Cn, nn, mn), hs = jax.lax.scan(_mlstm_cell, (C0, n0, m0), xs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, di).astype(resid.dtype)
+
+    h = L.rmsnorm(h, params["out_norm"]) * gate
+    out = L.linear(h, params["w_down"])
+    new_cache = None
+    if cache is not None:
+        new_cache = {"C": Cn.astype(cache["C"].dtype),
+                     "n": nn.astype(cache["n"].dtype),
+                     "m": mn.astype(cache["m"].dtype),
+                     "conv": conv_tail.astype(cache["conv"].dtype)}
+    return resid + out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (scalar memory, recurrent connections)
+# ---------------------------------------------------------------------------
+
+def slstm_init(cfg: ModelConfig, key, dtype):
+    d = cfg.d_model
+    H = cfg.num_heads
+    Dh = d // H
+    ks = jax.random.split(key, 4)
+    d_ff = int(d * 4 / 3)
+
+    def rmat(k):                                  # block-diagonal recurrent
+        return (jax.random.normal(k, (H, Dh, Dh)) / jnp.sqrt(Dh)).astype(dtype)
+
+    rks = jax.random.split(ks[1], 4)
+    return {
+        "norm": jnp.ones(d),
+        "w_in": L.dense_init(ks[0], d, 4 * d, dtype),    # z, i, f, o pre-acts
+        "r_z": rmat(rks[0]), "r_i": rmat(rks[1]),
+        "r_f": rmat(rks[2]), "r_o": rmat(rks[3]),
+        "out_norm": jnp.ones(d),
+        "ffn": L.mlp_init(ks[2], d, d_ff, dtype),
+    }
+
+
+def _slstm_cell(params):
+    def cell(state, w_in_t):
+        c, n, h, m = state                        # [B,H,Dh] each, m [B,H,Dh]
+        wz, wi, wf, wo = jnp.split(w_in_t, 4, axis=-1)     # [B, d] each
+        B = wz.shape[0]
+        H, Dh, _ = params["r_z"].shape
+        hh = h.reshape(B, H, Dh)
+
+        def rec(r, pre):
+            return pre.reshape(B, H, Dh) + jnp.einsum("bhj,hij->bhi", hh, r)
+
+        z = jnp.tanh(rec(params["r_z"], wz))
+        i_raw = rec(params["r_i"], wi)
+        f_raw = rec(params["r_f"], wf)
+        o = jax.nn.sigmoid(rec(params["r_o"], wo))
+        f_log = jax.nn.log_sigmoid(f_raw)
+        m_new = jnp.maximum(f_log + m, i_raw)
+        i_act = jnp.exp(i_raw - m_new)
+        f_act = jnp.exp(f_log + m - m_new)
+        c = f_act * c + i_act * z
+        n = f_act * n + i_act
+        h_new = o * c / jnp.maximum(n, 1e-6)
+        return (c, n, h_new, m_new), h_new
+    return cell
+
+
+def slstm_apply(cfg: ModelConfig, params, x, *, cache=None):
+    B, S, d = x.shape
+    H = cfg.num_heads
+    Dh = d // H
+    resid = x
+    xn = L.rmsnorm(x, params["norm"])
+    w_in = L.linear(xn, params["w_in"]).astype(jnp.float32)   # [B,S,4d]
+
+    if cache is None:
+        zeros = jnp.zeros((B, H, Dh), jnp.float32)
+        state = (zeros, zeros, zeros, zeros)
+    else:
+        state = tuple(cache[k].astype(jnp.float32) for k in ("c", "n", "h", "m"))
+
+    (c, n, h, m), hs = jax.lax.scan(_slstm_cell(params), state,
+                                    jnp.moveaxis(w_in, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(B, S, d).astype(resid.dtype)
+    y = L.rmsnorm(y, params["out_norm"])
+    y = y + L.mlp_apply(params["ffn"], y, "gelu")
+    new_cache = None
+    if cache is not None:
+        new_cache = {k: v.astype(cache[k].dtype)
+                     for k, v in zip(("c", "n", "h", "m"), (c, n, h, m))}
+    return resid + y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+class XLSTM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.dtype = {"float32": jnp.float32,
+                      "bfloat16": jnp.bfloat16}[cfg.param_dtype]
+        every = cfg.slstm_every or (cfg.num_layers + 1)
+        self.is_slstm = tuple((i % every) == every - 1
+                              for i in range(cfg.num_layers))
+
+    def init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, cfg.num_layers + 2)
+        layers = []
+        for i in range(cfg.num_layers):
+            init_fn = slstm_init if self.is_slstm[i] else mlstm_init
+            layers.append(init_fn(cfg, ks[i], self.dtype))
+        return {
+            "embed": L.embed_init(ks[-2], cfg.vocab_size, cfg.d_model, self.dtype),
+            "layers": layers,
+            "final_norm": jnp.ones(cfg.d_model),
+        }
+
+    def init_cache(self, batch: int, max_seq: int, dtype=None):
+        cfg = self.cfg
+        dtype = dtype or self.dtype
+        H = cfg.num_heads
+        di = 2 * cfg.d_model
+        Dh_m = di // H
+        Dh_s = cfg.d_model // H
+        caches = []
+        for i in range(cfg.num_layers):
+            if self.is_slstm[i]:
+                caches.append({k: jnp.zeros((batch, H, Dh_s), dtype)
+                               for k in ("c", "n", "h", "m")})
+            else:
+                caches.append({
+                    "C": jnp.zeros((batch, H, Dh_m, Dh_m), dtype),
+                    "n": jnp.zeros((batch, H, Dh_m), dtype),
+                    "m": jnp.zeros((batch, H), dtype),
+                    "conv": jnp.zeros((batch, 3, di), dtype),
+                })
+        return {"pos": jnp.zeros((), jnp.int32), "layers": caches}
+
+    def _trunk(self, params, x, cache=None):
+        new_layers = []
+        for i, lp in enumerate(params["layers"]):
+            apply_fn = slstm_apply if self.is_slstm[i] else mlstm_apply
+            c = cache["layers"][i] if cache is not None else None
+            if self.cfg.remat and cache is None:
+                fn = jax.checkpoint(
+                    lambda p, h, _fn=apply_fn: _fn(self.cfg, p, h)[0])
+                x, nc = fn(lp, x), None
+            else:
+                x, nc = apply_fn(self.cfg, lp, x, cache=c)
+            new_layers.append(nc)
+        new_cache = None
+        if cache is not None:
+            new_cache = {"pos": cache["pos"], "layers": new_layers}
+        return x, new_cache
+
+    def _logits(self, params, x):
+        return jnp.einsum("bsd,vd->bsv", L.rmsnorm(x, params["final_norm"]),
+                          params["embed"], preferred_element_type=jnp.float32)
+
+    def forward_train(self, params, batch):
+        x = params["embed"][batch["tokens"]]
+        x, _ = self._trunk(params, x)
+        return self._logits(params, x), 0.0
+
+    def prefill(self, params, batch, cache):
+        x = params["embed"][batch["tokens"]]
+        S = x.shape[1]
+        x, cache = self._trunk(params, x, cache=cache)
+        cache["pos"] = jnp.asarray(S, jnp.int32)
+        return self._logits(params, x[:, -1:]), cache
+
+    def decode_step(self, params, token, cache):
+        x = params["embed"][token]
+        x, cache = self._trunk(params, x, cache=cache)
+        cache["pos"] = cache["pos"] + 1
+        return self._logits(params, x), cache
+
+    def loss_fn(self, params, batch):
+        logits, _ = self.forward_train(params, batch)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        ll = jnp.take_along_axis(logp, batch["targets"][..., None], axis=-1)[..., 0]
+        loss = -jnp.mean(ll)
+        return loss, {"ce": loss, "aux": 0.0}

@@ -1,0 +1,6 @@
+from repro.streams.app import StreamApp, demo_apps
+from repro.streams.pipeline import Prefetcher, StreamConfig, TokenStream
+from repro.streams.router import PodSlice, StreamRouter, build_cluster
+
+__all__ = ["StreamApp", "demo_apps", "Prefetcher", "StreamConfig",
+           "TokenStream", "PodSlice", "StreamRouter", "build_cluster"]

@@ -1,0 +1,100 @@
+"""SPTLB-driven routing of stream apps onto pod slices.
+
+Bridges the paper's scheduler to the training runtime: StreamApps become the
+solver's entities, pod slices become tiers, and the resulting app->tier
+mapping tells each slice which stream partitions to consume.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import ClusterState, Sptlb, make_problem
+from repro.core.telemetry import PAPER_SLO_TABLE
+from repro.streams.app import StreamApp
+
+
+@dataclasses.dataclass(frozen=True)
+class PodSlice:
+    """A tier: a group of hosts within one pod with aggregate headroom."""
+    name: str
+    pod: int
+    num_hosts: int
+    flops_capacity: float          # TFLOP/s
+    hbm_capacity: float            # GB
+    task_slots: int
+    regions: tuple[int, ...]
+
+
+def build_cluster(apps: list[StreamApp], slices: list[PodSlice],
+                  *, num_regions: int = 6, move_frac: float = 0.10,
+                  seed: int = 0) -> ClusterState:
+    """Assemble a ClusterState from streaming apps + pod slices."""
+    rng = np.random.default_rng(seed)
+    N, T = len(apps), len(slices)
+    demand = np.array([[a.flops_demand, a.hbm_demand] for a in apps],
+                      np.float32)
+    tasks = np.array([a.num_partitions for a in apps], np.float32)
+    slo = np.array([a.slo for a in apps], np.int32)
+    crit = np.array([a.criticality for a in apps], np.float32)
+    capacity = np.array([[s.flops_capacity, s.hbm_capacity] for s in slices],
+                        np.float32)
+    task_limit = np.array([s.task_slots for s in slices], np.float32)
+
+    S = PAPER_SLO_TABLE.shape[1]
+    slo_allowed = (PAPER_SLO_TABLE if T == 5
+                   else np.ones((T, S), bool))
+
+    # initial placement: first feasible slice with headroom (greedy fill)
+    x0 = np.zeros(N, np.int32)
+    load = np.zeros((T, 2), np.float32)
+    for i, a in enumerate(apps):
+        ok = [t for t in range(T) if slo_allowed[t, a.slo]]
+        t = min(ok, key=lambda t: (load[t] / capacity[t]).max())
+        x0[i] = t
+        load[t] += demand[i]
+
+    problem = make_problem(
+        demand=demand, tasks=tasks, slo=slo, criticality=crit,
+        assignment0=x0, capacity=capacity, task_limit=task_limit,
+        slo_allowed=slo_allowed, move_frac=move_frac)
+
+    tier_regions = np.zeros((T, num_regions), bool)
+    for t, s in enumerate(slices):
+        tier_regions[t, list(s.regions)] = True
+    ring = np.abs(np.arange(num_regions)[:, None] - np.arange(num_regions))
+    ring = np.minimum(ring, num_regions - ring)
+    lat = (4.0 + 14.0 * ring).astype(np.float32)
+
+    return ClusterState(
+        problem=problem,
+        app_names=[a.name for a in apps],
+        tier_names=[s.name for s in slices],
+        app_region=np.array([a.data_region for a in apps], np.int32),
+        tier_regions=tier_regions,
+        region_latency=lat,
+        hosts_per_tier=np.array([s.num_hosts for s in slices], np.int32),
+        host_capacity=np.array(
+            [capacity[:, 0].sum(), capacity[:, 1].sum()], np.float32)
+            / max(sum(s.num_hosts for s in slices), 1) * 1.6,
+    )
+
+
+class StreamRouter:
+    """Holds the live app->slice routing table; re-routes via SPTLB."""
+
+    def __init__(self, cluster: ClusterState):
+        self.cluster = cluster
+        self.assignment = np.asarray(cluster.problem.assignment0).copy()
+
+    def route(self, *, engine: str = "local", variant: str = "manual_cnst"):
+        decision = Sptlb(self.cluster).balance(engine, variant=variant)
+        self.assignment = np.asarray(decision.assignment)
+        return decision
+
+    def partitions_for_tier(self, tier: int,
+                            apps: list[StreamApp]) -> dict[str, int]:
+        """Which apps (and their partition counts) this slice consumes."""
+        return {apps[i].name: apps[i].num_partitions
+                for i in np.where(self.assignment == tier)[0]}

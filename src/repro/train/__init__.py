@@ -1,0 +1,7 @@
+from repro.train.optimizer import AdamWConfig, AdamWState, adamw_init, adamw_update
+from repro.train.train_step import TrainState, init_train_state, make_train_step
+from repro.train.serve_step import make_decode_step, make_prefill
+
+__all__ = ["AdamWConfig", "AdamWState", "adamw_init", "adamw_update",
+           "TrainState", "init_train_state", "make_train_step",
+           "make_decode_step", "make_prefill"]

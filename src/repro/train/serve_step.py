@@ -1,0 +1,33 @@
+"""Serving steps: prefill and single-token decode (the dry-run "serve_step").
+
+``make_decode_step`` returns the function lowered for the decode_32k /
+long_500k cells: one new token per sequence against a full KV cache, plus
+greedy sampling of the next token.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def make_prefill(model) -> Callable:
+    def prefill(params, batch, cache):
+        logits, cache = model.prefill(params, batch, cache)
+        next_token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_token[:, None], cache
+    return prefill
+
+
+def make_decode_step(model) -> Callable:
+    def serve_step(params, token, cache):
+        logits, cache = model.decode_step(params, token, cache)
+        next_token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_token[:, None], cache
+    return serve_step
+
+
+def abstract_cache(model, batch: int, max_seq: int):
+    """Shape-only cache (no allocation) for the dry-run."""
+    return jax.eval_shape(lambda: model.init_cache(batch, max_seq))

@@ -1,0 +1,102 @@
+"""Training step factory: loss -> grad -> AdamW update, as a single jittable
+function suitable for pjit (dry-run AOT compile) and the live driver.
+
+Microbatching (gradient accumulation) runs as a ``lax.scan`` over microbatch
+slices — the standard memory/throughput knob for the perf pass.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optimizer import AdamWConfig, AdamWState, adamw_init, adamw_update
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    step: jax.Array
+    compress_err: Any = None        # gradient-compression error feedback
+
+
+def init_train_state(model, key, *, compressor=None) -> TrainState:
+    params = model.init(key)
+    err = compressor.init_state(params) if compressor is not None else None
+    return TrainState(params=params, opt=adamw_init(params),
+                      step=jnp.zeros((), jnp.int32), compress_err=err)
+
+
+def abstract_train_state(model, key) -> TrainState:
+    """Shape-only TrainState (no allocation) for the dry-run."""
+    return jax.eval_shape(lambda k: init_train_state(model, k), key)
+
+
+def make_train_step(model, opt_cfg: AdamWConfig = AdamWConfig(),
+                    *, microbatches: int = 1, unroll: bool = False,
+                    compressor=None) -> Callable:
+    """-> train_step(state, batch) -> (state, metrics).
+
+    ``unroll`` runs the microbatch loop as a python loop instead of
+    ``lax.scan`` — used by the dry-run cost calibration (HloCostAnalysis
+    counts while-loop bodies once).
+
+    ``compressor`` (distributed.compress.GradCompressor): gradients cross
+    the optimizer boundary in compressed form with error feedback carried
+    in TrainState — the transform the inter-pod (DCN) reduction applies in
+    deployment (see EXPERIMENTS.md §Multi-pod).
+    """
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss_fn(params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(state.params, batch)
+        else:
+            # Static reshape [B, ...] -> [mb, B/mb, ...]: microbatches flow
+            # through scan xs, so the (sharded) batch dim is never sliced at
+            # a traced offset (a dynamic slice on a sharded dim forces an
+            # all-gather and replicates the step — measured in §Perf C).
+            def to_mb(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches)
+                                 + x.shape[1:])
+            batch_mb = jax.tree.map(to_mb, batch)
+
+            def mb_body(acc, mb_batch):
+                (l, m), g = grad_fn(state.params, mb_batch)
+                acc_g, acc_l = acc
+                return (jax.tree.map(jnp.add, acc_g, g), acc_l + l), m
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            acc0 = (zero_g, jnp.zeros((), jnp.float32))
+            if unroll:
+                for i in range(microbatches):
+                    acc0, metrics = mb_body(
+                        acc0, jax.tree.map(lambda x: x[i], batch_mb))
+                grads, loss = acc0
+            else:
+                (grads, loss), metrics = jax.lax.scan(
+                    mb_body, acc0, batch_mb)
+                metrics = jax.tree.map(lambda m: m[-1], metrics)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+
+        compress_err = state.compress_err
+        if compressor is not None:
+            comp, compress_err = compressor.compress(grads, compress_err)
+            grads = compressor.decompress(comp)
+
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt_cfg, grads, state.opt, state.params)
+        out_metrics = {"loss": loss, **metrics, **opt_metrics}
+        return TrainState(new_params, new_opt, state.step + 1,
+                          compress_err), out_metrics
+
+    return train_step
