@@ -8,6 +8,8 @@ from __future__ import annotations
 import sys
 import time
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import generate_cluster
@@ -24,6 +26,29 @@ TIMEOUTS = (30, 60, 600)
 
 def load_cluster(num_apps: int = NUM_APPS, seed: int = SEED):
     return generate_cluster(num_apps=num_apps, seed=seed)
+
+
+def random_problem_arrays(N: int, T: int, seed: int = 0):
+    """Flat random arrays in the move_eval kernel signature order.
+
+    Shared by the solver benchmarks and the kernel parity tests (tests must
+    not be imported by benchmarks, so the builder lives here).
+    """
+    rng = np.random.default_rng(seed)
+    demand = jnp.asarray(rng.lognormal(1, 0.8, (N, 2)), jnp.float32)
+    tasks = jnp.asarray(rng.integers(1, 40, N), jnp.float32)
+    crit = jnp.asarray(rng.random(N), jnp.float32)
+    x = jnp.asarray(rng.integers(0, T, N), jnp.int32)
+    x0 = jnp.asarray(rng.integers(0, T, N), jnp.int32)
+    cap = jnp.asarray(rng.uniform(400, 900, (T, 2)), jnp.float32)
+    klim = jnp.asarray(rng.uniform(800, 2000, T), jnp.float32)
+    ideal = jnp.full((T, 2), 0.7, jnp.float32)
+    ideal_t = jnp.full((T,), 0.8, jnp.float32)
+    util = jax.ops.segment_sum(demand, x, num_segments=T)
+    ttasks = jax.ops.segment_sum(tasks, x, num_segments=T)
+    w = jnp.asarray([1e4, 1e3, 1e2, 1e1, 1e0], jnp.float32)
+    return (demand, tasks, crit, x, x0, cap, klim, ideal, ideal_t,
+            util, ttasks, w)
 
 
 def emit(name: str, us_per_call: float, derived):

@@ -1,40 +1,46 @@
-"""Solver hot-spot scaling: move_eval throughput + LocalSearch iteration rate
-vs problem size (the paper's "TBs per second" scale argument applied to the
-scheduler itself).
+"""Solver hot-spot scaling: move_eval throughput, batched-vs-single-move
+LocalSearch iteration rate, cooperation-round phase split, and jit-cache
+behaviour under drifting app counts (the paper's "TBs per second" scale
+argument applied to the scheduler itself).
 
-Also benches the Pallas kernel in interpret mode for *correct-path* parity;
+Emits CSV rows like every other benchmark AND writes ``BENCH_solver.json``
+at the repo root so the solver-throughput trajectory is tracked PR-over-PR:
+  * local_search: committed moves/sec for batch_moves=1 vs 16 (the tentpole
+    acceptance number: >=5x at N=10_000),
+  * cooperate: per-phase wall-clock split of a manual_cnst pass (solve vs
+    host-side region/host/feedback Python),
+  * bucketing: LocalSearch retrace counts across drifting app counts with
+    shape-bucketed padding on vs off.
+
+Also benches the Pallas kernels in interpret mode for *correct-path* parity;
 interpret-mode timing is NOT a TPU number (the roofline for the kernel is
 derived in EXPERIMENTS.md §Roofline from its arithmetic intensity instead).
+
+``--smoke`` shrinks every size so CI can run the whole file in seconds.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import comment, emit
-from repro.core import LocalSearchConfig, generate_cluster, solve_local
+from benchmarks.common import comment, emit, random_problem_arrays
+from repro.core import (LocalSearchConfig, Sptlb, generate_cluster,
+                        solve_local)
+from repro.core.sptlb import engine_fn
+from repro.core.solver_local import local_search_trace_count
 from repro.kernels import ops
+
+RESULTS: dict = {}
 
 
 def bench_move_eval(N: int, T: int, reps: int = 5):
-    rng = np.random.default_rng(0)
-    demand = jnp.asarray(rng.lognormal(1, 0.8, (N, 2)), jnp.float32)
-    tasks = jnp.asarray(rng.integers(1, 40, N), jnp.float32)
-    crit = jnp.asarray(rng.random(N), jnp.float32)
-    x = jnp.asarray(rng.integers(0, T, N), jnp.int32)
-    x0 = jnp.asarray(rng.integers(0, T, N), jnp.int32)
-    cap = jnp.asarray(rng.uniform(400, 900, (T, 2)), jnp.float32)
-    klim = jnp.asarray(rng.uniform(800, 2000, T), jnp.float32)
-    ideal = jnp.full((T, 2), 0.7, jnp.float32)
-    ideal_t = jnp.full((T,), 0.8, jnp.float32)
-    util = jax.ops.segment_sum(demand, x, num_segments=T)
-    tt = jax.ops.segment_sum(tasks, x, num_segments=T)
-    w = jnp.asarray([1e4, 1e3, 1e2, 1e1, 1e0], jnp.float32)
-    args = (demand, tasks, crit, x, x0, cap, klim, ideal, ideal_t, util, tt, w)
-
+    args = random_problem_arrays(N, T, seed=0)
     fn = jax.jit(lambda *a: ops.move_eval(*a, impl="xla"))
     fn(*args).block_until_ready()
     times = []
@@ -46,41 +52,137 @@ def bench_move_eval(N: int, T: int, reps: int = 5):
     candidates_per_s = N * T / (us / 1e6)
     emit(f"solver_scale/move_eval/N{N}xT{T}", us,
          f"candidates_per_s={candidates_per_s:.3e}")
+    RESULTS.setdefault("move_eval", {})[f"N{N}xT{T}"] = {
+        "us_per_sweep": us, "candidates_per_s": candidates_per_s}
     return us
 
 
-def bench_local_search(N: int, iters: int = 64):
+def bench_local_search_batched(N: int, sweeps: int = 64, batch: int = 16):
+    """Committed-moves/sec of the top-k batched path vs the single-move path.
+
+    Both variants run the same candidate-sweep budget; rate is measured on a
+    second (jit-warm) run.
+    """
     cluster = generate_cluster(num_apps=N, seed=1)
     p = cluster.problem
-    solve_local(p, LocalSearchConfig(max_iters=4))        # compile
-    t0 = time.perf_counter()
-    res = solve_local(p, LocalSearchConfig(max_iters=iters))
-    dt = time.perf_counter() - t0
-    emit(f"solver_scale/local_search/N{N}", dt * 1e6,
-         f"iters={res.iterations};iters_per_s={res.iterations / dt:.1f};"
-         f"moved={res.num_moved}")
-    return dt
+    rates = {}
+    for bm in (1, batch):
+        cfg = LocalSearchConfig(max_iters=sweeps, batch_moves=bm)
+        solve_local(p, cfg)                                  # compile + warm
+        t0 = time.perf_counter()
+        res = solve_local(p, cfg)
+        dt = time.perf_counter() - t0
+        committed = res.extra["committed_moves"]
+        rate = committed / dt if dt > 0 else float("inf")
+        rates[bm] = rate
+        emit(f"solver_scale/local_search/N{N}/batch{bm}", dt * 1e6,
+             f"sweeps={res.extra['sweeps']};committed={committed};"
+             f"moves_per_s={rate:.1f};objective={res.objective:.4g}")
+        RESULTS.setdefault("local_search", {}).setdefault(f"N{N}", {})[
+            f"batch{bm}"] = {
+                "seconds": dt, "sweeps": res.extra["sweeps"],
+                "committed_moves": committed, "moves_per_s": rate,
+                "objective": res.objective}
+    speedup = rates[batch] / rates[1] if rates[1] > 0 else float("inf")
+    comment(f"N={N}: batched committed-move rate speedup = {speedup:.1f}x")
+    RESULTS["local_search"][f"N{N}"]["speedup"] = speedup
+    return speedup
 
 
-def run():
-    comment("--- solver hot-spot scaling (XLA path, CPU) ---")
-    for N, T in ((1_000, 5), (10_000, 16), (100_000, 64), (100_000, 128)):
-        bench_move_eval(N, T)
-    for N in (300, 1_000, 3_000, 10_000):
-        bench_local_search(N)
-    # Pallas interpret-mode parity (not a perf number on CPU)
-    rngN, rngT = 4_096, 128
+def bench_cooperate(N: int, timeout_s: int = 8):
+    """Phase split of a manual_cnst cooperation pass (solve vs host-side)."""
+    cluster = generate_cluster(num_apps=N, seed=2)
+    s = Sptlb(cluster)
+    s.balance("local", timeout_s=timeout_s, variant="manual_cnst")  # warm jit
+    d = s.balance("local", timeout_s=timeout_s, variant="manual_cnst")
+    tm = dict(d.cooperation.timings)
+    emit(f"solver_scale/cooperate/N{N}", tm["total_s"] * 1e6,
+         f"rounds={d.cooperation.feedback_rounds};"
+         f"rejections={d.cooperation.num_rejections};"
+         f"solve_s={tm['solve_s']:.3f};region_s={tm['region_s']:.4f};"
+         f"host_s={tm['host_s']:.4f};feedback_s={tm['feedback_s']:.4f};"
+         f"host_side_frac={tm['host_side_frac']:.3f}")
+    RESULTS.setdefault("cooperate", {})[f"N{N}"] = {
+        "rounds": d.cooperation.feedback_rounds,
+        "rejections": d.cooperation.num_rejections, **tm}
+    return tm
+
+
+def bench_bucketing(sizes: tuple, timeout_s: int = 4):
+    """LocalSearch retrace counts across drifting app counts."""
+    counts = {}
+    for bucketed in (True, False):
+        total = 0
+        for i, N in enumerate(sizes):
+            cluster = generate_cluster(num_apps=N, seed=10 + i)
+            fn = engine_fn("local", timeout_s, bucket_apps=bucketed)
+            before = local_search_trace_count()
+            fn(cluster.problem)
+            total += local_search_trace_count() - before
+        counts["bucketed" if bucketed else "unbucketed"] = total
+    emit(f"solver_scale/bucketing/{'x'.join(map(str, sizes))}", 0.0,
+         f"retraces_bucketed={counts['bucketed']};"
+         f"retraces_unbucketed={counts['unbucketed']}")
+    RESULTS["bucketing"] = {"sizes": list(sizes), **counts}
+    return counts
+
+
+def bench_pallas_parity(N: int, T: int):
     t0 = time.perf_counter()
-    comment("pallas interpret-mode parity check (runs the kernel body)")
-    from tests.test_kernels import _random_problem_arrays  # reuse builder
-    args = _random_problem_arrays(rngN, rngT, seed=7)
+    comment("pallas interpret-mode parity check (runs the kernel bodies)")
+    args = random_problem_arrays(N, T, seed=7)
     d_ref = ops.move_eval(*args, impl="xla")
     d_pal = ops.move_eval(*args, impl="pallas")
     err = float(jnp.max(jnp.abs(d_ref - d_pal))
                 / (jnp.max(jnp.abs(d_ref)) + 1e-9))
-    emit("solver_scale/move_eval_pallas_parity", (time.perf_counter() - t0) * 1e6,
-         f"rel_err={err:.2e}")
+    emit("solver_scale/move_eval_pallas_parity",
+         (time.perf_counter() - t0) * 1e6, f"rel_err={err:.2e}")
+    t0 = time.perf_counter()
+    feas = jnp.ones((N, T), bool)
+    s_ref, t_ref = ops.move_eval_best(*args, feas, jnp.int32(5), impl="xla")
+    s_pal, t_pal = ops.move_eval_best(*args, feas, jnp.int32(5), impl="pallas")
+    finite = np.isfinite(np.asarray(s_ref))
+    scale = float(jnp.max(jnp.abs(jnp.where(finite, s_ref, 0.0)))) + 1e-9
+    err = float(np.max(np.abs((np.asarray(s_pal) - np.asarray(s_ref))[finite]))
+                / scale)
+    tier_agree = float(np.mean(np.asarray(t_pal)[finite]
+                               == np.asarray(t_ref)[finite]))
+    emit("solver_scale/move_eval_best_pallas_parity",
+         (time.perf_counter() - t0) * 1e6,
+         f"rel_err={err:.2e};tier_agreement={tier_agree:.3f}")
+    RESULTS["pallas_parity"] = {"rel_err": err, "tier_agreement": tier_agree}
+
+
+def run(smoke: bool = False):
+    comment(f"--- solver hot-spot scaling (XLA path, CPU{', smoke' if smoke else ''}) ---")
+    if smoke:
+        for N, T in ((1_000, 5), (2_000, 16)):
+            bench_move_eval(N, T)
+        bench_local_search_batched(500, sweeps=16)
+        bench_cooperate(400, timeout_s=4)
+        bench_bucketing((300, 320, 350), timeout_s=4)
+        bench_pallas_parity(512, 16)
+    else:
+        for N, T in ((1_000, 5), (10_000, 16), (100_000, 64), (100_000, 128)):
+            bench_move_eval(N, T)
+        for N in (1_000, 3_000):
+            bench_local_search_batched(N, sweeps=32)
+        bench_local_search_batched(10_000, sweeps=64)   # the acceptance number
+        bench_cooperate(10_000, timeout_s=8)
+        bench_bucketing((3_000, 3_100, 3_250), timeout_s=4)
+        bench_pallas_parity(4_096, 128)
+
+    # Smoke numbers must not clobber the tracked fleet-scale record.
+    name = "BENCH_solver_smoke.json" if smoke else "BENCH_solver.json"
+    out_path = os.path.normpath(os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "..", name))
+    with open(out_path, "w") as f:
+        json.dump(RESULTS, f, indent=2, sort_keys=True)
+    comment(f"wrote {out_path}")
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes for CI (seconds, not minutes)")
+    run(**vars(ap.parse_args()))

@@ -1,6 +1,7 @@
 """SPTLB core: the paper's contribution as a composable JAX module."""
-from repro.core.problem import (GoalWeights, Problem, make_problem,
-                                tier_loads, utilization_fraction)
+from repro.core.problem import (GoalWeights, Problem, bucket_size,
+                                make_problem, pad_problem, tier_loads,
+                                utilization_fraction)
 from repro.core.goals import goal_terms, objective
 from repro.core.constraints import Violations, validate
 from repro.core.solver_local import LocalSearchConfig, SolveResult, solve_local
@@ -15,7 +16,8 @@ from repro.core.sptlb import BalanceDecision, Sptlb, engine_fn
 from repro.core.controller import BalanceController, ControllerConfig
 
 __all__ = [
-    "GoalWeights", "Problem", "make_problem", "tier_loads",
+    "GoalWeights", "Problem", "bucket_size", "make_problem", "pad_problem",
+    "tier_loads",
     "utilization_fraction", "goal_terms", "objective", "Violations",
     "validate", "LocalSearchConfig", "SolveResult", "solve_local",
     "OptimalSearchConfig", "solve_optimal", "GreedyConfig", "solve_greedy",

@@ -16,6 +16,23 @@ import jax.numpy as jnp
 
 from repro.core.problem import Problem, tier_loads
 
+# Absolute slack on the destination-headroom checks (constraints 1-2).  The
+# single source of truth for every re-statement of the fit test: move_mask,
+# the fused-best oracle (delta.move_best_per_app), the batched commit scan
+# (solver_local), and the Pallas kernel's fraction-space form.
+FEAS_TOL = 1e-6
+
+
+def destination_fits(demand: jax.Array, tasks: jax.Array,
+                     capacity: jax.Array, task_limit: jax.Array,
+                     util: jax.Array, tier_tasks: jax.Array) -> jax.Array:
+    """bool[N, T]: app n's demand fits tier t's remaining headroom
+    (constraints 1 + 2, incremental form shared by all sweep paths)."""
+    fits = jnp.all(util[None, :, :] + demand[:, None, :]
+                   <= capacity[None, :, :] + FEAS_TOL, axis=-1)
+    return fits & (tier_tasks[None, :] + tasks[:, None]
+                   <= task_limit[None, :] + FEAS_TOL)
+
 
 @dataclasses.dataclass(frozen=True)
 class Violations:
@@ -91,10 +108,8 @@ def move_mask(problem: Problem, assignment: jax.Array,
     feas = problem.feasible_mask()                              # SLO + avoid
 
     # Capacity feasibility at destination: util[t] + d[n] <= C[t] (both resources).
-    fits = jnp.all(util[None, :, :] + problem.demand[:, None, :]
-                   <= problem.capacity[None, :, :] + 1e-6, axis=-1)   # [N, T]
-    fits &= (tasks[None, :] + problem.tasks[:, None]
-             <= problem.task_limit[None, :] + 1e-6)
+    fits = destination_fits(problem.demand, problem.tasks, problem.capacity,
+                            problem.task_limit, util, tasks)
 
     # Movement budget: an app not yet moved consumes budget unless target ==
     # current tier; an app already moved can re-target freely (its budget is

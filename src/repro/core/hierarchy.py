@@ -19,17 +19,30 @@ Three lower-level-scheduler integration variants for SPTLB:
 The region and host schedulers are themselves small, self-contained
 schedulers — the paper treats them as black boxes that answer accept/reject,
 and that contract is exactly what we implement.
+
+Fleet-scale feedback rounds: the original per-app Python loops made every
+``manual_cnst`` round O(moved * T) Python-interpreter work.  The region
+scheduler now precomputes a [G, T] worst-case-latency matrix once (one
+vectorized max over ``region_latency``), so a whole proposal is vetted with
+one fancy-indexing gather; the host scheduler packs sorted demand arrays in
+one compiled ``lax.scan`` on device instead of a per-item Python loop; and
+the rejection->avoid-constraint feedback pass is pure array ops over the
+moved set.  ``cooperate`` reports per-phase wall-clock timings
+(solve / region / host / feedback) in ``CooperationResult.timings`` and in
+``SolveResult.extra["coop_timings"]`` so the split is observable.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+from functools import partial
 from typing import Callable, Literal
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.problem import Problem
+from repro.core.problem import Problem, bucket_size
 from repro.core.solver_local import SolveResult
 from repro.core.telemetry import ClusterState
 
@@ -47,17 +60,61 @@ class RegionScheduler:
     def __init__(self, cluster: ClusterState, latency_budget_ms: float = 36.0):
         self.cluster = cluster
         self.budget = latency_budget_ms
+        c = cluster
+        # Worst-case latency from each source region to each tier [G, T]:
+        # host capacity is fungible across a tier's regions, so the guarantee
+        # must hold for the worst region the tier may place the app in (max),
+        # not the best.  One vectorized max replaces the per-(app, tier)
+        # Python rescans of ``region_latency``.
+        self._worst_ms = np.where(
+            c.tier_regions.T[None, :, :],                  # [1, G, T] region in tier?
+            c.region_latency[:, :, None],                  # [G, G, 1]
+            -np.inf,
+        ).max(axis=1)                                      # [G, T]
+        # A tier with no regions has no hosts anywhere near any data source:
+        # reject placements into it (the pre-vectorization code raised on
+        # the empty reduction; -inf would silently *accept*).
+        self._worst_ms[:, ~c.tier_regions.any(axis=1)] = np.inf
 
     def check(self, app: int, tier: int) -> bool:
-        """Accept iff *any* host region the tier may place the app in stays
-        within the latency budget of the app's data source — the region
-        scheduler can steer placement within a tier, but host capacity is
-        fungible across the tier's regions, so the guarantee must hold for
-        the worst region (max), not the best."""
-        c = self.cluster
-        dst_regions = np.where(c.tier_regions[tier])[0]
-        worst = c.region_latency[c.app_region[app], dst_regions].max()
-        return bool(worst <= self.budget)
+        """Accept iff the tier's worst region stays within the budget."""
+        return bool(self._worst_ms[self.cluster.app_region[app], tier]
+                    <= self.budget)
+
+    def check_many(self, apps: np.ndarray, tiers: np.ndarray) -> np.ndarray:
+        """Vectorized ``check`` over (app, tier) pairs -> bool[len(apps)]."""
+        apps = np.asarray(apps, np.int64)
+        tiers = np.asarray(tiers, np.int64)
+        return self._worst_ms[self.cluster.app_region[apps], tiers] <= self.budget
+
+    def feasibility_matrix(self) -> np.ndarray:
+        """bool[N, T]: the full region-feasibility matrix for every app."""
+        return self._worst_ms[self.cluster.app_region] <= self.budget
+
+
+@partial(jax.jit, static_argnames=("num_hosts",))
+def _pack_ffd(demand_sorted: jax.Array, capacity: jax.Array,
+              *, num_hosts: int) -> jax.Array:
+    """First-fit packing of pre-sorted items into ``num_hosts`` identical
+    bins, as one compiled ``lax.scan`` — bitwise the same accept/reject
+    decisions as the seed's per-item numpy loop (same f32 subtracts in the
+    same order, first fit == lowest host index), with zero per-item Python.
+
+    ``demand_sorted`` may be bucket-padded with zero rows: a zero item fits
+    host 0 and consumes nothing, so padding never changes the packing.
+    Returns rejected bool[M].
+    """
+    hosts0 = jnp.tile(capacity[None, :], (num_hosts, 1))
+
+    def step(hosts, d):
+        fit = jnp.all(hosts >= d[None, :], axis=1)
+        any_fit = jnp.any(fit)
+        h = jnp.argmax(fit)                                 # first fit
+        hosts = hosts.at[h].add(jnp.where(any_fit, -d, 0.0))
+        return hosts, ~any_fit
+
+    _, rejected = jax.lax.scan(step, hosts0, demand_sorted)
+    return rejected
 
 
 class HostScheduler:
@@ -67,6 +124,11 @@ class HostScheduler:
     packing — "if there are available hosts to allocate the application to,
     it accepts the mapping".  Rejections name the specific apps that failed
     to pack (the ones whose placement SPTLB must avoid).
+
+    Packing runs on device (``_pack_ffd``): the sorted demand array is
+    bucket-padded to a power-of-two length so repeated feedback rounds with
+    drifting app counts reuse one compiled executable per (bucket, tier
+    size), and the host side of a cooperation round does no per-app Python.
     """
 
     def __init__(self, cluster: ClusterState):
@@ -75,18 +137,19 @@ class HostScheduler:
     def check_tier(self, tier: int, apps: np.ndarray) -> list[int]:
         """Returns the app ids that could NOT be packed into this tier."""
         c = self.cluster
+        apps = np.asarray(apps, np.int64)
+        if apps.size == 0:
+            return []
         demand = np.asarray(c.problem.demand)[apps]          # [M, R]
         order = np.argsort(-demand.max(axis=1))              # decreasing
-        hosts = np.tile(c.host_capacity, (int(c.hosts_per_tier[tier]), 1))
-        rejected: list[int] = []
-        for i in order:
-            fit = np.all(hosts >= demand[i], axis=1)
-            if not fit.any():
-                rejected.append(int(apps[i]))
-                continue
-            h = int(np.argmax(fit))                          # first fit
-            hosts[h] -= demand[i]
-        return rejected
+        M = apps.size
+        Mb = bucket_size(M, minimum=128)
+        d_sorted = np.zeros((Mb, demand.shape[1]), demand.dtype)
+        d_sorted[:M] = demand[order]
+        rejected = np.asarray(_pack_ffd(
+            jnp.asarray(d_sorted), jnp.asarray(c.host_capacity),
+            num_hosts=int(c.hosts_per_tier[tier])))[:M]
+        return [int(a) for a in apps[order][rejected]]
 
 
 @dataclasses.dataclass
@@ -97,21 +160,33 @@ class CooperationResult:
     num_rejections: int
     total_time_s: float
     accepted: bool
+    # Per-phase wall-clock split: solve_s (device solver), region_s / host_s
+    # (lower-level scheduler checks), feedback_s (avoid-matrix construction),
+    # host_side_frac (everything except solve_s, as a fraction of the total).
+    timings: dict = dataclasses.field(default_factory=dict)
 
 
 def region_overlap_avoid(cluster: ClusterState) -> np.ndarray:
     """w_cnst static constraint: avoid[n, t] unless >50% of the regions of
     app n's current tier overlap with tier t (paper §4.2.2 item 2)."""
     c = cluster
-    T = c.tier_regions.shape[0]
-    overlap_ok = np.zeros((T, T), bool)
-    for a in range(T):
-        na = c.tier_regions[a].sum()
-        for b in range(T):
-            shared = (c.tier_regions[a] & c.tier_regions[b]).sum()
-            overlap_ok[a, b] = shared > 0.5 * na
+    regions = c.tier_regions.astype(np.int64)
+    shared = regions @ regions.T                             # [T, T]
+    na = regions.sum(axis=1)
+    overlap_ok = shared > 0.5 * na[:, None]
     x0 = np.asarray(c.problem.assignment0)
     return ~overlap_ok[x0]                                   # [N, T]
+
+
+def _finish_timings(timings: dict, total_s: float) -> dict:
+    # Everything that is not device solve time counts as host-side — the
+    # per-phase counters plus untimed glue (matrix precompute, np/jnp
+    # conversions), so the fraction cannot undercount host work.
+    timings["total_s"] = total_s
+    timings["host_side_frac"] = (
+        max(0.0, total_s - timings.get("solve_s", 0.0)) / total_s
+        if total_s > 0 else 0.0)
+    return timings
 
 
 def cooperate(
@@ -128,47 +203,63 @@ def cooperate(
     problem = cluster.problem
     region = RegionScheduler(cluster, latency_budget_ms=region_budget_ms)
     host = HostScheduler(cluster)
+    timings = {"solve_s": 0.0, "region_s": 0.0, "host_s": 0.0,
+               "feedback_s": 0.0}
 
-    if variant == "w_cnst":
-        problem = problem.with_avoid(jnp.asarray(region_overlap_avoid(cluster)))
-        res = solve_fn(problem)
-        return CooperationResult(res, variant, 1, 0, time.perf_counter() - t0, True)
+    def timed_solve(p, **kw):
+        t = time.perf_counter()
+        r = solve_fn(p, **kw)
+        timings["solve_s"] += time.perf_counter() - t
+        return r
 
-    if variant == "no_cnst":
-        res = solve_fn(problem)
-        return CooperationResult(res, variant, 1, 0, time.perf_counter() - t0, True)
+    if variant in ("no_cnst", "w_cnst"):
+        if variant == "w_cnst":
+            problem = problem.with_avoid(jnp.asarray(region_overlap_avoid(cluster)))
+        res = timed_solve(problem)
+        total = time.perf_counter() - t0
+        res.extra["coop_timings"] = _finish_timings(timings, total)
+        return CooperationResult(res, variant, 1, 0, total, True,
+                                 timings=timings)
 
     assert variant == "manual_cnst", variant
     x0 = np.asarray(problem.assignment0)
     total_rejections = 0
-    res = solve_fn(problem)
+    res = timed_solve(problem)
     rounds = 1
-    x_accepted = None
     while rounds <= max_rounds and (time.perf_counter() - t0) < timeout_s:
         x = np.asarray(res.assignment)
         moved = np.where(x != x0)[0]
-        rejected_pairs: list[tuple[int, int]] = []
 
-        # Fig. 2 order: region scheduler first...
-        region_ok = np.ones(len(moved), bool)
-        for i, n in enumerate(moved):
-            if not region.check(int(n), int(x[n])):
-                rejected_pairs.append((int(n), int(x[n])))
-                region_ok[i] = False
+        # Fig. 2 order: region scheduler first (one vectorized gather)...
+        t = time.perf_counter()
+        region_ok = region.check_many(moved, x[moved])
+        timings["region_s"] += time.perf_counter() - t
+        rej_n = [moved[~region_ok]]
+        rej_t = [x[moved[~region_ok]]]
+
         # ...then host allocation for the placements the region level kept.
         surviving = moved[region_ok]
-        for t in np.unique(x[surviving]) if len(surviving) else []:
-            apps_t = np.concatenate([
-                np.where((x == t) & (x == x0))[0],           # incumbents
-                surviving[x[surviving] == t],                # newcomers
-            ])
-            for n in host.check_tier(int(t), apps_t):
-                if x[n] != x0[n]:                            # only newcomers bounce
-                    rejected_pairs.append((int(n), int(x[n])))
+        t = time.perf_counter()
+        for tier in np.unique(x[surviving]):
+            newcomers = surviving[x[surviving] == tier]
+            incumbents = np.where((x == tier) & (x0 == tier))[0]
+            rej = np.asarray(host.check_tier(int(tier),
+                                             np.concatenate([incumbents,
+                                                             newcomers])),
+                             np.int64)
+            if rej.size:
+                rej = rej[x[rej] != x0[rej]]                 # newcomers bounce
+                rej_n.append(rej)
+                rej_t.append(x[rej])
+        timings["host_s"] += time.perf_counter() - t
 
-        if not rejected_pairs:
+        rej_n = np.concatenate(rej_n)
+        rej_t = np.concatenate(rej_t)
+        if rej_n.size == 0:
+            total = time.perf_counter() - t0
+            res.extra["coop_timings"] = _finish_timings(timings, total)
             return CooperationResult(res, variant, rounds, total_rejections,
-                                     time.perf_counter() - t0, True)
+                                     total, True, timings=timings)
 
         # Feedback: rejections become avoid constraints; re-solve, warm-
         # started from the vetted subset of the proposal.  Accepted moves are
@@ -176,36 +267,43 @@ def cooperate(
         # the solver may keep them or send them home, but not churn them to a
         # third, unvetted tier.  This makes the unknown-placement set shrink
         # every round, so the loop converges instead of exploring forever.
-        total_rejections += len(rejected_pairs)
+        # All of it is fancy-indexed array ops — no per-app Python.
+        t = time.perf_counter()
+        total_rejections += int(rej_n.size)
         extra = np.zeros((problem.num_apps, problem.num_tiers), bool)
+        extra[rej_n, rej_t] = True
         x_accepted = x.copy()
-        rejected_apps = {n for n, _ in rejected_pairs}
-        for n, t in rejected_pairs:
-            extra[n, t] = True
-            x_accepted[n] = x0[n]
-        for n in moved:
-            n = int(n)
-            if n not in rejected_apps:                       # ack'd placement
-                extra[n, :] = True
-                extra[n, x[n]] = False
-                extra[n, x0[n]] = False
+        x_accepted[rej_n] = x0[rej_n]
+        acked = moved[~np.isin(moved, rej_n)]                # ack'd placements
+        extra[acked, :] = True
+        extra[acked, x[acked]] = False
+        extra[acked, x0[acked]] = False
         problem = problem.with_avoid(jnp.asarray(extra))
-        res = solve_fn(problem, init_assignment=jnp.asarray(x_accepted))
+        timings["feedback_s"] += time.perf_counter() - t
+
+        res = timed_solve(problem, init_assignment=jnp.asarray(x_accepted))
         rounds += 1
 
     # Iteration/timeout limit: drop still-rejected moves (stay-home is safe —
     # the app's original placement was already accepted by the lower levels).
     x = np.asarray(res.assignment).copy()
-    for n in np.where(x != x0)[0]:
-        if not region.check(int(n), int(x[n])):
-            x[n] = x0[n]
-    for t in np.unique(x[x != x0]):
-        apps_t = np.where(x == t)[0]
-        for n in host.check_tier(int(t), apps_t):
-            if x[n] != x0[n]:
-                x[n] = x0[n]
+    t = time.perf_counter()
+    moved = np.where(x != x0)[0]
+    bad = moved[~region.check_many(moved, x[moved])]
+    x[bad] = x0[bad]
+    timings["region_s"] += time.perf_counter() - t
+    t = time.perf_counter()
+    for tier in np.unique(x[x != x0]):
+        apps_t = np.where(x == tier)[0]
+        rej = np.asarray(host.check_tier(int(tier), apps_t), np.int64)
+        if rej.size:
+            rej = rej[x[rej] != x0[rej]]
+            x[rej] = x0[rej]
+    timings["host_s"] += time.perf_counter() - t
     res = dataclasses.replace(
         res, assignment=jnp.asarray(x),
         num_moved=int(np.sum(x != x0)))
+    total = time.perf_counter() - t0
+    res.extra["coop_timings"] = _finish_timings(timings, total)
     return CooperationResult(res, variant, rounds, total_rejections,
-                             time.perf_counter() - t0, False)
+                             total, False, timings=timings)

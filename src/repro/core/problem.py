@@ -10,6 +10,17 @@ score, and the dynamic ``avoid`` matrix that the hierarchy-cooperation loop
 
 Everything is a flat JAX array so the solvers (solver_local / solver_optimal)
 and the Pallas move_eval kernel can operate on device without host round trips.
+
+Shape-bucketed compilation caching: ``Sptlb.balance`` is called on every
+telemetry tick and the live app count N drifts tick to tick, which would
+retrace/recompile every jitted solver for every new N.  ``pad_problem`` pads
+the app axis up to a power-of-two bucket (``bucket_size``) with *inert* rows:
+``valid[n] = False`` rows have zero demand/tasks/criticality and their
+``feasible_mask`` collapses to the home tier only, so they can never move,
+never contribute to any goal term, and never consume movement budget
+(``move_budget`` counts valid apps only).  Solving the padded problem is
+therefore bitwise-equivalent to solving the original, while every N in a
+bucket reuses one compiled executable.
 """
 from __future__ import annotations
 
@@ -83,6 +94,7 @@ class Problem:
     slo: jax.Array           # i32[N]     SLO class id
     criticality: jax.Array   # f32[N]     criticality score in [0, 1]
     assignment0: jax.Array   # i32[N]     current app -> tier assignment
+    valid: jax.Array         # bool[N]    False for shape-bucket padding rows
 
     # --- tiers (containers) ---
     capacity: jax.Array      # f32[T, R]  hard headroom capacity (constraint 1)
@@ -107,17 +119,29 @@ class Problem:
         return self.capacity.shape[0]
 
     @property
+    def num_valid(self) -> jax.Array:
+        """Count of real (non-padding) apps — N for unpadded problems."""
+        return jnp.sum(self.valid.astype(jnp.int32))
+
+    @property
     def move_budget(self) -> jax.Array:
-        """Constraint 3: at most ceil(move_frac * N) apps may move."""
-        return jnp.ceil(self.move_frac * self.num_apps).astype(jnp.int32)
+        """Constraint 3: at most ceil(move_frac * N) apps may move.
+
+        Counts *valid* apps only so bucket padding never inflates the budget.
+        """
+        return jnp.ceil(self.move_frac * self.num_valid).astype(jnp.int32)
 
     def feasible_mask(self) -> jax.Array:
         """bool[N, T]: app n may be placed in tier t (SLO + avoid only;
 
         capacity/task feasibility is assignment-dependent and handled by the
-        solvers' move masking)."""
+        solvers' move masking).  Padding rows (``valid == False``) collapse to
+        home-tier-only so they can never move and OptimalSearch's softmax over
+        the masked logits stays finite on every row."""
         slo_ok = self.slo_allowed[:, self.slo].T  # [N, T]
-        return slo_ok & ~self.avoid
+        feas = slo_ok & ~self.avoid
+        home = jnp.arange(self.num_tiers)[None, :] == self.assignment0[:, None]
+        return jnp.where(self.valid[:, None], feas, home)
 
     def with_avoid(self, extra_avoid: jax.Array) -> "Problem":
         """Return a copy with additional (app, tier) avoid pairs OR-ed in.
@@ -135,10 +159,15 @@ def tier_loads(problem: Problem, assignment: jax.Array) -> tuple[jax.Array, jax.
     """Aggregate per-tier loads for an assignment.
 
     Returns (util f32[T, R], tasks f32[T]).  segment_sum keeps this O(N).
+    The validity mask zeroes bucket-padding rows (their demand is already
+    zero by construction; masking keeps the invariant even for hand-built
+    padded problems).
     """
     T = problem.num_tiers
-    util = jax.ops.segment_sum(problem.demand, assignment, num_segments=T)
-    tasks = jax.ops.segment_sum(problem.tasks, assignment, num_segments=T)
+    w = problem.valid.astype(problem.demand.dtype)
+    util = jax.ops.segment_sum(problem.demand * w[:, None], assignment,
+                               num_segments=T)
+    tasks = jax.ops.segment_sum(problem.tasks * w, assignment, num_segments=T)
     return util, tasks
 
 
@@ -192,6 +221,7 @@ def make_problem(
         slo=jnp.asarray(slo, jnp.int32),
         criticality=jnp.asarray(criticality, jnp.float32),
         assignment0=jnp.asarray(assignment0, jnp.int32),
+        valid=jnp.ones((N,), bool),
         capacity=capacity,
         task_limit=jnp.asarray(task_limit, jnp.float32),
         ideal_frac=ideal_frac,
@@ -200,4 +230,53 @@ def make_problem(
         avoid=avoid,
         move_frac=jnp.float32(move_frac),
         weights=weights or GoalWeights.default(),
+    )
+
+
+# --- shape-bucketed compilation caching -----------------------------------
+
+MIN_BUCKET = 256
+
+
+def bucket_size(n: int, minimum: int = MIN_BUCKET) -> int:
+    """Smallest power-of-two bucket >= n (and >= ``minimum``).
+
+    Buckets bound the number of distinct compiled executables to
+    O(log N_max) as the live app count drifts across telemetry ticks.
+    """
+    b = max(int(minimum), 1)
+    while b < n:
+        b *= 2
+    return b
+
+
+def pad_problem(problem: Problem, bucket: Optional[int] = None) -> Problem:
+    """Pad the app axis to a static bucket with inert (valid=False) rows.
+
+    Padding rows have zero demand/tasks/criticality, live at tier 0, and are
+    pinned home by ``feasible_mask``; ``move_budget``/``tier_loads`` ignore
+    them.  Solving the padded problem yields the same trajectory as the
+    original restricted to the first N rows.
+    """
+    N = problem.num_apps
+    b = bucket_size(N) if bucket is None else int(bucket)
+    if b == N:
+        return problem
+    if b < N:
+        raise ValueError(f"bucket {b} smaller than num_apps {N}")
+    pad = b - N
+
+    def padn(x, value=0):
+        cfg = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+        return jnp.pad(x, cfg, constant_values=value)
+
+    return dataclasses.replace(
+        problem,
+        demand=padn(problem.demand),
+        tasks=padn(problem.tasks),
+        slo=padn(problem.slo),
+        criticality=padn(problem.criticality),
+        assignment0=padn(problem.assignment0),
+        valid=padn(problem.valid, False),
+        avoid=padn(problem.avoid, False),
     )

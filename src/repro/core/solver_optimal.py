@@ -37,6 +37,8 @@ class OptimalSearchConfig:
     penalty: float = 1e6          # hard-constraint penalty weight
     entropy: float = 1e-3         # annealed-to-zero entropy regularizer
     seed: int = 0
+    batch_moves: int = 16         # top-k batch size of the rounding-refinement
+                                  # LocalSearch pass (1 = legacy single-move)
 
 
 def _penalized_objective(problem: Problem, logits: jax.Array,
@@ -156,7 +158,8 @@ def solve_optimal(problem: Problem,
     x = _round(problem, probs)
     refine = solve_local(
         problem,
-        LocalSearchConfig(max_iters=max(32, config.steps // 4), seed=config.seed),
+        LocalSearchConfig(max_iters=max(32, config.steps // 4),
+                          seed=config.seed, batch_moves=config.batch_moves),
         init_assignment=x)
     x = jax.block_until_ready(refine.assignment)
     dt = time.perf_counter() - t0
@@ -165,6 +168,7 @@ def solve_optimal(problem: Problem,
         iterations=config.steps + refine.iterations,
         converged=True,
         objective=float(goals.objective(problem, x)),
-        num_moved=int(jnp.sum(x != problem.assignment0)),
+        num_moved=int(jnp.sum((x != problem.assignment0) & problem.valid)),
         solve_time_s=dt,
+        extra={"refine": refine.extra},
     )

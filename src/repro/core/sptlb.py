@@ -10,16 +10,28 @@ plus §3.4 hierarchy integration via core.hierarchy.cooperate.
 ``Sptlb.balance`` is the public entry point used by the launch drivers and
 benchmarks; ``BalanceDecision`` is the §3.3 output record ("projected
 mappings from tier to app after load balancing and the projected metrics").
+
+Shape-bucketed compilation caching: ``balance`` runs on every telemetry tick
+while the live app count drifts, and every new N would retrace the jitted
+solvers.  With ``bucket_apps=True`` (default) the jit-compiled engines see
+the problem padded to a power-of-two app bucket (problem.pad_problem — inert
+rows that cannot move and carry no load), so all ticks in a bucket share one
+compiled executable.  Cache behaviour is observable: ``SolveResult.extra``
+carries ``bucket``/``padded_from`` plus the solver's ``retraced`` flag and
+per-phase timings.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Literal
+import time
+from typing import Literal, Optional
+
+import jax.numpy as jnp
 
 from repro.core import constraints, metrics
 from repro.core.greedy import GreedyConfig, solve_greedy
 from repro.core.hierarchy import CooperationResult, Variant, cooperate
-from repro.core.problem import Problem
+from repro.core.problem import Problem, bucket_size, pad_problem
 from repro.core.solver_local import LocalSearchConfig, SolveResult, solve_local
 from repro.core.solver_optimal import OptimalSearchConfig, solve_optimal
 from repro.core.telemetry import ClusterState
@@ -31,21 +43,57 @@ Engine = Literal["local", "optimal", "greedy-cpu", "greedy-mem", "greedy-task"]
 TIMEOUT_BUDGETS = {30: 256, 60: 512, 600: 2048, 1800: 8192}
 
 
-def engine_fn(engine: Engine, timeout_s: int = 30, seed: int = 0):
+def _bucketed(solve):
+    """Wrap a solve_fn so jit sees power-of-two app buckets.
+
+    The padded problem solves to the same trajectory as the original (inert
+    rows can't move and carry no load), so slicing the assignment back to N
+    is lossless; ``extra`` records the bucket for observability.
+    """
+    def run(p: Problem, init_assignment=None):
+        N = p.num_apps
+        b = bucket_size(N)
+        if b == N:
+            res = solve(p, init_assignment=init_assignment)
+            res.extra.update(bucket=b, padded_from=N)
+            return res
+        pp = pad_problem(p, b)
+        init = init_assignment
+        if init is not None:
+            init = jnp.concatenate([jnp.asarray(init, pp.assignment0.dtype),
+                                    pp.assignment0[N:]])
+        res = solve(pp, init_assignment=init)
+        res = dataclasses.replace(res, assignment=res.assignment[:N])
+        res.extra.update(bucket=b, padded_from=N)
+        return res
+    return run
+
+
+def engine_fn(engine: Engine, timeout_s: int = 30, seed: int = 0,
+              *, batch_moves: Optional[int] = None,
+              bucket_apps: bool = True):
     """Build a solve_fn(problem, init_assignment=None) for the chosen engine.
 
     ``init_assignment`` warm-starts re-solves inside the manual_cnst feedback
-    loop (engines without warm-start support ignore it).
+    loop (engines without warm-start support ignore it).  ``batch_moves``
+    overrides the top-k commit batch of the LocalSearch paths (None keeps the
+    config default); ``bucket_apps`` pads the app axis to power-of-two
+    buckets so drifting app counts reuse compiled executables.
     """
     budget = TIMEOUT_BUDGETS.get(timeout_s, max(64, int(timeout_s * 8)))
     if engine == "local":
-        cfg = LocalSearchConfig(max_iters=budget, seed=seed)
-        return lambda p, init_assignment=None: solve_local(
+        kw = {} if batch_moves is None else {"batch_moves": batch_moves}
+        cfg = LocalSearchConfig(max_iters=budget, seed=seed, **kw)
+        fn = lambda p, init_assignment=None: solve_local(
             p, cfg, init_assignment=init_assignment)
+        return _bucketed(fn) if bucket_apps else fn
     if engine == "optimal":
-        cfg = OptimalSearchConfig(steps=budget, seed=seed)
-        return lambda p, init_assignment=None: solve_optimal(p, cfg)
+        kw = {} if batch_moves is None else {"batch_moves": batch_moves}
+        cfg = OptimalSearchConfig(steps=budget, seed=seed, **kw)
+        fn = lambda p, init_assignment=None: solve_optimal(p, cfg)
+        return _bucketed(fn) if bucket_apps else fn
     if engine.startswith("greedy-"):
+        # Host-side numpy: nothing to jit-cache, so never bucket.
         obj = engine.split("-", 1)[1]
         obj = {"task-count": "task"}.get(obj, obj)
         gcfg = GreedyConfig(objective=obj, max_steps=budget)
@@ -80,8 +128,12 @@ class Sptlb:
         variant: Variant = "manual_cnst",
         max_feedback_rounds: int = 8,
         seed: int = 0,
+        batch_moves: Optional[int] = None,
+        bucket_apps: bool = True,
     ) -> BalanceDecision:
-        solve_fn = engine_fn(engine, timeout_s, seed)
+        solve_fn = engine_fn(engine, timeout_s, seed,
+                             batch_moves=batch_moves, bucket_apps=bucket_apps)
+        t0 = time.perf_counter()
         if engine.startswith("greedy-"):
             # The baseline greedy scheduler is hierarchy-unaware by design.
             res = solve_fn(self.cluster.problem)
@@ -90,9 +142,10 @@ class Sptlb:
             coop = cooperate(self.cluster, solve_fn, variant,
                              max_rounds=max_feedback_rounds)
             res = coop.result
+        t_solve = time.perf_counter()
 
         problem: Problem = self.cluster.problem
-        return BalanceDecision(
+        decision = BalanceDecision(
             assignment=res.assignment,
             projected=metrics.projected_metrics(problem, res.assignment),
             violations=constraints.validate(problem, res.assignment),
@@ -101,3 +154,8 @@ class Sptlb:
             solve=res,
             cooperation=coop,
         )
+        res.extra["balance_timings"] = {
+            "solve_s": t_solve - t0,
+            "evaluate_s": time.perf_counter() - t_solve,
+        }
+        return decision

@@ -1,13 +1,27 @@
-"""Pallas TPU kernel for the SPTLB candidate-move delta-cost (paper hot-spot).
+"""Pallas TPU kernels for the SPTLB candidate-move delta-cost (paper hot-spot).
 
 At Meta scale a LocalSearch iteration scores N x T candidate moves
 (1e5 apps x 1e2 tiers).  The math is closed-form (core/delta.py); the
-kernel tiles the app axis into VMEM-resident blocks and evaluates all tiers
-for a block entirely in registers — a pure-VPU (elementwise) kernel, so the
+kernels tile the app axis into VMEM-resident blocks and evaluate all tiers
+for a block entirely in registers — pure-VPU (elementwise) kernels, so the
 roofline target is HBM bandwidth: ~13 input floats per app vs ~T outputs.
 
+Two kernels share the delta computation (``_block_delta``):
+
+  * ``move_eval_pallas``      — emits the full delta[N, T] sweep (oracle
+                                parity path, used when the caller needs every
+                                candidate),
+  * ``move_eval_best_pallas`` — fuses the feasibility mask (capacity/task
+                                headroom, movement budget, SLO/avoid,
+                                no-self-moves) and the per-app argmin
+                                reduction in-kernel, emitting only
+                                (best_score, best_tier) per app.  This is
+                                what the batched top-k LocalSearch consumes:
+                                output bandwidth drops from N*T to N*2
+                                floats.  Oracle: core.delta.move_best_per_app.
+
 Per-app *source-side* quantities are O(N) and precomputed outside (gathers
-are not TPU-vectorizer-friendly); the kernel handles the O(N*T) part.
+are not TPU-vectorizer-friendly); the kernels handle the O(N*T) part.
 
 Layout: app block BN=256 (sublane-aligned), tiers padded to 128 lanes.
 """
@@ -19,27 +33,32 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.constraints import FEAS_TOL
+
 BN = 256          # apps per block (sublane-dim tiling)
 LANE = 128        # tier padding (lane alignment)
 
 
-def _move_eval_kernel(
-    # per-app blocks [BN, ...]
+def _block_delta(
     a_src_ref, a0_ref,
-    f_src_ref, f_src_new_ref, dC_src_ref, ideal_src_ref,   # [BN, R]
-    g_src_ref, g_src_new_ref, dK_src_ref, gideal_src_ref,  # [BN, 1]
-    d_ref,                                                  # [BN, R]
-    k_ref, mc_ref, cc_ref,                                  # [BN, 1]
-    # tier-side (full, padded to Tp) [1 or R, Tp]
-    f_ref, inv_cap_ref, ideal_ref,                          # [R, Tp]
-    g_ref, inv_klim_ref, gideal_t_ref,                      # [1, Tp]
-    mean_ref,                                               # [1, R+1] (mean_f, mean_g)
-    w_ref,                                                  # [1, 8] weights (padded)
-    out_ref,                                                # [BN, Tp]
-    *, num_tiers: int, num_resources: int,
+    f_src_ref, f_src_new_ref, dC_src_ref, ideal_src_ref,    # [BN, R]
+    g_src_ref, g_src_new_ref, dK_src_ref, gideal_src_ref,   # [BN, 1]
+    d_ref,                                                   # [BN, R]
+    k_ref, mc_ref, cc_ref,                                   # [BN, 1]
+    f_ref, inv_cap_ref, ideal_ref,                           # [R, Tp]
+    g_ref, inv_klim_ref, gideal_t_ref,                       # [1, Tp]
+    mean_ref,                                                # [1, R+1]
+    w_ref,                                                   # [1, 8]
+    *, num_tiers: int, num_resources: int, out_shape,
 ):
+    """Shared delta computation: returns (delta[BN, Tp], fits[BN, Tp]).
+
+    ``fits`` is the destination capacity/task-limit headroom check with the
+    same FEAS_TOL absolute tolerance as constraints.move_mask, expressed in
+    load-fraction space: util + d <= cap + tol  <=>  f' <= 1 + tol/cap.
+    """
     T = num_tiers
-    Tp = out_ref.shape[-1]
+    Tp = out_shape[-1]
     iota_t = jax.lax.broadcasted_iota(jnp.int32, (BN, Tp), 1)
     a_src = a_src_ref[...]                                  # [BN, 1]
     a0 = a0_ref[...]
@@ -50,10 +69,13 @@ def _move_eval_kernel(
 
     d_under = jnp.zeros((BN, Tp), jnp.float32)
     d_res_bal = jnp.zeros((BN, Tp), jnp.float32)
+    fits = jnp.ones((BN, Tp), jnp.bool_)
     for r in range(num_resources):
-        dC = d_ref[:, r:r + 1] * inv_cap_ref[r:r + 1, :]    # [BN, Tp]
+        inv_cap = inv_cap_ref[r:r + 1, :]                   # [1, Tp]
+        dC = d_ref[:, r:r + 1] * inv_cap                    # [BN, Tp]
         f_dst = f_ref[r:r + 1, :]                           # [1, Tp]
         f_dst_new = f_dst + dC
+        fits &= f_dst_new <= 1.0 + FEAS_TOL * inv_cap
         d_sumsq = (f_src_new_ref[:, r:r + 1] ** 2 - f_src_ref[:, r:r + 1] ** 2
                    + f_dst_new ** 2 - f_dst ** 2)
         d_mean = (dC - dC_src_ref[:, r:r + 1]) / T
@@ -66,9 +88,11 @@ def _move_eval_kernel(
                     - h2(f_dst, ideal_ref[r:r + 1, :]))
 
     # task-count analogue
-    dK = k_ref[...] * inv_klim_ref[0:1, :]                  # [BN, Tp]
+    inv_klim = inv_klim_ref[0:1, :]
+    dK = k_ref[...] * inv_klim                              # [BN, Tp]
     g_dst = g_ref[0:1, :]
     g_dst_new = g_dst + dK
+    fits &= g_dst_new <= 1.0 + FEAS_TOL * inv_klim
     d_sumsq_t = (g_src_new_ref[...] ** 2 - g_src_ref[...] ** 2
                  + g_dst_new ** 2 - g_dst ** 2)
     d_mean_t = (dK - dK_src_ref[...]) / T
@@ -92,18 +116,51 @@ def _move_eval_kernel(
              + w_ref[0, 2] * d_task_bal
              + w_ref[0, 3] * d_move_cost
              + w_ref[0, 4] * d_crit)
+    return delta, fits
+
+
+def _move_eval_kernel(*refs, num_tiers: int, num_resources: int):
+    *in_refs, out_ref = refs
+    delta, _ = _block_delta(*in_refs, num_tiers=num_tiers,
+                            num_resources=num_resources,
+                            out_shape=out_ref.shape)
+    T = num_tiers
+    Tp = out_ref.shape[-1]
+    iota_t = jax.lax.broadcasted_iota(jnp.int32, (BN, Tp), 1)
+    a_src = in_refs[0][...]
     delta = jnp.where(iota_t == a_src, 0.0, delta)          # self-moves
     delta = jnp.where(iota_t >= T, jnp.inf, delta)          # tier padding
     out_ref[...] = delta
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def move_eval_pallas(
-    demand, tasks, criticality, assignment, assignment0,
-    capacity, task_limit, ideal_frac, ideal_task_frac,
-    util, tier_tasks, weights, *, interpret: bool = True,
-):
-    """Same flat signature as core.delta.move_delta_cost -> delta[N, T]."""
+def _move_eval_best_kernel(*refs, num_tiers: int, num_resources: int):
+    """Fused mask + per-app argmin: out[:, 0] = best score, out[:, 1] = tier."""
+    *in_refs, feas_ref, flags_ref, out_ref = refs
+    delta, fits = _block_delta(*in_refs, num_tiers=num_tiers,
+                               num_resources=num_resources,
+                               out_shape=(BN, feas_ref.shape[-1]))
+    T = num_tiers
+    Tp = feas_ref.shape[-1]
+    iota_t = jax.lax.broadcasted_iota(jnp.int32, (BN, Tp), 1)
+    a_src = in_refs[0][...]
+    a0 = in_refs[1][...]
+    already_moved = a_src != a0                             # [BN, 1]
+    have_budget = flags_ref[0, 0] > 0.0
+    mask = ((feas_ref[...] > 0.0) & fits
+            & (already_moved | have_budget)
+            & (iota_t != a_src) & (iota_t < T))
+    scores = jnp.where(mask, delta, jnp.inf)
+    s_min = jnp.min(scores, axis=-1, keepdims=True)         # [BN, 1]
+    t_min = jnp.argmin(scores, axis=-1).astype(jnp.float32)[:, None]
+    lane = jax.lax.broadcasted_iota(jnp.int32, out_ref.shape, 1)
+    out_ref[...] = jnp.where(lane == 0, s_min,
+                             jnp.where(lane == 1, t_min, 0.0))
+
+
+def _prepare(demand, tasks, criticality, assignment, assignment0,
+             capacity, task_limit, ideal_frac, ideal_task_frac,
+             util, tier_tasks, weights):
+    """Shared host-side precompute + padding for both kernels."""
     N, R = demand.shape
     T = capacity.shape[0]
     Np = -(-N // BN) * BN
@@ -151,24 +208,74 @@ def move_eval_pallas(
     mean_in = jnp.concatenate([mean_f, mean_g[None]])[None, :]      # [1, R+1]
     w_in = jnp.pad(weights.astype(jnp.float32), (0, 8 - weights.shape[0]))[None, :]
 
-    grid = (Np // BN,)
     app_spec = lambda width: pl.BlockSpec((BN, width), lambda i: (i, 0))
     full_spec = lambda rows, cols: pl.BlockSpec((rows, cols), lambda i: (0, 0))
+    in_specs = [
+        app_spec(1), app_spec(1),
+        app_spec(R), app_spec(R), app_spec(R), app_spec(R),
+        app_spec(1), app_spec(1), app_spec(1), app_spec(1),
+        app_spec(R), app_spec(1), app_spec(1), app_spec(1),
+        full_spec(R, Tp), full_spec(R, Tp), full_spec(R, Tp),
+        full_spec(1, Tp), full_spec(1, Tp), full_spec(1, Tp),
+        full_spec(1, R + 1), full_spec(1, 8),
+    ]
+    inputs = [*app_inputs, *tier_inputs, mean_in, w_in]
+    return N, R, T, Np, Tp, inputs, in_specs, pad_n, pad_t, app_spec, full_spec
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def move_eval_pallas(
+    demand, tasks, criticality, assignment, assignment0,
+    capacity, task_limit, ideal_frac, ideal_task_frac,
+    util, tier_tasks, weights, *, interpret: bool = True,
+):
+    """Same flat signature as core.delta.move_delta_cost -> delta[N, T]."""
+    N, R, T, Np, Tp, inputs, in_specs, *_ = _prepare(
+        demand, tasks, criticality, assignment, assignment0,
+        capacity, task_limit, ideal_frac, ideal_task_frac,
+        util, tier_tasks, weights)
 
     out = pl.pallas_call(
         functools.partial(_move_eval_kernel, num_tiers=T, num_resources=R),
-        grid=grid,
-        in_specs=[
-            app_spec(1), app_spec(1),
-            app_spec(R), app_spec(R), app_spec(R), app_spec(R),
-            app_spec(1), app_spec(1), app_spec(1), app_spec(1),
-            app_spec(R), app_spec(1), app_spec(1), app_spec(1),
-            full_spec(R, Tp), full_spec(R, Tp), full_spec(R, Tp),
-            full_spec(1, Tp), full_spec(1, Tp), full_spec(1, Tp),
-            full_spec(1, R + 1), full_spec(1, 8),
-        ],
+        grid=(Np // BN,),
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((BN, Tp), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((Np, Tp), jnp.float32),
         interpret=interpret,
-    )(*app_inputs, *tier_inputs, mean_in, w_in)
+    )(*inputs)
     return out[:N, :T]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def move_eval_best_pallas(
+    demand, tasks, criticality, assignment, assignment0,
+    capacity, task_limit, ideal_frac, ideal_task_frac,
+    util, tier_tasks, weights, feasible, moves_left,
+    *, interpret: bool = True,
+):
+    """Fused sweep+mask+argmin: core.delta.move_best_per_app semantics.
+
+    Returns (best_score f32[N], best_tier i32[N]); +inf score marks apps with
+    no feasible move.  ``feasible`` is the static bool[N, T] SLO/avoid/
+    validity mask; ``moves_left`` the remaining movement budget (scalar).
+    """
+    N, R, T, Np, Tp, inputs, in_specs, pad_n, pad_t, app_spec, full_spec = \
+        _prepare(demand, tasks, criticality, assignment, assignment0,
+                 capacity, task_limit, ideal_frac, ideal_task_frac,
+                 util, tier_tasks, weights)
+
+    feas_padded = jnp.pad(feasible.astype(jnp.float32),
+                          [(0, Np - N), (0, Tp - T)])        # pad rows/lanes 0
+    flags = jnp.zeros((1, 8), jnp.float32).at[0, 0].set(
+        (moves_left > 0).astype(jnp.float32))
+
+    out = pl.pallas_call(
+        functools.partial(_move_eval_best_kernel, num_tiers=T,
+                          num_resources=R),
+        grid=(Np // BN,),
+        in_specs=[*in_specs, app_spec(Tp), full_spec(1, 8)],
+        out_specs=pl.BlockSpec((BN, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Np, LANE), jnp.float32),
+        interpret=interpret,
+    )(*inputs, feas_padded, flags)
+    return out[:N, 0], out[:N, 1].astype(jnp.int32)

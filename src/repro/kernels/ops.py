@@ -17,6 +17,7 @@ import jax
 from repro.kernels import ref as _ref
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.mamba_scan import ssd_chunked_kernel as _mamba_pallas
+from repro.kernels.move_eval import move_eval_best_pallas as _move_best_pallas
 from repro.kernels.move_eval import move_eval_pallas as _move_pallas
 
 _ON_TPU = jax.default_backend() == "tpu"
@@ -31,6 +32,18 @@ def move_eval(*args, impl: str = "xla"):
     if impl == "xla":
         return _ref.move_eval_ref(*args)
     return _move_pallas(*args, interpret=_interp())
+
+
+def move_eval_best(*args, impl: str = "xla"):
+    """Fused sweep + move-mask + per-app argmin -> (best_score[N], best_tier[N]).
+
+    The reduction the batched top-k LocalSearch consumes (it only ever looks
+    at the top-k of the N per-app best scores); see
+    core.delta.move_best_per_app for the signature and mask semantics.
+    """
+    if impl == "xla":
+        return _ref.move_eval_best_ref(*args)
+    return _move_best_pallas(*args, interpret=_interp())
 
 
 def flash_attention(q, k, v, *, causal: bool = True,

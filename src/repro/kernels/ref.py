@@ -10,7 +10,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-# move_eval oracle == the solver's XLA path (single source of truth).
+# move_eval oracles == the solver's XLA path (single source of truth).
+from repro.core.delta import move_best_per_app as move_eval_best_ref  # noqa: F401
 from repro.core.delta import move_delta_cost as move_eval_ref  # noqa: F401
 
 # mamba chunked-scan oracle == the model's XLA path.

@@ -1,0 +1,238 @@
+"""Batched top-k LocalSearch, shape-bucketed padding, and the vectorized
+cooperation loop: invariants, parity with the single-move/seed semantics,
+and the fused best-per-app kernel contract."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (LocalSearchConfig, RegionScheduler, HostScheduler,
+                        Sptlb, generate_cluster, objective, pad_problem,
+                        solve_local, validate)
+from repro.core.constraints import move_mask, moves_remaining
+from repro.core.delta import move_delta_cost
+from repro.core.problem import bucket_size, tier_loads
+from repro.core.solver_local import _weights_vector
+
+from _hypothesis_compat import hypothesis, st
+from test_solver import problems
+
+
+# ---------------------------------------------------------------------------
+# batched top-k move application
+# ---------------------------------------------------------------------------
+
+def _single_move_reference(problem, sweeps):
+    """The seed's single-move LocalSearch semantics, re-implemented plainly:
+    argmin over the masked sweep, commit one move, repeat."""
+    x = problem.assignment0
+    util, tasks = tier_loads(problem, x)
+    wvec = _weights_vector(problem)
+    T = problem.num_tiers
+    for _ in range(sweeps):
+        delta = move_delta_cost(
+            problem.demand, problem.tasks, problem.criticality, x,
+            problem.assignment0, problem.capacity, problem.task_limit,
+            problem.ideal_frac, problem.ideal_task_frac, util, tasks, wvec)
+        mask = move_mask(problem, x, util, tasks, moves_remaining(problem, x))
+        scores = jnp.where(mask, delta, jnp.inf)
+        flat = int(jnp.argmin(scores))
+        n, t = flat // T, flat % T
+        if not float(scores[n, t]) < -1e-7:
+            break
+        src = int(x[n])
+        x = x.at[n].set(t)
+        util = util.at[src].add(-problem.demand[n]).at[t].add(problem.demand[n])
+        tasks = tasks.at[src].add(-problem.tasks[n]).at[t].add(problem.tasks[n])
+    return x
+
+
+def test_batch_moves_1_reproduces_single_move_path(cluster300):
+    """batch_moves=1 must follow the seed's single-move trajectory exactly."""
+    p = cluster300.problem
+    res = solve_local(p, LocalSearchConfig(max_iters=12, batch_moves=1))
+    x_ref = _single_move_reference(p, 12)
+    assert np.array_equal(np.asarray(res.assignment), np.asarray(x_ref))
+
+
+def test_batched_commits_more_moves_per_sweep(cluster300):
+    """The point of the tentpole: >1 committed move per candidate sweep."""
+    p = cluster300.problem
+    res = solve_local(p, LocalSearchConfig(max_iters=8, batch_moves=16,
+                                           batch_quality=0.5))
+    assert res.extra["committed_moves"] > res.extra["sweeps"]
+    assert validate(p, res.assignment).ok
+
+
+@hypothesis.given(problems())
+@hypothesis.settings(max_examples=12, deadline=None, derandomize=True,
+                     suppress_health_check=[hypothesis.HealthCheck.too_slow])
+def test_property_batched_feasible_and_no_worse_at_equal_sweeps(p):
+    """(a) every hard constraint holds on every random instance; (b) at an
+    equal candidate-sweep count the batched path reaches an objective no
+    worse than the single-move path (it commits the single-move path's move
+    first each sweep, plus only strictly-improving comparable extras).
+
+    (b) is the pre-convergence claim — once the single-move path converges
+    within the sweep budget both paths sit in (possibly different) local
+    minima and the comparison is between minima, not throughput — so it is
+    only asserted while the single-move run is still moving."""
+    sweeps = 12
+    r1 = solve_local(p, LocalSearchConfig(max_iters=sweeps, batch_moves=1))
+    for bm, q in ((8, 0.9), (16, 0.5)):
+        rk = solve_local(p, LocalSearchConfig(max_iters=sweeps, batch_moves=bm,
+                                              batch_quality=q))
+        v = validate(p, rk.assignment)
+        assert v.ok, v
+        if not r1.converged:
+            assert rk.objective <= r1.objective + 1e-4 * max(1.0, abs(r1.objective))
+
+
+def test_batched_no_worse_at_equal_sweeps_calibrated(cluster300):
+    """Strict (b) on the paper-calibrated workload, pre-convergence sweeps."""
+    p = cluster300.problem
+    for sweeps in (8, 16):
+        r1 = solve_local(p, LocalSearchConfig(max_iters=sweeps, batch_moves=1))
+        rk = solve_local(p, LocalSearchConfig(max_iters=sweeps, batch_moves=16))
+        assert rk.objective <= r1.objective + 1e-4 * max(1.0, abs(r1.objective)), sweeps
+
+
+@hypothesis.given(problems())
+@hypothesis.settings(max_examples=8, deadline=None, derandomize=True,
+                     suppress_health_check=[hypothesis.HealthCheck.too_slow])
+def test_property_batched_never_worse_than_initial(p):
+    res = solve_local(p, LocalSearchConfig(max_iters=64, batch_moves=16))
+    assert validate(p, res.assignment).ok
+    assert res.objective <= float(objective(p, p.assignment0)) + 1e-5
+
+
+# ---------------------------------------------------------------------------
+# shape-bucketed padding
+# ---------------------------------------------------------------------------
+
+def test_bucket_size_powers_of_two():
+    assert bucket_size(1) == 256
+    assert bucket_size(256) == 256
+    assert bucket_size(257) == 512
+    assert bucket_size(5000) == 8192
+
+
+def test_padded_problem_solves_identically(cluster300):
+    p = cluster300.problem
+    pp = pad_problem(p)
+    assert pp.num_apps == 512
+    assert int(pp.move_budget) == int(p.move_budget)
+    cfg = LocalSearchConfig(max_iters=48, batch_moves=16)
+    res = solve_local(p, cfg)
+    res_p = solve_local(pp, cfg)
+    assert np.array_equal(np.asarray(res_p.assignment[:p.num_apps]),
+                          np.asarray(res.assignment))
+    # padding rows never move
+    assert np.array_equal(np.asarray(res_p.assignment[p.num_apps:]),
+                          np.asarray(pp.assignment0[p.num_apps:]))
+    assert abs(res_p.objective - res.objective) < 1e-4 * max(1.0, abs(res.objective))
+
+
+def test_padded_optimal_search_is_finite_and_feasible(cluster300):
+    from repro.core import OptimalSearchConfig, solve_optimal
+    p = cluster300.problem
+    pp = pad_problem(p)
+    res = solve_optimal(pp, OptimalSearchConfig(steps=40))
+    assert np.isfinite(res.objective)
+    assert validate(p, res.assignment[:p.num_apps]).ok
+
+
+def test_sptlb_bucketing_reuses_compiled_executable():
+    """Drifting app counts within one bucket must not retrace LocalSearch."""
+    from repro.core.solver_local import local_search_trace_count
+    decisions = []
+    counts = []
+    for i, n in enumerate((290, 300, 310)):
+        cluster = generate_cluster(num_apps=n, seed=20 + i)
+        before = local_search_trace_count()
+        d = Sptlb(cluster).balance("local", timeout_s=4, variant="no_cnst")
+        counts.append(local_search_trace_count() - before)
+        decisions.append(d)
+        assert d.solve.extra["bucket"] == 512
+        assert d.solve.extra["padded_from"] == n
+        assert d.violations.ok
+    # at most the first call may trace; the rest must hit the jit cache
+    assert sum(counts[1:]) == 0, counts
+
+
+# ---------------------------------------------------------------------------
+# vectorized hierarchy (region matrix + prefix FFD)
+# ---------------------------------------------------------------------------
+
+def test_region_matrix_matches_naive_check(cluster300):
+    region = RegionScheduler(cluster300)
+    c = cluster300
+    N, T = c.problem.num_apps, c.problem.num_tiers
+    rng = np.random.default_rng(0)
+    apps = rng.integers(0, N, 200)
+    tiers = rng.integers(0, T, 200)
+    fast = region.check_many(apps, tiers)
+    for a, t, ok in zip(apps, tiers, fast):
+        dst = np.where(c.tier_regions[t])[0]
+        worst = c.region_latency[c.app_region[a], dst].max()
+        assert (worst <= region.budget) == bool(ok)
+    # full matrix agrees with pointwise checks
+    mat = region.feasibility_matrix()
+    assert mat.shape == (N, T)
+    assert mat[apps, tiers].tolist() == fast.tolist()
+
+
+def test_region_scheduler_rejects_regionless_tier(cluster300):
+    """A tier with no regions must reject every placement (the precomputed
+    matrix must not let the -inf empty-max read as 'within budget')."""
+    c = dataclasses.replace(cluster300,
+                            tier_regions=cluster300.tier_regions.copy())
+    c.tier_regions[2, :] = False
+    region = RegionScheduler(c)
+    assert not region.check(0, 2)
+    assert not region.feasibility_matrix()[:, 2].any()
+    # other tiers unaffected
+    assert region.feasibility_matrix()[:, 0].any()
+
+
+def _ffd_reference(cluster, tier, apps):
+    """The seed's O(M*H) first-fit-decreasing, kept as the packing oracle."""
+    c = cluster
+    demand = np.asarray(c.problem.demand)[apps]
+    order = np.argsort(-demand.max(axis=1))
+    hosts = np.tile(c.host_capacity, (int(c.hosts_per_tier[tier]), 1))
+    rejected = []
+    for i in order:
+        fit = np.all(hosts >= demand[i], axis=1)
+        if not fit.any():
+            rejected.append(int(apps[i]))
+            continue
+        h = int(np.argmax(fit))
+        hosts[h] -= demand[i]
+    return rejected
+
+
+@pytest.mark.parametrize("seed,count", [(0, 60), (1, 150), (2, 299)])
+def test_host_scheduler_prefix_ffd_matches_reference(cluster300, seed, count):
+    host = HostScheduler(cluster300)
+    rng = np.random.default_rng(seed)
+    apps = rng.choice(cluster300.problem.num_apps, size=count, replace=False)
+    for tier in range(cluster300.problem.num_tiers):
+        got = sorted(host.check_tier(tier, apps))
+        want = sorted(_ffd_reference(cluster300, tier, apps))
+        assert got == want, (tier, got, want)
+
+
+def test_cooperate_reports_phase_timings(cluster300):
+    d = Sptlb(cluster300).balance("local", timeout_s=4,
+                                  variant="manual_cnst",
+                                  max_feedback_rounds=6)
+    tm = d.cooperation.timings
+    for key in ("solve_s", "region_s", "host_s", "feedback_s",
+                "total_s", "host_side_frac"):
+        assert key in tm, tm
+    assert tm["total_s"] > 0
+    assert 0.0 <= tm["host_side_frac"] <= 1.0
+    assert d.solve.extra["coop_timings"] == tm

@@ -120,7 +120,7 @@ def test_controller_dry_run_does_not_mutate():
 def test_compressed_psum_across_devices():
     """Compressed gradient reduction over a real (subprocess) 4-device mesh:
     psum(decompress(compress(g_i))) ~ psum(g_i)."""
-    import subprocess, sys, textwrap, pathlib
+    import os, subprocess, sys, textwrap, pathlib
     prog = textwrap.dedent("""
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
@@ -156,7 +156,11 @@ def test_compressed_psum_across_devices():
     """)
     res = subprocess.run(
         [sys.executable, "-c", prog], capture_output=True, text=True,
-        timeout=300, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        # JAX_PLATFORMS must survive the env replacement: without it jax
+        # probes for accelerator plugins in the child and can hang forever.
+        timeout=300, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                          "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS",
+                                                          "cpu")},
         cwd=str(pathlib.Path(__file__).parent.parent))
     assert "PSUM_OK" in res.stdout, res.stdout + res.stderr
 

@@ -2,13 +2,12 @@
 
 Shapes / dtypes / feature flags swept per kernel, as required for (c).
 """
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from benchmarks.common import random_problem_arrays
 from repro.kernels import ops, ref
 
 RNG = np.random.default_rng(0)
@@ -128,27 +127,9 @@ def test_mamba_chunked_matches_recurrent():
 # move_eval
 # ---------------------------------------------------------------------------
 
-def _random_problem_arrays(N, T, seed=0):
-    rng = np.random.default_rng(seed)
-    demand = jnp.asarray(rng.lognormal(1, 0.8, (N, 2)), jnp.float32)
-    tasks = jnp.asarray(rng.integers(1, 40, N), jnp.float32)
-    crit = jnp.asarray(rng.random(N), jnp.float32)
-    x = jnp.asarray(rng.integers(0, T, N), jnp.int32)
-    x0 = jnp.asarray(rng.integers(0, T, N), jnp.int32)
-    cap = jnp.asarray(rng.uniform(400, 900, (T, 2)), jnp.float32)
-    klim = jnp.asarray(rng.uniform(800, 2000, T), jnp.float32)
-    ideal = jnp.full((T, 2), 0.7, jnp.float32)
-    ideal_t = jnp.full((T,), 0.8, jnp.float32)
-    util = jax.ops.segment_sum(demand, x, num_segments=T)
-    ttasks = jax.ops.segment_sum(tasks, x, num_segments=T)
-    w = jnp.asarray([1e4, 1e3, 1e2, 1e1, 1e0], jnp.float32)
-    return (demand, tasks, crit, x, x0, cap, klim, ideal, ideal_t,
-            util, ttasks, w)
-
-
 @pytest.mark.parametrize("N,T", [(64, 5), (300, 5), (500, 17), (1000, 128)])
 def test_move_eval_matches_ref(N, T):
-    args = _random_problem_arrays(N, T, seed=N + T)
+    args = random_problem_arrays(N, T, seed=N + T)
     d_ref = ops.move_eval(*args, impl="xla")
     d_pal = ops.move_eval(*args, impl="pallas")
     scale = float(jnp.max(jnp.abs(d_ref))) + 1e-9
@@ -179,6 +160,40 @@ def test_move_eval_delta_is_exact():
         true_delta = float(objective(p, moved)) - base
         assert abs(float(delta[n, t]) - true_delta) < 1e-3 * max(
             1.0, abs(true_delta)), (n, t)
+
+
+@pytest.mark.parametrize("N,T,moves_left", [(300, 5, 5), (500, 17, 0)])
+def test_move_eval_best_matches_ref(N, T, moves_left):
+    """Fused sweep+mask+argmin kernel vs the core.delta oracle."""
+    args = random_problem_arrays(N, T, seed=N + T)
+    rng = np.random.default_rng(N)
+    feas = jnp.asarray(rng.random((N, T)) > 0.2)
+    ml = jnp.int32(moves_left)
+    s_ref, t_ref = ops.move_eval_best(*args, feas, ml, impl="xla")
+    s_pal, t_pal = ops.move_eval_best(*args, feas, ml, impl="pallas")
+    finite = np.isfinite(np.asarray(s_ref))
+    # same apps marked infeasible (+inf)
+    assert np.array_equal(np.isfinite(np.asarray(s_pal)), finite)
+    scale = float(jnp.max(jnp.abs(jnp.where(finite, s_ref, 0.0)))) + 1e-9
+    np.testing.assert_allclose(np.asarray(s_pal)[finite] / scale,
+                               np.asarray(s_ref)[finite] / scale, atol=1e-5)
+    assert np.array_equal(np.asarray(t_pal)[finite], np.asarray(t_ref)[finite])
+
+
+def test_solver_with_fused_best_pallas(cluster300):
+    """Batched LocalSearch end-to-end on the fused-best kernel path."""
+    import functools
+    from repro.core import LocalSearchConfig, solve_local, validate
+    from repro.kernels.move_eval import move_eval_best_pallas
+
+    p = cluster300.problem
+    res = solve_local(
+        p, LocalSearchConfig(max_iters=8, batch_moves=8),
+        move_best_fn=functools.partial(move_eval_best_pallas, interpret=True))
+    assert validate(p, res.assignment).ok
+    res_ref = solve_local(p, LocalSearchConfig(max_iters=8, batch_moves=8))
+    assert np.array_equal(np.asarray(res.assignment),
+                          np.asarray(res_ref.assignment))
 
 
 def test_solver_with_pallas_move_eval(cluster300):

@@ -5,6 +5,7 @@ Multi-device checks (EP MoE, batch-sharded attention) run in a subprocess
 with 8 host devices so the main test process keeps its single-device jax.
 """
 import dataclasses
+import os
 import subprocess
 import sys
 import textwrap
@@ -136,7 +137,10 @@ def test_multidevice_variant_numerics():
     res = subprocess.run(
         [sys.executable, "-c", _SUBPROCESS_PROG],
         capture_output=True, text=True, timeout=420,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        # JAX_PLATFORMS must survive the env replacement: without it jax
+        # probes for accelerator plugins in the child and can hang forever.
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")},
         cwd=str(__import__("pathlib").Path(__file__).parent.parent))
     assert "SUBPROCESS_OK" in res.stdout, res.stdout + res.stderr
 

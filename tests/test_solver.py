@@ -4,8 +4,6 @@ Includes hypothesis property tests over random problem instances — the
 solver must uphold the paper's hard constraints (§3.2.1 items 1-4) on every
 input, not just the calibrated workload.
 """
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -17,6 +15,10 @@ from repro.core import (GoalWeights, LocalSearchConfig, OptimalSearchConfig,
                         utilization_fraction, validate,
                         difference_to_balance)
 from repro.core.problem import make_problem
+
+# Real hypothesis when installed, deterministic fallback otherwise (tier-1
+# must run without optional deps).
+from _hypothesis_compat import hypothesis, st
 
 
 # ---------------------------------------------------------------------------
