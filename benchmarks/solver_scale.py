@@ -5,10 +5,14 @@ argument applied to the scheduler itself).
 
 Emits CSV rows like every other benchmark AND writes ``BENCH_solver.json``
 at the repo root so the solver-throughput trajectory is tracked PR-over-PR:
-  * local_search: committed moves/sec for batch_moves=1 vs 16 (the tentpole
+  * local_search: committed moves/sec for batch_moves=1 vs 16 (the PR 1
     acceptance number: >=5x at N=10_000),
-  * cooperate: per-phase wall-clock split of a manual_cnst pass (solve vs
-    host-side region/host/feedback Python),
+  * cooperate: manual_cnst pass with region pre-masking off vs on —
+    per-phase split (solve / pack / region / host glue / feedback), rounds,
+    region+host rejection breakdown, pack dispatch/retrace counters (the
+    PR 2 acceptance numbers: host_side_frac <= 0.10 and >=1.5x total
+    speedup at N=10_000 with premask on, at 0 region rejections and an
+    objective no worse than the unmasked path),
   * bucketing: LocalSearch retrace counts across drifting app counts with
     shape-bucketed padding on vs off.
 
@@ -90,22 +94,41 @@ def bench_local_search_batched(N: int, sweeps: int = 64, batch: int = 16):
 
 
 def bench_cooperate(N: int, timeout_s: int = 8):
-    """Phase split of a manual_cnst cooperation pass (solve vs host-side)."""
+    """Cooperation section (the PR 2 tentpole): per-phase split, rounds,
+    region/host rejection breakdown, and pack dispatch/retrace counters of
+    a manual_cnst pass with region pre-masking off vs on.  host_side_frac
+    is everything that is neither the solver nor the compiled pack
+    dispatches (acceptance: <=0.10 at N=10_000 with premask on)."""
     cluster = generate_cluster(num_apps=N, seed=2)
     s = Sptlb(cluster)
-    s.balance("local", timeout_s=timeout_s, variant="manual_cnst")  # warm jit
-    d = s.balance("local", timeout_s=timeout_s, variant="manual_cnst")
-    tm = dict(d.cooperation.timings)
-    emit(f"solver_scale/cooperate/N{N}", tm["total_s"] * 1e6,
-         f"rounds={d.cooperation.feedback_rounds};"
-         f"rejections={d.cooperation.num_rejections};"
-         f"solve_s={tm['solve_s']:.3f};region_s={tm['region_s']:.4f};"
-         f"host_s={tm['host_s']:.4f};feedback_s={tm['feedback_s']:.4f};"
-         f"host_side_frac={tm['host_side_frac']:.3f}")
-    RESULTS.setdefault("cooperate", {})[f"N{N}"] = {
-        "rounds": d.cooperation.feedback_rounds,
-        "rejections": d.cooperation.num_rejections, **tm}
-    return tm
+    rec = {}
+    for premask in (False, True):
+        label = "premask" if premask else "unmasked"
+        s.balance("local", timeout_s=timeout_s, variant="manual_cnst",
+                  premask_region=premask)                        # warm jit
+        d = s.balance("local", timeout_s=timeout_s, variant="manual_cnst",
+                      premask_region=premask)
+        tm = dict(d.cooperation.timings)
+        rec[label] = {**tm, "objective": d.solve.objective,
+                      "d2b": d.difference_to_balance,
+                      "accepted": d.cooperation.accepted}
+        emit(f"solver_scale/cooperate/N{N}/{label}", tm["total_s"] * 1e6,
+             f"rounds={tm['rounds']};region_rej={tm['region_rejections']};"
+             f"host_rej={tm['host_rejections']};solve_s={tm['solve_s']:.3f};"
+             f"pack_s={tm['pack_s']:.4f};"
+             f"pack_dispatches={tm['pack_dispatches']};"
+             f"pack_retraces={tm['pack_retraces']};"
+             f"host_side_frac={tm['host_side_frac']:.3f};"
+             f"objective={d.solve.objective:.4g}")
+    rec["speedup_premask"] = (rec["unmasked"]["total_s"]
+                              / max(rec["premask"]["total_s"], 1e-12))
+    comment(f"N={N}: premask {rec['speedup_premask']:.2f}x faster, "
+            f"rounds {rec['unmasked']['rounds']} -> {rec['premask']['rounds']}, "
+            f"region rejections {rec['unmasked']['region_rejections']} -> "
+            f"{rec['premask']['region_rejections']}, host_side_frac "
+            f"{rec['premask']['host_side_frac']:.3f}")
+    RESULTS.setdefault("cooperate", {})[f"N{N}"] = rec
+    return rec
 
 
 def bench_bucketing(sizes: tuple, timeout_s: int = 4):

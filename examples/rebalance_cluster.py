@@ -20,6 +20,11 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--apps", type=int, default=600)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-premask", action="store_true",
+                    help="disable region pre-masking (the manual_cnst "
+                         "feedback loop then re-learns region feasibility "
+                         "one rejection round at a time, as in the paper's "
+                         "plain variant)")
     args = ap.parse_args()
 
     cluster = generate_cluster(num_apps=args.apps, seed=args.seed)
@@ -30,7 +35,8 @@ def main():
     for engine in ("local", "optimal"):
         for variant in ("no_cnst", "w_cnst", "manual_cnst"):
             d = sptlb.balance(engine, timeout_s=30, variant=variant,
-                              max_feedback_rounds=20)
+                              max_feedback_rounds=20,
+                              premask_region=not args.no_premask)
             rounds = d.cooperation.feedback_rounds if d.cooperation else 1
             t = d.cooperation.total_time_s if d.cooperation else d.solve.solve_time_s
             print(f"{variant:14s} {engine:8s} {d.difference_to_balance:6.3f} "

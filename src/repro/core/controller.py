@@ -61,12 +61,21 @@ class BalanceController:
         self.round = 0
         self.last_applied_round = -10**9
         self.history: list[ControllerEvent] = []
+        # One balancer for the controller's lifetime: re-instantiating it
+        # every trigger discarded nothing expensive per se, but the cluster
+        # it points at carries the memoized hierarchy precomputes — keep
+        # both in lock-step instead of rebuilding per tick.
+        self._sptlb = Sptlb(cluster)
 
     # -- trigger policy -----------------------------------------------------
-    def should_rebalance(self) -> tuple[bool, str]:
+    def should_rebalance(self, d2b: Optional[float] = None) -> tuple[bool, str]:
+        """Trigger decision.  ``d2b`` lets ``tick`` pass the
+        difference-to-balance it already computed instead of paying the
+        tier-loads reduction twice per round."""
         cfg = self.config
         p = self.cluster.problem
-        d2b = M.difference_to_balance(p, p.assignment0)
+        if d2b is None:
+            d2b = M.difference_to_balance(p, p.assignment0)
         if self.round - self.last_applied_round < cfg.cooldown_rounds:
             return False, f"cooldown ({d2b=:.3f})"
         uf, tf = utilization_fraction(p, p.assignment0)
@@ -81,13 +90,16 @@ class BalanceController:
     # -- one control round ----------------------------------------------------
     def tick(self) -> ControllerEvent:
         self.round += 1
+        # Callers may swap ``self.cluster`` between ticks (fresh telemetry,
+        # capacity events); the reused balancer must follow it.
+        self._sptlb.cluster = self.cluster
         p = self.cluster.problem
         d2b_before = M.difference_to_balance(p, p.assignment0)
-        triggered, reason = self.should_rebalance()
+        triggered, reason = self.should_rebalance(d2b_before)
         ev = ControllerEvent(self.round, triggered, reason, False, d2b_before)
         if triggered:
             t0 = time.perf_counter()
-            decision = Sptlb(self.cluster).balance(
+            decision = self._sptlb.balance(
                 self.config.engine, timeout_s=self.config.timeout_s,
                 variant=self.config.variant)
             ev.time_s = time.perf_counter() - t0
@@ -98,6 +110,7 @@ class BalanceController:
                     self.cluster,
                     problem=p.with_assignment0(
                         jnp.asarray(decision.assignment)))
+                self._sptlb.cluster = self.cluster   # next tick re-syncs too
                 self.last_applied_round = self.round
                 ev.applied = True
         self.history.append(ev)

@@ -87,7 +87,12 @@ def solve_greedy(problem: Problem, config: GreedyConfig = GreedyConfig()) -> Sol
     return SolveResult(
         assignment=xj,
         iterations=steps,
-        converged=len(moved) >= budget,
+        # Greedy is deterministic and ignores warm starts, so any
+        # termination is final — re-solving cannot improve it.  (Budget
+        # exhaustion is visible via num_moved; reporting it here made the
+        # cooperation loop's convergence-continuation re-solve a no-op
+        # proposal.)
+        converged=True,
         objective=float(goals.objective(problem, xj)),
         num_moved=int(np.sum(x != x0)),
         solve_time_s=dt,

@@ -130,7 +130,12 @@ class Sptlb:
         seed: int = 0,
         batch_moves: Optional[int] = None,
         bucket_apps: bool = True,
+        premask_region: bool = True,
     ) -> BalanceDecision:
+        """One balancing pass.  ``premask_region`` (default on) folds the
+        region scheduler's feasibility matrix into the solver's avoid mask
+        before the first manual_cnst solve, so feedback rounds are spent on
+        host packing only — see ``hierarchy.cooperate``."""
         solve_fn = engine_fn(engine, timeout_s, seed,
                              batch_moves=batch_moves, bucket_apps=bucket_apps)
         t0 = time.perf_counter()
@@ -140,7 +145,8 @@ class Sptlb:
             coop = None
         else:
             coop = cooperate(self.cluster, solve_fn, variant,
-                             max_rounds=max_feedback_rounds)
+                             max_rounds=max_feedback_rounds,
+                             premask_region=premask_region)
             res = coop.result
         t_solve = time.perf_counter()
 

@@ -51,6 +51,14 @@ class ClusterState:
     region_latency: np.ndarray    # f32[G, G] inter-region latency (ms)
     hosts_per_tier: np.ndarray    # i32[T]
     host_capacity: np.ndarray     # f32[R] per-host capacity
+    # Memoized hierarchy precomputes (region worst-latency matrix, overlap
+    # avoid, ...) keyed by the deriving function — see core/hierarchy.py.
+    # ``init=False`` so every ``dataclasses.replace`` (capacity events,
+    # applied rebalances) starts from an empty cache: entries can only
+    # outlive the exact field values they were derived from if a caller
+    # mutates an array in place, which nothing in the tree does.
+    _cache: dict = dataclasses.field(init=False, default_factory=dict,
+                                     repr=False, compare=False)
 
 
 class ResourceMonitor:

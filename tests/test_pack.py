@@ -1,0 +1,220 @@
+"""Device-resident cooperation: batched all-tier FFD packing parity,
+pack-executable sharing across host counts, the region pre-mask contract,
+and the hierarchy precompute caches."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (HostScheduler, RegionScheduler, Sptlb,
+                        generate_cluster)
+from repro.core.controller import BalanceController, ControllerConfig
+from repro.core.hierarchy import region_overlap_avoid
+from repro.kernels.pack import pack_ffd, pack_ffd_tiers, pack_trace_count
+
+from _hypothesis_compat import hypothesis, st
+
+
+def _ffd_seed_reference(demand_sorted, capacity, num_hosts):
+    """The seed's per-tier first-fit scan as plain numpy (the oracle):
+    same f32 subtractions in the same order, first fit == lowest host."""
+    hosts = np.tile(capacity, (num_hosts, 1))
+    rejected = np.zeros(len(demand_sorted), bool)
+    for i, d in enumerate(demand_sorted):
+        fit = np.all(hosts >= d, axis=1)
+        if not fit.any():
+            rejected[i] = True
+            continue
+        hosts[int(np.argmax(fit))] -= d
+    return rejected
+
+
+@st.composite
+def pack_instances(draw):
+    """[T, M, R] sorted-decreasing (zero-padded) demand + per-tier hosts."""
+    seed = draw(st.integers(0, 10_000))
+    T = draw(st.integers(1, 5))
+    M = draw(st.integers(1, 40))
+    pad = draw(st.integers(0, 12))
+    rng = np.random.default_rng(seed)
+    demand = rng.lognormal(0.0, 1.0, size=(T, M, 2)).astype(np.float32)
+    order = np.argsort(-demand.max(axis=2), axis=1)
+    demand = np.take_along_axis(demand, order[:, :, None], axis=1)
+    demand = np.concatenate([demand, np.zeros((T, pad, 2), np.float32)],
+                            axis=1)
+    capacity = rng.uniform(1.0, 8.0, size=2).astype(np.float32)
+    hosts = rng.integers(1, 10, size=T).astype(np.int32)
+    return demand, capacity, hosts
+
+
+@hypothesis.given(pack_instances())
+@hypothesis.settings(max_examples=15, deadline=None, derandomize=True,
+                     suppress_health_check=[hypothesis.HealthCheck.too_slow])
+def test_batched_ffd_bit_identical_to_per_tier_and_seed(inst):
+    """pack_ffd_tiers row t == pack_ffd on tier t == the seed numpy scan,
+    bit for bit, including -inf-padded dead host bins and zero padding."""
+    demand, capacity, hosts = inst
+    batched = np.asarray(pack_ffd_tiers(
+        jnp.asarray(demand), jnp.asarray(capacity), jnp.asarray(hosts),
+        num_hosts_pad=16))
+    for t in range(demand.shape[0]):
+        per_tier = np.asarray(pack_ffd(
+            jnp.asarray(demand[t]), jnp.asarray(capacity),
+            jnp.int32(hosts[t]), num_hosts_pad=16))
+        seed_ref = _ffd_seed_reference(demand[t], capacity, int(hosts[t]))
+        assert np.array_equal(batched[t], per_tier), t
+        assert np.array_equal(batched[t], seed_ref), t
+
+
+def test_one_pack_executable_across_host_counts(cluster300):
+    """Tiers with different host counts must share one compiled executable:
+    the live count is traced, only the padded bin count is static."""
+    host = HostScheduler(cluster300)
+    rng = np.random.default_rng(0)
+    apps = rng.choice(cluster300.problem.num_apps, size=140, replace=False)
+    host.check_tier(0, apps)                     # at most this call traces
+    before = pack_trace_count()
+    for tier in range(1, cluster300.problem.num_tiers):
+        host.check_tier(tier, apps)
+    assert pack_trace_count() == before
+    assert host.pack_dispatches == cluster300.problem.num_tiers
+
+
+def _random_proposal(cluster, seed, movers=150, target_tier=None):
+    rng = np.random.default_rng(seed)
+    x0 = np.asarray(cluster.problem.assignment0)
+    x = x0.copy()
+    picked = rng.choice(len(x0), size=movers, replace=False)
+    if target_tier is None:
+        x[picked] = rng.integers(0, cluster.problem.num_tiers, size=movers)
+    else:
+        x[picked] = target_tier
+    return x, x0, np.where(x != x0)[0]
+
+
+def test_check_tiers_matches_per_tier_path(cluster300):
+    """The single batched dispatch must reproduce the per-tier loop's
+    rejected-newcomer set exactly — including on an overloaded tier."""
+    host = HostScheduler(cluster300)
+    smallest = int(np.argmin(cluster300.hosts_per_tier))
+    for seed, target in ((3, None), (4, smallest)):
+        x, x0, movers = _random_proposal(cluster300, seed, target_tier=target)
+        got = np.sort(host.check_tiers(x, x0, movers))
+        want = []
+        for tier in np.unique(x[movers]):
+            newcomers = movers[x[movers] == tier]
+            incumbents = np.where((x == tier) & (x0 == tier))[0]
+            rej = np.asarray(host.check_tier(
+                int(tier), np.concatenate([incumbents, newcomers])), np.int64)
+            if rej.size:
+                want.extend(rej[x[rej] != x0[rej]].tolist())
+        assert np.array_equal(got, np.sort(np.asarray(want, np.int64))), seed
+    # the crafted overload actually exercised the reject path
+    x, x0, movers = _random_proposal(cluster300, 4, target_tier=smallest)
+    assert host.check_tiers(x, x0, movers).size > 0
+
+
+def test_check_tiers_parity_under_demand_ties(cluster300):
+    """Apps tying on max demand (but differing in the other resource) must
+    pack in the same order on both paths: check_tier canonicalizes to a
+    stable ascending-id sort, matching check_tiers' stable lexsort."""
+    import jax.numpy as jnp
+    demand = np.asarray(cluster300.problem.demand).copy()
+    rng = np.random.default_rng(9)
+    tied = rng.choice(len(demand), size=40, replace=False)
+    demand[tied, 0] = np.float32(demand[:, 0].max() * 0.9)   # shared dmax...
+    demand[tied, 1] = rng.uniform(0.1, demand[:, 1].max(),
+                                  size=40).astype(np.float32)  # ...mem differs
+    c = dataclasses.replace(
+        cluster300, problem=dataclasses.replace(
+            cluster300.problem, demand=jnp.asarray(demand)))
+    host = HostScheduler(c)
+    x0 = np.asarray(c.problem.assignment0)
+    x = x0.copy()
+    x[tied] = int(np.argmin(c.hosts_per_tier))               # overload one tier
+    movers = np.where(x != x0)[0]
+    got = np.sort(host.check_tiers(x, x0, movers))
+    want = []
+    for tier in np.unique(x[movers]):
+        newcomers = movers[x[movers] == tier]
+        incumbents = np.where((x == tier) & (x0 == tier))[0]
+        # membership passed in a scrambled order on purpose
+        members = rng.permutation(np.concatenate([incumbents, newcomers]))
+        rej = np.asarray(host.check_tier(int(tier), members), np.int64)
+        if rej.size:
+            want.extend(rej[x[rej] != x0[rej]].tolist())
+    assert np.array_equal(got, np.sort(np.asarray(want, np.int64)))
+
+
+def test_batched_pack_executable_shared_across_proposals(cluster300):
+    """Two proposals in the same app bucket reuse one compiled executable."""
+    host = HostScheduler(cluster300)
+    x, x0, movers = _random_proposal(cluster300, 5)
+    host.check_tiers(x, x0, movers)              # at most this call traces
+    before = pack_trace_count()
+    x2, _, movers2 = _random_proposal(cluster300, 6, movers=120)
+    host.check_tiers(x2, x0, movers2)
+    assert pack_trace_count() == before
+
+
+def test_premask_region_cooperation_contract(cluster300):
+    """premask_region=True: zero region rejections, violations-free final
+    mapping no worse than the unmasked path's, every move region-legal."""
+    s = Sptlb(cluster300)
+    # Default round cap: the comparison the knob is designed for (with a
+    # much larger cap the unmasked path's rejection rounds double as extra
+    # search restarts and the two paths' budgets diverge).
+    d_on = s.balance("local", timeout_s=30, variant="manual_cnst",
+                     premask_region=True)
+    d_off = s.balance("local", timeout_s=30, variant="manual_cnst",
+                      premask_region=False)
+    tm_on, tm_off = d_on.cooperation.timings, d_off.cooperation.timings
+    assert tm_on["premask"] and tm_on["region_rejections"] == 0
+    assert not tm_off["premask"] and tm_off["region_rejections"] > 0
+    assert d_on.violations.ok
+    assert (d_on.solve.objective
+            <= d_off.solve.objective
+            + 1e-4 * max(1.0, abs(d_off.solve.objective)))
+    region = RegionScheduler(cluster300)
+    x = np.asarray(d_on.assignment)
+    x0 = np.asarray(cluster300.problem.assignment0)
+    moved = np.where(x != x0)[0]
+    assert region.check_many(moved, x[moved]).all()
+    # the new counters are reported on both paths
+    for tm in (tm_on, tm_off):
+        for key in ("rounds", "pack_s", "pack_dispatches", "pack_retraces",
+                    "host_rejections"):
+            assert key in tm, key
+
+
+def test_hierarchy_precomputes_cached_on_cluster(cluster300):
+    """Region matrices and the w_cnst overlap mask are memoized per cluster
+    and recomputed after any dataclasses.replace."""
+    r1, r2 = RegionScheduler(cluster300), RegionScheduler(cluster300)
+    assert r1._worst_ms is r2._worst_ms
+    assert r1.feasibility_matrix() is r2.feasibility_matrix()
+    assert region_overlap_avoid(cluster300) is region_overlap_avoid(cluster300)
+    # a different budget gets its own feasibility entry
+    r3 = RegionScheduler(cluster300, latency_budget_ms=5.0)
+    assert r3.feasibility_matrix() is not r1.feasibility_matrix()
+    assert r3._worst_ms is r1._worst_ms          # geometry is budget-free
+    c2 = dataclasses.replace(cluster300,
+                             tier_regions=cluster300.tier_regions.copy())
+    assert RegionScheduler(c2)._worst_ms is not r1._worst_ms
+
+
+def test_controller_reuses_balancer_and_cluster_stays_consistent():
+    cluster = generate_cluster(num_apps=120, seed=5)
+    ctl = BalanceController(cluster, ControllerConfig(
+        trigger_d2b=0.0, trigger_over_ideal=0.0, cooldown_rounds=1,
+        timeout_s=4))
+    balancer = ctl._sptlb
+    for _ in range(2):
+        ctl.tick()
+    assert ctl._sptlb is balancer                # reused, not re-instantiated
+    assert ctl._sptlb.cluster is ctl.cluster     # tracks applied rebalances
+    # caller swaps in fresh telemetry between ticks: tick must re-sync the
+    # balancer before deciding, not solve the stale cluster
+    ctl.cluster = dataclasses.replace(ctl.cluster)
+    ctl.tick()
+    assert ctl._sptlb.cluster is ctl.cluster
