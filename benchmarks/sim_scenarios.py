@@ -1,0 +1,84 @@
+"""Fleet-simulator scenario benchmark: controller vs no-rebalance baseline
+over every registry scenario, scored by trajectory-level SLO accounting.
+
+For each scenario the harness runs the same workload trajectory twice —
+``static`` (the t=0 placement rides out the run) and ``balanced``
+(``BalanceController`` ticks with hysteresis/cooldown) — and records the
+violation integrals, movement (downtime proxy), d2b series, and solver
+wall-clock.  The per-scenario comparison ratios are the PR 3 acceptance
+numbers (flash_crowd and tier_drain must favour the controller).
+
+Emits CSV rows like every other benchmark AND writes ``BENCH_sim.json`` at
+the repo root so the trajectory scorecard is tracked PR-over-PR
+(regenerate with ``PYTHONPATH=src python -m benchmarks.sim_scenarios``;
+``--smoke`` shrinks apps/ticks for CI and writes BENCH_sim_smoke.json).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from benchmarks.common import comment, emit
+from repro.sim import get_scenario, list_scenarios, run_pair
+
+RESULTS: dict = {}
+
+
+def bench_scenario(name: str, num_apps: int, ticks: int, seed: int = 0):
+    sc = get_scenario(name, num_apps=num_apps, ticks=ticks, seed=seed)
+    t0 = time.perf_counter()
+    out = run_pair(sc)
+    wall = time.perf_counter() - t0
+    cmp = out["compare"]
+    rec = {
+        "num_apps": num_apps,
+        "pool": sc.max_apps,
+        "ticks": ticks,
+        "wall_s": wall,
+        "baseline": out["baseline"].summary(),
+        "balanced": out["balanced"].summary(),
+        "compare": cmp,
+        "series": {"baseline": out["baseline"].series(),
+                   "balanced": out["balanced"].series()},
+    }
+    viol = cmp["slo_violation_ticks"]
+
+    def fmt(r):                      # ratio may be None (0-baseline)
+        return "n/a" if r is None else f"{r:.3f}"
+
+    emit(f"sim_scenarios/{name}/N{num_apps}x{ticks}", wall * 1e6,
+         f"viol_baseline={viol['baseline']};viol_balanced={viol['balanced']};"
+         f"viol_ratio={fmt(viol['ratio'])};"
+         f"excess_ratio={fmt(cmp['over_ideal_excess_integral']['ratio'])};"
+         f"moves={cmp['total_moves']};rebalances={cmp['rebalances']};"
+         f"solver_s={cmp['solver_time_s']:.2f}")
+    comment(f"{name}: violation ticks {viol['baseline']} -> "
+            f"{viol['balanced']} ({fmt(viol['ratio'])}x), "
+            f"{cmp['rebalances']} rebalances moved {cmp['total_moves']} apps")
+    RESULTS[name] = rec
+    return rec
+
+
+def run(smoke: bool = False):
+    comment(f"--- fleet simulator scenarios "
+            f"(XLA path, CPU{', smoke' if smoke else ''}) ---")
+    num_apps, ticks = (128, 24) if smoke else (400, 160)
+    for name in list_scenarios():
+        bench_scenario(name, num_apps, ticks)
+
+    # Smoke numbers must not clobber the tracked fleet-scale record.
+    name = "BENCH_sim_smoke.json" if smoke else "BENCH_sim.json"
+    out_path = os.path.normpath(os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "..", name))
+    with open(out_path, "w") as f:
+        json.dump(RESULTS, f, indent=2, sort_keys=True)
+    comment(f"wrote {out_path}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes for CI (seconds, not minutes)")
+    run(**vars(ap.parse_args()))

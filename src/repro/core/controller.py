@@ -9,11 +9,20 @@ finding bugs with the solver").
 
 Policies:
   * trigger: rebalance only when difference-to-balance exceeds
-    ``trigger_d2b`` or any tier exceeds its ideal utilization by
-    ``trigger_over_ideal``,
+    ``trigger_d2b``, any tier exceeds its ideal utilization by
+    ``trigger_over_ideal``, or at least ``trigger_slo_apps`` live apps sit
+    on a tier no longer eligible for their SLO class (capacity events and
+    outages strand incumbents — constraint 4 read as a state),
   * cooldown: at least ``cooldown_rounds`` collection rounds between moves,
   * dry_run: compute + log decisions without applying (shadow mode — how a
     new scheduler is actually rolled out at scale).
+
+Externally-evolved clusters: the controller is driven by whoever owns the
+telemetry loop (``repro.sim.harness`` in the fleet simulator).  Callers
+hand the evolved cluster to ``tick(cluster)`` (or assign ``self.cluster``
+between ticks); the controller re-syncs its reused ``Sptlb`` either way, so
+capacity events, demand drift, and churn (``valid``-mask flips) are picked
+up without rebuilding the controller or losing cooldown/audit state.
 """
 from __future__ import annotations
 
@@ -34,11 +43,17 @@ from repro.core.telemetry import ClusterState
 class ControllerConfig:
     trigger_d2b: float = 0.15
     trigger_over_ideal: float = 0.05
+    # Trigger when this many live apps are stranded on SLO-ineligible tiers
+    # (None disables the check).  Default 1: any stranded app is an active
+    # SLO breach, and waiting for the *balance* metrics to drift far enough
+    # would leave it stranded through the whole event.
+    trigger_slo_apps: Optional[int] = 1
     cooldown_rounds: int = 3
     engine: str = "local"
     variant: str = "manual_cnst"
     timeout_s: int = 30
     dry_run: bool = False
+    restart_rounds: int = 0
 
 
 @dataclasses.dataclass
@@ -85,13 +100,26 @@ class BalanceController:
             return True, f"d2b {d2b:.3f} > {cfg.trigger_d2b}"
         if max(over, over_t) > cfg.trigger_over_ideal:
             return True, f"over-ideal {max(over, over_t):.3f}"
+        if cfg.trigger_slo_apps is not None:
+            slo_ok = p.slo_allowed[p.assignment0, p.slo]
+            stranded = int(jnp.sum(~slo_ok & p.valid))
+            if stranded >= cfg.trigger_slo_apps:
+                return True, f"slo-stranded apps {stranded}"
         return False, f"balanced ({d2b=:.3f})"
 
+    def observe(self, cluster: ClusterState) -> None:
+        """Adopt an externally-evolved cluster (fresh telemetry, capacity
+        events, churn) without losing cooldown/audit state."""
+        self.cluster = cluster
+        self._sptlb.cluster = cluster
+
     # -- one control round ----------------------------------------------------
-    def tick(self) -> ControllerEvent:
+    def tick(self, cluster: Optional[ClusterState] = None) -> ControllerEvent:
+        if cluster is not None:
+            self.observe(cluster)
         self.round += 1
-        # Callers may swap ``self.cluster`` between ticks (fresh telemetry,
-        # capacity events); the reused balancer must follow it.
+        # Callers may also swap ``self.cluster`` directly between ticks; the
+        # reused balancer must follow it either way.
         self._sptlb.cluster = self.cluster
         p = self.cluster.problem
         d2b_before = M.difference_to_balance(p, p.assignment0)
@@ -101,7 +129,8 @@ class BalanceController:
             t0 = time.perf_counter()
             decision = self._sptlb.balance(
                 self.config.engine, timeout_s=self.config.timeout_s,
-                variant=self.config.variant)
+                variant=self.config.variant,
+                restart_rounds=self.config.restart_rounds)
             ev.time_s = time.perf_counter() - t0
             ev.d2b_after = decision.difference_to_balance
             ev.moved = decision.projected.num_moved

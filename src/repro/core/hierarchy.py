@@ -178,6 +178,18 @@ class HostScheduler:
         self.pack_s = 0.0
         self.pack_dispatches = 0
         self.pack_retraces = 0
+        # Residents (apps already home) of a *force-packed* tier that failed
+        # to pack.  They have nowhere better to go — home is the fallback of
+        # every revert path — but they must be observable instead of the
+        # tier being silently trusted to absorb its returners.  A set of
+        # ids, not a counter: revert fixpoints and restart re-vets can
+        # force-pack the same tier repeatedly.
+        self._resident_overflow_ids: set[int] = set()
+
+    @property
+    def resident_overflows(self) -> int:
+        """Distinct residents that failed a force re-pack."""
+        return len(self._resident_overflow_ids)
 
     def _dispatch(self, fn, *args, **kw) -> np.ndarray:
         t = time.perf_counter()
@@ -212,7 +224,8 @@ class HostScheduler:
         return [int(a) for a in apps[order][rejected]]
 
     def check_tiers(self, x: np.ndarray, x0: np.ndarray,
-                    newcomers: np.ndarray) -> np.ndarray:
+                    newcomers: np.ndarray,
+                    force_tiers: np.ndarray | None = None) -> np.ndarray:
         """Batched accept/reject for a whole proposal in one device call.
 
         Tier t's membership is its incumbents (``x == x0 == t``) plus the
@@ -223,20 +236,32 @@ class HostScheduler:
         [T, M_b, R] tensor for ``pack_ffd_tiers``.  Returns the *newcomer*
         app ids whose placement failed to pack, i64[K] (incumbents never
         bounce — their current placement was already accepted).
+
+        ``force_tiers`` adds tiers to pack even when no newcomer targets
+        them — the revert paths use it for home tiers whose only change is
+        returning apps (FFD is not monotone under item removal, so a
+        membership that *shrank* back toward the original can still fail to
+        pack).  Residents of a forced tier that fail are counted in
+        ``resident_overflows`` (their placement is already the fallback).
         """
         c = self.cluster
         T = len(c.hosts_per_tier)
         x = np.asarray(x, np.int64)
         x0 = np.asarray(x0, np.int64)
         newcomers = np.asarray(newcomers, np.int64)
-        if newcomers.size == 0:
+        force = (np.asarray(force_tiers, np.int64)
+                 if force_tiers is not None else np.empty(0, np.int64))
+        if newcomers.size == 0 and force.size == 0:
             return newcomers
         is_new = np.zeros(x.shape[0], bool)
         is_new[newcomers] = True
         active = np.zeros(T, bool)
         active[x[newcomers]] = True
+        active[force] = True
         member = active[x] & ((x == x0) | is_new)
         ids = np.where(member)[0]
+        if ids.size == 0:
+            return np.empty(0, np.int64)
         demand = self._demand                                # [N, R]
         dmax = demand[ids].max(axis=1)
         order = np.lexsort((-dmax, x[ids]))                  # tier, then FFD order
@@ -253,6 +278,14 @@ class HostScheduler:
             pack_ffd_tiers, jnp.asarray(dem), self._cap_dev, self._hosts_dev,
             num_hosts_pad=self._hosts_pad)
         rej = slot_app[rejected & (slot_app >= 0)]
+        if force.size:
+            # Only the force-packed tiers feed the overflow set: a hot
+            # tier's incumbents failing a routine vet is the pre-existing
+            # overload the seed already tolerates, not a returner gap.
+            in_force = np.zeros(T, bool)
+            in_force[force] = True
+            self._resident_overflow_ids.update(
+                rej[(x[rej] == x0[rej]) & in_force[x[rej]]].tolist())
         return rej[x[rej] != x0[rej]]                        # newcomers bounce
 
 
@@ -340,13 +373,95 @@ def _finish_timings(timings: dict, total_s: float) -> dict:
 
 def _collect_pack_counters(timings: dict, host: HostScheduler | None) -> None:
     if host is None:                 # variant never packed anything
-        timings.update(pack_s=0.0, pack_dispatches=0, pack_retraces=0)
+        timings.update(pack_s=0.0, pack_dispatches=0, pack_retraces=0,
+                       resident_overflows=0)
         return
     timings["pack_s"] = host.pack_s
     # check_tier(s) wall-clock minus the device dispatches = host-side glue.
     timings["host_s"] = max(0.0, timings["host_s"] - host.pack_s)
     timings["pack_dispatches"] = host.pack_dispatches
     timings["pack_retraces"] = host.pack_retraces
+    timings["resident_overflows"] = host.resident_overflows
+
+
+def _revert_unvetted(x_np: np.ndarray, x0_np: np.ndarray,
+                     region: RegionScheduler, host: HostScheduler,
+                     timings: dict) -> np.ndarray:
+    """Drop region/host-unvetted moves (stay-home is safe — the original
+    placement was accepted by the lower levels) and re-pack to a fixpoint.
+
+    Home tiers whose only change is their *returners* are force re-packed
+    too: the seed trusted them to absorb returners unchecked, but FFD is
+    not monotone under item removal, so even a membership that shrank back
+    toward the original can overflow.  A forced tier's residents that still
+    fail have no better placement than home; they are surfaced through
+    ``HostScheduler.resident_overflows`` instead of being silently trusted.
+    Each re-pack iteration reverts at least one mover, so it terminates.
+    """
+    x_np = x_np.copy()
+    t = time.perf_counter()
+    moved = np.where(x_np != x0_np)[0]
+    bad = moved[~region.check_many(moved, x_np[moved])]
+    x_np[bad] = x0_np[bad]
+    timings["region_s"] += time.perf_counter() - t
+    t = time.perf_counter()
+    force = np.unique(x0_np[bad]) if bad.size else np.empty(0, np.int64)
+    movers = np.where(x_np != x0_np)[0]
+    while movers.size or force.size:
+        rej = host.check_tiers(x_np, x0_np, movers, force_tiers=force)
+        if rej.size == 0:
+            break
+        x_np[rej] = x0_np[rej]
+        force = np.unique(x0_np[rej])
+        movers = np.where(x_np != x0_np)[0]
+    timings["host_s"] += time.perf_counter() - t
+    return x_np
+
+
+def _restart_phase(cluster: ClusterState, problem: Problem, res: SolveResult,
+                   timed_solve, region: RegionScheduler, host: HostScheduler,
+                   timings: dict, restart_rounds: int, deadline: float,
+                   x0_np: np.ndarray) -> SolveResult:
+    """Perturbation restarts after an accepted fixed point (ROADMAP knob).
+
+    The unmasked feedback loop gets diversification for free: every
+    rejection round re-solves from a perturbed warm start.  Pre-masking
+    removes those rounds, so at small N it can land in a worse local
+    optimum at a *better* wall-clock.  Each restart sends a random third of
+    the current movers home, re-solves warm-started under the same standing
+    avoid mask, re-vets the proposal (region + host, exactly like the
+    exhausted-rounds path), and keeps the best vetted objective — so the
+    result can never get worse, only cost extra solves.
+    """
+    x_best = np.asarray(res.assignment).copy()
+    obj_best = float(_objective(cluster.problem, jnp.asarray(x_best)))
+    rng = np.random.default_rng(x_best.size)     # deterministic per problem
+    attempts = improved = 0
+    for _ in range(restart_rounds):
+        if time.perf_counter() >= deadline:
+            break
+        moved = np.where(x_best != x0_np)[0]
+        if moved.size == 0:
+            break
+        sel = rng.choice(moved, size=max(1, moved.size // 3), replace=False)
+        x_pert = x_best.copy()
+        x_pert[sel] = x0_np[sel]
+        attempts += 1
+        r = timed_solve(problem, init_assignment=jnp.asarray(
+            x_pert.astype(np.int32)))
+        x_r = _revert_unvetted(np.asarray(r.assignment), x0_np, region, host,
+                               timings)
+        obj_r = float(_objective(cluster.problem, jnp.asarray(x_r)))
+        if obj_r < obj_best - 1e-9:
+            obj_best, x_best = obj_r, x_r
+            improved += 1
+    timings["restarts"] = attempts
+    timings["restart_improved"] = improved
+    if improved:
+        res = dataclasses.replace(
+            res, assignment=jnp.asarray(x_best), objective=obj_best,
+            num_moved=int(np.sum(x_best != x0_np)))
+    return res
 
 
 def cooperate(
@@ -358,6 +473,7 @@ def cooperate(
     timeout_s: float = float("inf"),
     region_budget_ms: float = 36.0,
     premask_region: bool = True,
+    restart_rounds: int = 0,
 ) -> CooperationResult:
     """Run one SPTLB balancing pass under the chosen integration variant.
 
@@ -368,12 +484,19 @@ def cooperate(
     The final mapping is vetted by exactly the same region/host checks
     either way, so the knob trades search-space pruning for rounds, never
     feasibility.
+
+    ``restart_rounds`` (manual_cnst only, default 0) adds perturbation
+    restarts after the pass reaches an accepted fixed point — the
+    diversification the unmasked path got for free from its rejection
+    rounds.  Every restart is fully re-vetted and only adopted if its
+    objective improves, so the knob spends solves, never quality.
     """
     t0 = time.perf_counter()
     problem = cluster.problem
     timings = {"solve_s": 0.0, "region_s": 0.0, "host_s": 0.0,
                "feedback_s": 0.0, "rounds": 1,
                "region_rejections": 0, "host_rejections": 0,
+               "restarts": 0, "restart_improved": 0,
                "premask": bool(premask_region) and variant == "manual_cnst"}
 
     def timed_solve(p, **kw):
@@ -447,6 +570,10 @@ def cooperate(
             if (res.converged or rounds >= max_rounds
                     or (time.perf_counter() - t0) >= timeout_s
                     or (x_prev is not None and np.array_equal(x_np, x_prev))):
+                if restart_rounds > 0:
+                    res = _restart_phase(
+                        cluster, problem, res, timed_solve, region, host,
+                        timings, restart_rounds, t0 + timeout_s, x0_np)
                 total = time.perf_counter() - t0
                 timings["rounds"] = rounds
                 _collect_pack_counters(timings, host)
@@ -496,28 +623,12 @@ def cooperate(
         res = timed_solve(problem, init_assignment=x_accepted)
         rounds += 1
 
-    # Iteration/timeout limit: drop still-rejected moves (stay-home is safe —
-    # the app's original placement was accepted by the lower levels in the
-    # initial state).  The batched pack is iterated to a fixpoint so a tier
-    # that takes a returner back re-vets its remaining newcomers against the
-    # enlarged membership (the seed's sequential per-tier loop only caught
-    # this when the home tier happened to be packed after the rejecting
-    # one); each iteration reverts at least one mover, so it terminates.
-    x_np = np.asarray(res.assignment).copy()
-    t = time.perf_counter()
-    moved = np.where(x_np != x0_np)[0]
-    bad = moved[~region.check_many(moved, x_np[moved])]
-    x_np[bad] = x0_np[bad]
-    timings["region_s"] += time.perf_counter() - t
-    t = time.perf_counter()
-    movers = np.where(x_np != x0_np)[0]
-    while movers.size:
-        rej = host.check_tiers(x_np, x0_np, movers)
-        if rej.size == 0:
-            break
-        x_np[rej] = x0_np[rej]
-        movers = np.where(x_np != x0_np)[0]
-    timings["host_s"] += time.perf_counter() - t
+    # Iteration/timeout limit: drop still-rejected moves and re-pack to a
+    # fixpoint — including pure-returner home tiers (see _revert_unvetted;
+    # the batched pack already re-vetted tiers whose returners arrived
+    # alongside surviving newcomers, this closes the no-movers-left gap).
+    x_np = _revert_unvetted(np.asarray(res.assignment), x0_np, region, host,
+                            timings)
     x_final = jnp.asarray(x_np)
     # Reverting moves changes the mapping, so the solver's reported
     # objective is stale — recompute it against the *original* problem

@@ -131,11 +131,15 @@ class Sptlb:
         batch_moves: Optional[int] = None,
         bucket_apps: bool = True,
         premask_region: bool = True,
+        restart_rounds: int = 0,
     ) -> BalanceDecision:
         """One balancing pass.  ``premask_region`` (default on) folds the
         region scheduler's feasibility matrix into the solver's avoid mask
         before the first manual_cnst solve, so feedback rounds are spent on
-        host packing only — see ``hierarchy.cooperate``."""
+        host packing only; ``restart_rounds`` adds vetted perturbation
+        restarts after an accepted fixed point (the diversification the
+        unmasked path got from its rejection rounds) — see
+        ``hierarchy.cooperate``."""
         solve_fn = engine_fn(engine, timeout_s, seed,
                              batch_moves=batch_moves, bucket_apps=bucket_apps)
         t0 = time.perf_counter()
@@ -144,9 +148,17 @@ class Sptlb:
             res = solve_fn(self.cluster.problem)
             coop = None
         else:
+            # The engine's iteration budget is the deterministic stand-in
+            # for ``timeout_s`` *within* a solve; across rounds the paper's
+            # "until SPTLB times out" is wall-clock, and the restart phase
+            # bounds itself against the same deadline.  3x leaves the
+            # feedback loop headroom over a single solve's nominal budget
+            # while still cutting off pathological round/restart spirals.
             coop = cooperate(self.cluster, solve_fn, variant,
                              max_rounds=max_feedback_rounds,
-                             premask_region=premask_region)
+                             timeout_s=3.0 * timeout_s,
+                             premask_region=premask_region,
+                             restart_rounds=restart_rounds)
             res = coop.result
         t_solve = time.perf_counter()
 

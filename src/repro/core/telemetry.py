@@ -78,6 +78,41 @@ class ResourceMonitor:
         return np.percentile(series, 99, axis=0).astype(np.float32)
 
 
+def sample_app_population(
+    rng: np.random.Generator,
+    num_apps: int,
+    *,
+    num_slo_classes: int = PAPER_SLO_TABLE.shape[1],
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Draw (base_demand, tasks, slo, criticality) for ``num_apps`` apps.
+
+    The paper-calibrated per-app distributions, factored out of
+    ``generate_cluster`` so the fleet simulator's workload engine
+    (``repro.sim.workload``) draws arrivals from exactly the same
+    population.  Draw order on ``rng`` is part of the contract: it matches
+    the historical ``generate_cluster`` sequence so seeded clusters stay
+    bit-identical across the refactor.
+
+    Demands are heavy-tailed (streaming workloads are skewed): cpu, mem and
+    task count are drawn (near-)independently — a stream job can be
+    compute-bound, state-bound (joins/windows hold memory), or fan-out-bound
+    (many small tasks).  Independence is what makes the single-objective
+    greedy baseline fail on the other two objectives (Fig. 3) instead of
+    balancing them by accident.
+    """
+    mean_cpu = rng.lognormal(mean=1.2, sigma=0.9, size=num_apps)     # cores
+    mean_mem = rng.lognormal(mean=1.8, sigma=0.9, size=num_apps)     # GB
+    base = np.stack([mean_cpu, mean_mem], axis=1).astype(np.float32)
+    tasks = np.maximum(1, rng.poisson(lam=rng.lognormal(1.6, 0.7, size=num_apps))
+                       ).astype(np.float32)
+    p = np.array([0.2, 0.2, 0.45, 0.15])
+    if num_slo_classes != p.size:          # generic fallback (property tests)
+        p = np.full(num_slo_classes, 1.0 / num_slo_classes)
+    slo = rng.choice(num_slo_classes, size=num_apps, p=p).astype(np.int32)
+    criticality = rng.beta(2.0, 5.0, size=num_apps).astype(np.float32)
+    return base, tasks, slo, criticality
+
+
 def generate_cluster(
     num_apps: int = 400,
     num_tiers: int = 5,
@@ -98,21 +133,12 @@ def generate_cluster(
         slo_allowed = rng.random((T, S)) < 0.7
         slo_allowed[:, 2] = True  # keep one universal SLO class
 
-    # --- apps: heavy-tailed demands (streaming workloads are skewed) ---
-    # cpu, mem and task count are drawn (near-)independently: a stream job
-    # can be compute-bound, state-bound (joins/windows hold memory), or
-    # fan-out-bound (many small tasks).  Independence is what makes the
-    # single-objective greedy baseline fail on the other two objectives
-    # (Fig. 3) instead of balancing them by accident.
-    mean_cpu = rng.lognormal(mean=1.2, sigma=0.9, size=num_apps)     # cores
-    mean_mem = rng.lognormal(mean=1.8, sigma=0.9, size=num_apps)     # GB
-    base = np.stack([mean_cpu, mean_mem], axis=1).astype(np.float32)
+    # --- apps: the shared paper-calibrated population (the sim's workload
+    # engine draws arrivals from the same distributions) ---
+    base, tasks, slo, criticality = sample_app_population(
+        rng, num_apps, num_slo_classes=S)
     monitor = ResourceMonitor(base, seed=seed + 1)
     demand = monitor.sample_p99()
-    tasks = np.maximum(1, rng.poisson(lam=rng.lognormal(1.6, 0.7, size=num_apps))
-                       ).astype(np.float32)
-    slo = rng.choice(S, size=num_apps, p=[0.2, 0.2, 0.45, 0.15]).astype(np.int32)
-    criticality = rng.beta(2.0, 5.0, size=num_apps).astype(np.float32)
 
     # --- initial assignment: SLO-respecting, imbalanced like Fig. 3 ---
     util_target = (initial_util if initial_util is not None

@@ -1,0 +1,32 @@
+"""Fleet simulator: dynamic workloads, scenario library, SLO accounting.
+
+Evolves a cluster over hundreds of ticks and drives ``BalanceController``
+through it — the trajectory-level evaluation (Henge-style SLO scoring,
+reconfiguration cost under live load shifts) that a one-shot solve cannot
+provide.  See ``sim.scenario`` for the registry and
+``examples/simulate_fleet.py`` for the how-to.
+"""
+from repro.sim.events import (CapacityScale, ChurnRate, FlashCrowd,
+                              FleetState, RegionOutage, RegionRestore,
+                              TimedEvent)
+from repro.sim.harness import (SIM_CONTROLLER, build_fleet, place_arrivals,
+                               run_pair, run_scenario)
+from repro.sim.scenario import (Scenario, get_scenario, list_scenarios,
+                                scenario)
+from repro.sim.slo import SimReport, SloAccountant, TickStats, compare
+from repro.sim.workload import (WorkloadConfig, WorkloadState,
+                                inject_flash_crowd, make_workload_state,
+                                set_churn_rates, workload_step,
+                                workload_trace_count)
+
+__all__ = [
+    "CapacityScale", "ChurnRate", "FlashCrowd", "FleetState", "RegionOutage",
+    "RegionRestore", "TimedEvent",
+    "SIM_CONTROLLER", "build_fleet", "place_arrivals", "run_pair",
+    "run_scenario",
+    "Scenario", "get_scenario", "list_scenarios", "scenario",
+    "SimReport", "SloAccountant", "TickStats", "compare",
+    "WorkloadConfig", "WorkloadState", "inject_flash_crowd",
+    "make_workload_state", "set_churn_rates", "workload_step",
+    "workload_trace_count",
+]

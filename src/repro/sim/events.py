@@ -1,0 +1,170 @@
+"""Timed fleet events: declarative ClusterState rewrites for scenarios.
+
+Every event is a frozen dataclass with an ``at`` tick and an ``apply`` that
+rewrites the running ``FleetState`` — capacity scales, region outages, flash
+crowds, churn re-rates.  Events never mutate arrays in place: cluster
+changes go through ``dataclasses.replace`` (which resets the memoized
+hierarchy precomputes on ``ClusterState._cache``, the standing invalidation
+contract), and workload changes go through the traced-state helpers in
+``sim.workload`` (no retrace).
+
+``FleetState.refresh`` is the single place the *effective* cluster is
+recomputed from the base (as-built) arrays plus the standing knobs
+(per-tier capacity scale, down regions).  Events only edit knobs and call
+``refresh`` — so stacked events compose and restores are exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.telemetry import ClusterState
+from repro.sim import workload as W
+
+# A down region's latency: far beyond any plausible budget, but finite so
+# solver arithmetic stays NaN-free.
+OUTAGE_LATENCY_MS = 1e6
+# Floor on the per-tier capacity scale: utilization fractions divide by
+# capacity, so a drained tier keeps a sliver instead of reaching exactly 0.
+MIN_TIER_SCALE = 0.02
+
+
+@dataclasses.dataclass
+class FleetState:
+    """The harness's mutable world: effective cluster + workload + knobs."""
+
+    cluster: ClusterState
+    wl: W.WorkloadState
+    wl_cfg: W.WorkloadConfig
+    # As-built arrays the knobs are applied against:
+    base_capacity: np.ndarray      # f32[T, R]
+    base_task_limit: np.ndarray    # f32[T]
+    base_hosts: np.ndarray         # i32[T]
+    base_slo_allowed: np.ndarray   # bool[T, S]
+    base_latency: np.ndarray       # f32[G, G]
+    # Standing knobs (events edit these, then call refresh):
+    tier_scale: np.ndarray         # f32[T] capacity scale per tier
+    down_regions: set = dataclasses.field(default_factory=set)
+    rng: np.random.Generator = dataclasses.field(
+        default_factory=lambda: np.random.default_rng(0))
+
+    def refresh(self) -> None:
+        """Recompute the effective cluster from base arrays + knobs."""
+        c = self.cluster
+        G = self.base_latency.shape[0]
+        scale = np.maximum(self.tier_scale, MIN_TIER_SCALE)
+        slo_allowed = self.base_slo_allowed.copy()
+        lat = self.base_latency.copy()
+        if self.down_regions:
+            down = np.zeros(G, bool)
+            down[list(self.down_regions)] = True
+            affected = (c.tier_regions & down).any(axis=1)
+            # An affected tier loses the capacity share its down regions
+            # carried (hosts are spread over the tier's regions)...
+            total = np.maximum(1, c.tier_regions.sum(axis=1))
+            live_share = (c.tier_regions & ~down).sum(axis=1) / total
+            scale = scale * np.where(affected, live_share, 1.0)
+            scale = np.maximum(scale, MIN_TIER_SCALE)
+            # ...and its SLO eligibility: placements there can no longer
+            # honour the latency the SLO class promises (§3.4 — this is
+            # what pushes work through the cooperation path).
+            slo_allowed[affected] = False
+            # The region itself becomes unreachable: the region scheduler's
+            # worst-latency matrix sees OUTAGE_LATENCY_MS through it, so
+            # every tier containing the region fails the latency budget.
+            lat[down, :] = OUTAGE_LATENCY_MS
+            lat[:, down] = OUTAGE_LATENCY_MS
+        cap = (self.base_capacity * scale[:, None]).astype(np.float32)
+        klim = (self.base_task_limit * scale).astype(np.float32)
+        hosts = np.maximum(1, np.round(self.base_hosts * scale)).astype(np.int32)
+        problem = dataclasses.replace(
+            self.cluster.problem,
+            capacity=jnp.asarray(cap),
+            task_limit=jnp.asarray(klim),
+            slo_allowed=jnp.asarray(slo_allowed))
+        self.cluster = dataclasses.replace(
+            self.cluster, problem=problem, hosts_per_tier=hosts,
+            region_latency=lat.astype(np.float32))
+
+
+@dataclasses.dataclass(frozen=True)
+class TimedEvent:
+    """Base: fires once when the harness reaches tick ``at``."""
+
+    at: int
+
+    def apply(self, fleet: FleetState) -> None:  # pragma: no cover
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class CapacityScale(TimedEvent):
+    """Set a tier's capacity scale relative to as-built (drains/restores).
+
+    Maintenance drains are ramps: a scenario emits a staircase of these
+    (tier_drain in ``sim.scenario``), each one a small step, so the
+    controller sees a moving target rather than a cliff.
+    """
+
+    tier: int = 0
+    scale: float = 1.0
+
+    def apply(self, fleet: FleetState) -> None:
+        fleet.tier_scale[self.tier] = self.scale
+        fleet.refresh()
+
+
+@dataclasses.dataclass(frozen=True)
+class RegionOutage(TimedEvent):
+    """A region's hosts drop out: overlapping tiers lose the capacity share
+    and the SLO eligibility, and the region becomes latency-unreachable."""
+
+    region: int = 0
+
+    def apply(self, fleet: FleetState) -> None:
+        fleet.down_regions.add(self.region)
+        fleet.refresh()
+
+
+@dataclasses.dataclass(frozen=True)
+class RegionRestore(TimedEvent):
+    region: int = 0
+
+    def apply(self, fleet: FleetState) -> None:
+        fleet.down_regions.discard(self.region)
+        fleet.refresh()
+
+
+@dataclasses.dataclass(frozen=True)
+class FlashCrowd(TimedEvent):
+    """Spike a random ``frac`` of the live apps to ``magnitude``x demand;
+    the workload step decays them back geometrically."""
+
+    frac: float = 0.05
+    magnitude: float = 6.0
+
+    def apply(self, fleet: FleetState) -> None:
+        live = np.where(np.asarray(fleet.wl.valid))[0]
+        k = max(1, int(round(self.frac * live.size)))
+        ids = fleet.rng.choice(live, size=min(k, live.size), replace=False)
+        fleet.wl = W.inject_flash_crowd(fleet.wl, ids, self.magnitude)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChurnRate(TimedEvent):
+    """Re-rate arrivals/retirements (traced workload state — no retrace)."""
+
+    arrival_rate: float | None = None
+    retire_rate: float | None = None
+
+    def apply(self, fleet: FleetState) -> None:
+        fleet.wl = W.set_churn_rates(
+            fleet.wl, arrival_rate=self.arrival_rate,
+            retire_rate=self.retire_rate)
+
+
+def events_at(events, tick: int):
+    """The scenario's events firing at this tick, in declaration order."""
+    return [e for e in events if e.at == tick]

@@ -1,0 +1,213 @@
+"""Fleet simulator harness: drive BalanceController through a scenario.
+
+This is the layer that turns the repro from a one-shot solver into the
+long-running balancing *system* the paper describes: every tick the
+workload engine advances demand on device, timed events rewrite the
+cluster (capacity drains, region outages, churn re-rates), arrivals are
+placed, and the controller decides whether to rebalance.  The SLO
+accountant scores the placement the controller leaves behind.
+
+Two policies share the machinery:
+  * ``balanced`` — a ``BalanceController`` ticks over the trajectory
+    (hysteresis, cooldown, movement budget — the paper's §3.3 loop),
+  * ``static``   — the no-rebalance baseline: the t=0 placement rides out
+    the whole trajectory.  The gap between the two, integrated over ticks,
+    is the value of proactive balancing (asserted in tests/test_sim.py,
+    tracked in BENCH_sim.json).
+
+Shapes are static for the whole run: churn flips the ``valid`` mask over a
+fixed app pool (the ``pad_problem`` inert-row convention), so the workload
+step compiles once and the solver keeps one executable per pow-2 bucket.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.controller import BalanceController, ControllerConfig
+from repro.core.hierarchy import RegionScheduler
+from repro.core.solver_local import local_search_trace_count
+from repro.core.telemetry import FIG3_INITIAL_UTIL, generate_cluster
+from repro.sim.events import FleetState, events_at
+from repro.sim.scenario import Scenario
+from repro.sim.slo import SimReport, SloAccountant, compare
+from repro.sim.workload import (make_workload_state, workload_step,
+                                workload_trace_count)
+
+# Sim-tuned controller defaults: short deterministic solver budget per tick
+# (the controller runs hundreds of times per trajectory), quick cooldown.
+SIM_CONTROLLER = ControllerConfig(trigger_d2b=0.15, trigger_over_ideal=0.05,
+                                  cooldown_rounds=2, timeout_s=4)
+
+
+def build_fleet(sc: Scenario) -> FleetState:
+    """Materialize a scenario's t=0 world.
+
+    The cluster is generated over the full app *pool* (live + standby) so
+    arrays never change shape; capacity is then rescaled to the live demand
+    share so the t=0 utilization keeps the Fig. 3 calibration whatever the
+    pool factor.
+    """
+    pool = sc.max_apps
+    cluster = generate_cluster(
+        num_apps=pool, seed=sc.seed,
+        initial_util=FIG3_INITIAL_UTIL * sc.util_scale)
+    problem = cluster.problem
+    valid = np.zeros(pool, bool)
+    valid[:sc.num_apps] = True
+
+    demand = np.asarray(problem.demand)
+    tasks = np.asarray(problem.tasks)
+    # Live demand share per resource: capacity was calibrated against the
+    # whole pool, the trajectory starts with ``num_apps`` live.
+    share = demand[valid].sum(axis=0) / np.maximum(demand.sum(axis=0), 1e-9)
+    task_share = tasks[valid].sum() / max(float(tasks.sum()), 1e-9)
+    capacity = (np.asarray(problem.capacity) * share[None, :]).astype(np.float32)
+    task_limit = (np.asarray(problem.task_limit) * task_share).astype(np.float32)
+    hosts = np.maximum(1, np.round(
+        cluster.hosts_per_tier * float(share.mean()))).astype(np.int32)
+
+    # Standby rows carry zero demand/tasks in the *problem* (the pad_problem
+    # inert-row invariant: packers and balance totals read these unmasked);
+    # the workload state keeps the full-pool baseline for later arrivals.
+    problem = dataclasses.replace(
+        problem, valid=jnp.asarray(valid),
+        demand=jnp.asarray(demand * valid[:, None]),
+        tasks=jnp.asarray(tasks * valid),
+        capacity=jnp.asarray(capacity), task_limit=jnp.asarray(task_limit))
+    cluster = dataclasses.replace(cluster, problem=problem,
+                                  hosts_per_tier=hosts)
+
+    wl = make_workload_state(
+        demand, tasks, valid, seed=sc.seed + 7,
+        arrival_rate=sc.arrival_rate, retire_rate=sc.retire_rate)
+    return FleetState(
+        cluster=cluster, wl=wl, wl_cfg=sc.workload,
+        base_capacity=capacity, base_task_limit=task_limit,
+        base_hosts=hosts.copy(),
+        base_slo_allowed=np.asarray(problem.slo_allowed).copy(),
+        base_latency=cluster.region_latency.copy(),
+        tier_scale=np.ones(problem.num_tiers, np.float32),
+        rng=np.random.default_rng(sc.seed + 13))
+
+
+def place_arrivals(fleet: FleetState, arrivals: np.ndarray) -> np.ndarray:
+    """Initial placement for newly-arrived apps: the SLO-eligible,
+    region-reachable tier with the most post-placement headroom (greedy,
+    sequential — arrivals per tick are few).  Returns the new assignment0.
+
+    This mimics the paper's pre-balancer reality: arrivals are placed by a
+    simple admission rule, and it is the *controller's* job to clean up
+    the drift they cause.
+    """
+    problem = fleet.cluster.problem
+    x = np.asarray(problem.assignment0).copy()
+    slo = np.asarray(problem.slo)
+    slo_allowed = np.asarray(problem.slo_allowed)
+    cap = np.asarray(problem.capacity)
+    klim = np.asarray(problem.task_limit)
+    demand = np.asarray(problem.demand)
+    tasks = np.asarray(problem.tasks)
+    valid = np.asarray(problem.valid)
+    region_ok = RegionScheduler(fleet.cluster).feasibility_matrix()  # [N, T]
+
+    live = valid.copy()
+    live[arrivals] = False                    # loads before this batch
+    T = problem.num_tiers
+    util = np.zeros((T, demand.shape[1]), np.float64)
+    tsk = np.zeros(T, np.float64)
+    np.add.at(util, x[live], demand[live])
+    np.add.at(tsk, x[live], tasks[live])
+
+    for n in arrivals:
+        ok = slo_allowed[:, slo[n]] & region_ok[n]
+        if not ok.any():
+            ok = slo_allowed[:, slo[n]]       # degraded: ignore region
+        if not ok.any():
+            ok = np.ones(T, bool)             # last resort: anywhere
+        frac = np.maximum(
+            ((util + demand[n]) / np.maximum(cap, 1e-9)).max(axis=1),
+            (tsk + tasks[n]) / np.maximum(klim, 1e-9))
+        frac = np.where(ok, frac, np.inf)
+        t = int(np.argmin(frac))
+        x[n] = t
+        util[t] += demand[n]
+        tsk[t] += tasks[n]
+    return x
+
+
+def run_scenario(sc: Scenario, *, policy: str = "balanced",
+                 config: ControllerConfig | None = None,
+                 verbose: bool = False) -> SimReport:
+    """Run one scenario under one policy; returns the scored trajectory."""
+    assert policy in ("balanced", "static"), policy
+    fleet = build_fleet(sc)
+    ctl = (BalanceController(fleet.cluster, config or SIM_CONTROLLER)
+           if policy == "balanced" else None)
+    acct = SloAccountant()
+    solver_traces0 = local_search_trace_count()
+    wl_traces0 = workload_trace_count()
+
+    for tick in range(sc.ticks):
+        # 1. Advance demand on device (one compiled step for the whole run).
+        fleet.wl, demand, tasks, valid = workload_step(fleet.wl_cfg, fleet.wl)
+        prev_valid = np.asarray(fleet.cluster.problem.valid)
+        fleet.cluster = dataclasses.replace(
+            fleet.cluster,
+            problem=dataclasses.replace(
+                fleet.cluster.problem, demand=demand, tasks=tasks,
+                valid=valid))
+
+        # 2. Timed events rewrite the effective cluster / workload knobs.
+        for ev in events_at(sc.events, tick):
+            ev.apply(fleet)
+
+        # 3. Place arrivals (after events: admission sees drained capacity).
+        arrivals = np.where(np.asarray(valid) & ~prev_valid)[0]
+        if arrivals.size:
+            x0 = place_arrivals(fleet, arrivals)
+            fleet.cluster = dataclasses.replace(
+                fleet.cluster,
+                problem=fleet.cluster.problem.with_assignment0(
+                    jnp.asarray(x0)))
+
+        # 4. Controller decides; the applied mapping becomes assignment0.
+        if ctl is not None:
+            evr = ctl.tick(fleet.cluster)
+            fleet.cluster = ctl.cluster
+            stat = acct.observe(
+                fleet.cluster, moved=evr.moved if evr.applied else 0,
+                applied=evr.applied, triggered=evr.triggered,
+                solve_s=evr.time_s)
+        else:
+            stat = acct.observe(fleet.cluster)
+        if verbose:
+            print(f"  t={tick:4d} live={stat.live_apps:5d} "
+                  f"d2b={stat.d2b:.3f} slo_viol={stat.slo_violating_apps:4d} "
+                  f"over_ideal={stat.over_ideal_tiers} "
+                  f"{'MOVED ' + str(stat.moved) if stat.applied else ''}")
+
+    report = acct.report(sc.name, policy)
+    report.extra.update(
+        solver_retraces=local_search_trace_count() - solver_traces0,
+        workload_retraces=workload_trace_count() - wl_traces0,
+        num_apps=sc.num_apps, pool=sc.max_apps)
+    if ctl is not None:
+        report.extra["audit"] = ctl.audit()
+    return report
+
+
+def run_pair(sc: Scenario, *, config: ControllerConfig | None = None,
+             verbose: bool = False) -> dict:
+    """Baseline + controller over the same trajectory, plus the comparison
+    record (the per-scenario entry in BENCH_sim.json)."""
+    baseline = run_scenario(sc, policy="static", verbose=verbose)
+    balanced = run_scenario(sc, policy="balanced", config=config,
+                            verbose=verbose)
+    return {
+        "baseline": baseline,
+        "balanced": balanced,
+        "compare": compare(baseline, balanced),
+    }

@@ -1,0 +1,169 @@
+"""Scenario library: named, declarative fleet trajectories.
+
+A ``Scenario`` is a workload configuration plus a list of timed events
+(``sim.events``) over a fixed tick horizon.  The registry holds the five
+canonical trajectories the balancing controller is scored on
+(``benchmarks/sim_scenarios.py`` -> ``BENCH_sim.json``):
+
+  * ``steady_diurnal`` — day/night sinusoid + burst noise, no surprises;
+    the controller should mostly *hold* balance at low movement cost,
+  * ``flash_crowd``    — heavy-tailed demand spikes on a random app subset
+    (plus a low ambient ignition rate) that decay back over ~a dozen ticks,
+  * ``tier_drain``     — maintenance: one tier's capacity staircases to ~0
+    and back; the controller must evacuate ahead of the ramp and refill
+    after (Madsen et al.'s live-reconfiguration cost, arXiv 1602.03770),
+  * ``region_outage``  — a region's hosts vanish: overlapping tiers lose
+    capacity share and SLO eligibility and the region goes latency-dark,
+    stressing the §3.4 cooperation path (premask + avoid feedback),
+  * ``churn_heavy``    — app arrivals/retirements churn the fleet over a
+    1.5x standby pool; shapes stay fixed (valid-mask padding), so the
+    whole trajectory reuses one compiled solver per pow-2 bucket.
+
+Builders take (num_apps, ticks, seed) so benchmarks can run the same
+scenario at smoke and fleet scale; event times scale with the horizon.
+
+Adding a scenario:
+
+    @scenario("my_case", "one-line description")
+    def _my_case(num_apps, ticks, seed):
+        return Scenario(..., events=(CapacityScale(at=ticks // 3, ...),))
+
+and it is immediately runnable via ``sim.harness.run_scenario`` /
+``examples/simulate_fleet.py --scenario my_case``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from repro.sim.events import (CapacityScale, ChurnRate, FlashCrowd,
+                              RegionOutage, RegionRestore, TimedEvent)
+from repro.sim.workload import WorkloadConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    name: str
+    description: str
+    ticks: int
+    num_apps: int                  # live apps at t=0
+    workload: WorkloadConfig
+    events: tuple[TimedEvent, ...] = ()
+    pool_frac: float = 1.0         # standby pool: Nmax = num_apps * pool_frac
+    arrival_rate: float = 0.0      # expected arrivals per tick at t=0
+    retire_rate: float = 0.0       # per-app retirement prob per tick at t=0
+    # t=0 utilization as a multiple of the Fig. 3 calibration.  Dynamic
+    # scenarios need headroom the one-shot experiment didn't: at the Fig. 3
+    # levels the *perfectly balanced* cluster already sits at ~0.57 mean
+    # utilization, so any diurnal peak pushes every tier over the 0.70
+    # ideal line no matter what the controller does.  0.75 leaves the
+    # balanced state under ideal through normal swings — violation ticks
+    # then measure imbalance, not global overload.
+    util_scale: float = 0.75
+    seed: int = 0
+
+    @property
+    def max_apps(self) -> int:
+        return max(self.num_apps, int(round(self.num_apps * self.pool_frac)))
+
+
+_REGISTRY: dict[str, tuple[str, Callable[..., Scenario]]] = {}
+
+
+def scenario(name: str, description: str):
+    def wrap(builder):
+        _REGISTRY[name] = (description, builder)
+        return builder
+    return wrap
+
+
+def list_scenarios() -> dict[str, str]:
+    """name -> one-line description, in registration order."""
+    return {name: desc for name, (desc, _) in _REGISTRY.items()}
+
+
+def get_scenario(name: str, *, num_apps: int = 400, ticks: int = 160,
+                 seed: int = 0) -> Scenario:
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown scenario {name!r}; have {sorted(_REGISTRY)}")
+    desc, builder = _REGISTRY[name]
+    sc = builder(num_apps, ticks, seed)
+    return dataclasses.replace(sc, name=name, description=desc)
+
+
+def _ramp(tier: int, start: int, end: int, lo: float, hi: float,
+          steps: int = 6) -> list[CapacityScale]:
+    """A capacity staircase from ``lo`` to ``hi`` over [start, end)."""
+    steps = max(1, min(steps, end - start))
+    out = []
+    for i in range(steps):
+        frac = (i + 1) / steps
+        out.append(CapacityScale(
+            at=start + round(i * (end - start) / steps),
+            tier=tier, scale=lo + frac * (hi - lo)))
+    return out
+
+
+@scenario("steady_diurnal", "day/night sinusoid + burst noise, no events")
+def _steady_diurnal(num_apps: int, ticks: int, seed: int) -> Scenario:
+    return Scenario(
+        name="steady_diurnal", description="", ticks=ticks,
+        num_apps=num_apps, seed=seed,
+        workload=WorkloadConfig(period=max(16, ticks // 2),
+                                diurnal_amp=0.35, burst_sigma=0.12))
+
+
+@scenario("flash_crowd", "heavy-tailed demand spikes that decay over ticks")
+def _flash_crowd(num_apps: int, ticks: int, seed: int) -> Scenario:
+    return Scenario(
+        name="flash_crowd", description="", ticks=ticks,
+        num_apps=num_apps, seed=seed,
+        workload=WorkloadConfig(period=max(16, ticks // 2),
+                                diurnal_amp=0.20, burst_sigma=0.12,
+                                flash_prob=0.0015, flash_mag=5.0,
+                                flash_decay=0.88),
+        events=(FlashCrowd(at=ticks // 4, frac=0.08, magnitude=6.0),
+                FlashCrowd(at=(5 * ticks) // 8, frac=0.05, magnitude=8.0)))
+
+
+@scenario("tier_drain", "maintenance: a tier's capacity ramps to ~0 and back")
+def _tier_drain(num_apps: int, ticks: int, seed: int) -> Scenario:
+    # Drain the paper's hot tier (tier 3, index 2): the hardest case — it
+    # starts over ideal, so the evacuation fights the initial imbalance.
+    t0, t1 = ticks // 5, (2 * ticks) // 5
+    t2, t3 = (3 * ticks) // 5, (4 * ticks) // 5
+    events = (_ramp(2, t0, t1, 1.0, 0.05)       # drain staircase
+              + _ramp(2, t2, t3, 0.05, 1.0))    # restore staircase
+    return Scenario(
+        name="tier_drain", description="", ticks=ticks,
+        num_apps=num_apps, seed=seed,
+        workload=WorkloadConfig(period=max(16, ticks // 2),
+                                diurnal_amp=0.15, burst_sigma=0.10),
+        events=tuple(events))
+
+
+@scenario("region_outage", "a region goes dark: capacity + SLO eligibility "
+                           "loss on overlapping tiers (stresses §3.4)")
+def _region_outage(num_apps: int, ticks: int, seed: int) -> Scenario:
+    return Scenario(
+        name="region_outage", description="", ticks=ticks,
+        num_apps=num_apps, seed=seed,
+        workload=WorkloadConfig(period=max(16, ticks // 2),
+                                diurnal_amp=0.15, burst_sigma=0.10),
+        events=(RegionOutage(at=ticks // 4, region=0),
+                RegionRestore(at=(3 * ticks) // 4, region=0)))
+
+
+@scenario("churn_heavy", "app arrivals/retirements over a standby pool "
+                         "(valid-mask padding keeps shapes static)")
+def _churn_heavy(num_apps: int, ticks: int, seed: int) -> Scenario:
+    return Scenario(
+        name="churn_heavy", description="", ticks=ticks,
+        num_apps=num_apps, seed=seed, pool_frac=1.5,
+        arrival_rate=max(1.0, 0.01 * num_apps),
+        retire_rate=0.008,
+        workload=WorkloadConfig(period=max(16, ticks // 2),
+                                diurnal_amp=0.25, burst_sigma=0.12),
+        events=(ChurnRate(at=ticks // 2,
+                          arrival_rate=max(2.0, 0.02 * num_apps)),))

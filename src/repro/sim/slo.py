@@ -1,0 +1,180 @@
+"""SLO accounting over a simulated trajectory (§3.3 decision evaluation).
+
+The paper's decision-evaluation stage emits per-decision metrics; Henge
+(arXiv 1802.00082) argues stream schedulers should be scored on *intent/SLO
+satisfaction over time* under dynamic load.  This module does both: every
+tick it scores the cluster the controller left behind, and the accumulated
+``SimReport`` is the trajectory-level scorecard the benchmarks persist.
+
+Per-tick signals:
+  * ``slo_violating_apps`` — live apps currently placed on a tier that is
+    not eligible for their SLO class (constraint 4 read as a *state*, not a
+    move filter: outages/drains can strand incumbents on newly-ineligible
+    tiers),
+  * ``over_ideal_tiers`` / ``over_capacity_tiers`` — tiers above their
+    ideal utilization (goal 5) / hard capacity (constraint 1) on any
+    resource or on task count,
+  * ``d2b`` — difference-to-balance (Fig. 5 y-axis) as a time series,
+  * ``moved`` / ``applied`` / ``solve_s`` — movement (the downtime proxy,
+    goal 8) and solver wall-clock attributable to the controller.
+
+Totals integrate over ticks: an app stranded for 10 ticks costs 10
+app-ticks — reacting late is worse than reacting small.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import metrics as M
+from repro.core.problem import Problem, utilization_fraction
+from repro.core.telemetry import ClusterState
+
+# Slack on the over-ideal / over-capacity tests so float noise at exactly
+# the ideal line does not count as a violation tick.
+EPS = 1e-3
+
+
+@dataclasses.dataclass
+class TickStats:
+    tick: int
+    live_apps: int
+    d2b: float
+    slo_violating_apps: int
+    over_ideal_tiers: int
+    over_capacity_tiers: int
+    # Severity-weighted over-ideal: sum over tiers of the worst-resource
+    # excess above ideal.  The tier *count* saturates (a 10x-hot tier and a
+    # 1.01x one both count 1); the excess integral is what goal 5 actually
+    # minimizes.
+    over_ideal_excess: float = 0.0
+    moved: int = 0
+    applied: bool = False
+    triggered: bool = False
+    solve_s: float = 0.0
+
+
+def score_cluster(problem: Problem) -> dict:
+    """The assignment-state signals for one tick (on ``assignment0`` — the
+    placement actually in effect after this tick's control action)."""
+    x = problem.assignment0
+    slo_ok = np.asarray(problem.slo_allowed)[
+        np.asarray(x), np.asarray(problem.slo)]
+    valid = np.asarray(problem.valid)
+    uf, tf = utilization_fraction(problem, x)
+    uf, tf = np.asarray(uf), np.asarray(tf)
+    ideal = np.asarray(problem.ideal_frac)
+    ideal_t = np.asarray(problem.ideal_task_frac)
+    over_ideal = np.any(uf > ideal + EPS, axis=1) | (tf > ideal_t + EPS)
+    over_cap = np.any(uf > 1.0 + EPS, axis=1) | (tf > 1.0 + EPS)
+    excess = np.maximum(np.max(uf - ideal, axis=1),
+                        tf - ideal_t).clip(min=0.0)
+    return {
+        "live_apps": int(valid.sum()),
+        "slo_violating_apps": int(np.sum(~slo_ok & valid)),
+        "over_ideal_tiers": int(over_ideal.sum()),
+        "over_capacity_tiers": int(over_cap.sum()),
+        "over_ideal_excess": float(excess.sum()),
+        "d2b": float(M.difference_to_balance(problem, x)),
+    }
+
+
+class SloAccountant:
+    """Accumulates per-tick stats; ``report`` freezes them into a SimReport."""
+
+    def __init__(self):
+        self.ticks: list[TickStats] = []
+
+    def observe(self, cluster: ClusterState, *, moved: int = 0,
+                applied: bool = False, triggered: bool = False,
+                solve_s: float = 0.0) -> TickStats:
+        s = score_cluster(cluster.problem)
+        stat = TickStats(tick=len(self.ticks), moved=moved, applied=applied,
+                         triggered=triggered, solve_s=solve_s, **s)
+        self.ticks.append(stat)
+        return stat
+
+    def report(self, scenario: str, policy: str) -> "SimReport":
+        return SimReport(scenario=scenario, policy=policy, ticks=self.ticks)
+
+
+@dataclasses.dataclass
+class SimReport:
+    """Trajectory scorecard: what BENCH_sim.json persists per (scenario,
+    policy) and what tests assert margins on."""
+
+    scenario: str
+    policy: str
+    ticks: list[TickStats]
+    extra: dict = dataclasses.field(default_factory=dict)
+
+    def summary(self) -> dict:
+        ts = self.ticks
+        d2b = np.array([t.d2b for t in ts]) if ts else np.zeros(1)
+        slo_ticks = sum(t.slo_violating_apps for t in ts)
+        over_ideal = sum(t.over_ideal_tiers for t in ts)
+        return {
+            "scenario": self.scenario,
+            "policy": self.policy,
+            "ticks": len(ts),
+            # app-ticks on an ineligible tier + tier-ticks over ideal: the
+            # combined SLO-violation integral the acceptance margin uses.
+            "slo_violation_ticks": slo_ticks + over_ideal,
+            "slo_violating_app_ticks": slo_ticks,
+            "over_ideal_tier_ticks": over_ideal,
+            "over_capacity_tier_ticks": sum(
+                t.over_capacity_tiers for t in ts),
+            "over_ideal_excess_integral": float(sum(
+                t.over_ideal_excess for t in ts)),
+            "total_moves": sum(t.moved for t in ts if t.applied),
+            "rebalances": sum(1 for t in ts if t.applied),
+            "triggers": sum(1 for t in ts if t.triggered),
+            "mean_d2b": float(d2b.mean()),
+            "peak_d2b": float(d2b.max()),
+            "final_d2b": float(d2b[-1]),
+            "solver_time_s": float(sum(t.solve_s for t in ts)),
+            **self.extra,
+        }
+
+    def series(self) -> dict:
+        """Per-tick time series (for BENCH_sim.json / plotting)."""
+        return {
+            "d2b": [round(t.d2b, 4) for t in self.ticks],
+            "slo_violating_apps": [t.slo_violating_apps for t in self.ticks],
+            "over_ideal_tiers": [t.over_ideal_tiers for t in self.ticks],
+            "live_apps": [t.live_apps for t in self.ticks],
+            "moved": [t.moved if t.applied else 0 for t in self.ticks],
+        }
+
+
+def compare(baseline: SimReport, balanced: SimReport) -> dict:
+    """Controller-vs-static deltas: the numbers the acceptance asserts."""
+    b, c = baseline.summary(), balanced.summary()
+
+    def ratio(key):
+        # None (JSON null) when the baseline integral is 0 but the balanced
+        # run is not — json.dump would otherwise emit a bare ``Infinity``,
+        # which is not valid JSON.
+        if b[key] > 0:
+            return c[key] / b[key]
+        return 1.0 if c[key] == 0 else None
+
+    return {
+        "slo_violation_ticks": {"baseline": b["slo_violation_ticks"],
+                                "balanced": c["slo_violation_ticks"],
+                                "ratio": ratio("slo_violation_ticks")},
+        "over_ideal_tier_ticks": {"baseline": b["over_ideal_tier_ticks"],
+                                  "balanced": c["over_ideal_tier_ticks"],
+                                  "ratio": ratio("over_ideal_tier_ticks")},
+        "over_ideal_excess_integral": {
+            "baseline": b["over_ideal_excess_integral"],
+            "balanced": c["over_ideal_excess_integral"],
+            "ratio": ratio("over_ideal_excess_integral")},
+        "mean_d2b": {"baseline": b["mean_d2b"], "balanced": c["mean_d2b"],
+                     "ratio": (c["mean_d2b"] / b["mean_d2b"]
+                               if b["mean_d2b"] > 0 else 1.0)},
+        "total_moves": c["total_moves"],
+        "rebalances": c["rebalances"],
+        "solver_time_s": c["solver_time_s"],
+    }

@@ -1,0 +1,193 @@
+"""Vectorized workload engine: per-app demand evolution as one jitted step.
+
+The paper motivates *proactive* balancing — "areas of the infrastructure
+that previously required minimal load balancing, now must be made more
+robust and proactive to application load" — which only matters if load
+actually moves.  This module evolves the per-app demand the §3.1 collection
+stage would observe, tick over tick, entirely on device:
+
+  * **diurnal sinusoid** — every app follows a shared day/night cycle with a
+    per-app phase offset (multi-region fleets see staggered peaks),
+  * **lognormal burst noise** — the §3.1 p99-vs-mean gap, resampled per tick,
+  * **flash crowds** — rare heavy-tailed demand spikes (per-app ignition or
+    scenario-injected) that decay geometrically back to baseline,
+  * **app churn** — arrivals and retirements flip the ``valid`` mask over a
+    fixed-size app pool, the same inert-row convention ``problem.pad_problem``
+    uses for shape bucketing.  The array shapes never change as the live app
+    count drifts, so the workload step, the solvers, and the cooperation
+    loop all keep their compiled executables (at most one retrace per pow-2
+    bucket — asserted in tests/test_sim.py via the existing counters).
+
+``WorkloadState`` is a registered-dataclass pytree; churn rates live in the
+*state* (traced scalars), not the static config, so scenario events can
+re-rate churn mid-trajectory without triggering a retrace.
+
+The base (mean) demand per app is drawn from the same paper-calibrated
+population as ``telemetry.generate_cluster``
+(``telemetry.sample_app_population``) — the simulator modulates the
+collected p99 baseline rather than inventing a second distribution.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Retrace counter with the same contract as solver_local/pack: increments at
+# trace time only, so a delta of 0 across a step means the jit cache was hit.
+_TRACE_COUNTS = {"workload_step": 0}
+
+
+def workload_trace_count() -> int:
+    """Number of times the jitted workload step has been (re)traced."""
+    return _TRACE_COUNTS["workload_step"]
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadConfig:
+    """Static (hashable) knobs of the demand process.
+
+    Anything a scenario event may change mid-run must NOT live here — it
+    would retrace the step.  Churn rates are therefore traced state.
+    """
+
+    period: int = 96             # ticks per diurnal cycle
+    diurnal_amp: float = 0.30    # peak-to-mean amplitude of the sinusoid
+    burst_sigma: float = 0.15    # lognormal tick-noise sigma
+    flash_prob: float = 0.0      # per-app per-tick flash-crowd ignition prob
+    flash_mag: float = 5.0       # flash-crowd demand multiplier (median)
+    flash_decay: float = 0.85    # per-tick geometric decay back to 1.0
+    task_elasticity: float = 0.5  # fraction of demand swing mirrored in tasks
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class WorkloadState:
+    """Device-resident demand-process state over a fixed pool of Nmax apps."""
+
+    key: jax.Array           # PRNG key
+    base_demand: jax.Array   # f32[Nmax, R] collected p99 baseline per app
+    base_tasks: jax.Array    # f32[Nmax]    baseline task count per app
+    phase: jax.Array         # f32[Nmax]    diurnal phase offset in [0, 1)
+    flash: jax.Array         # f32[Nmax]    flash-crowd multiplier (>= 1)
+    valid: jax.Array         # bool[Nmax]   live apps (churn flips this)
+    arrival_rate: jax.Array  # f32[] expected arrivals per tick (traced!)
+    retire_rate: jax.Array   # f32[] per-app per-tick retirement prob (traced!)
+    tick: jax.Array          # i32[] ticks advanced so far
+
+    @property
+    def num_live(self) -> jax.Array:
+        return jnp.sum(self.valid.astype(jnp.int32))
+
+
+def make_workload_state(
+    base_demand,
+    base_tasks,
+    valid,
+    *,
+    seed: int = 0,
+    arrival_rate: float = 0.0,
+    retire_rate: float = 0.0,
+) -> WorkloadState:
+    """Build the initial state around a collected baseline.
+
+    ``base_demand``/``base_tasks`` cover the whole Nmax pool (rows with
+    ``valid=False`` are standby apps that may arrive later); phases are
+    seeded uniformly so tiers don't peak in lock-step.
+    """
+    base_demand = jnp.asarray(base_demand, jnp.float32)
+    n = base_demand.shape[0]
+    rng = np.random.default_rng(seed)
+    return WorkloadState(
+        key=jax.random.PRNGKey(seed),
+        base_demand=base_demand,
+        base_tasks=jnp.asarray(base_tasks, jnp.float32),
+        phase=jnp.asarray(rng.random(n), jnp.float32),
+        flash=jnp.ones((n,), jnp.float32),
+        valid=jnp.asarray(valid, bool),
+        arrival_rate=jnp.float32(arrival_rate),
+        retire_rate=jnp.float32(retire_rate),
+        tick=jnp.int32(0),
+    )
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def workload_step(cfg: WorkloadConfig, state: WorkloadState
+                  ) -> tuple[WorkloadState, jax.Array, jax.Array, jax.Array]:
+    """Advance one tick; returns (state', demand[Nmax, R], tasks[Nmax],
+    valid[Nmax]).
+
+    Fixed shapes whatever the live app count: churn only flips the ``valid``
+    mask, exactly the inert-row convention the solvers' shape bucketing
+    already handles, so a whole scenario shares one compiled step.
+    """
+    _TRACE_COUNTS["workload_step"] += 1      # trace-time side effect only
+    key, k_burst, k_ignite, k_mag, k_retire, k_arrive = jax.random.split(
+        state.key, 6)
+    n = state.base_demand.shape[0]
+    t = state.tick.astype(jnp.float32)
+
+    # Diurnal sinusoid with per-app phase.
+    diurnal = 1.0 + cfg.diurnal_amp * jnp.sin(
+        2.0 * jnp.pi * (t / cfg.period + state.phase))
+    # Lognormal burst noise (median 1).
+    burst = jnp.exp(cfg.burst_sigma * jax.random.normal(k_burst, (n,)))
+    # Flash crowds: decay standing spikes, ignite new ones.
+    flash = 1.0 + (state.flash - 1.0) * cfg.flash_decay
+    ignite = jax.random.uniform(k_ignite, (n,)) < cfg.flash_prob
+    mag = cfg.flash_mag * jnp.exp(0.25 * jax.random.normal(k_mag, (n,)))
+    flash = jnp.where(ignite & state.valid, jnp.maximum(flash, mag), flash)
+
+    # Churn.  Retirements: per-live-app Bernoulli.  Arrivals: Bernoulli over
+    # standby rows with the rate split across them, so the *expected* number
+    # of arrivals per tick is ``arrival_rate`` while shapes stay static.
+    retire = jax.random.uniform(k_retire, (n,)) < state.retire_rate
+    valid = state.valid & ~retire
+    standby = ~valid
+    n_standby = jnp.maximum(1, jnp.sum(standby.astype(jnp.int32)))
+    p_arrive = jnp.minimum(1.0, state.arrival_rate / n_standby)
+    arrive = standby & (jax.random.uniform(k_arrive, (n,)) < p_arrive)
+    valid = valid | arrive
+
+    mult = diurnal * burst * flash                             # f32[Nmax]
+    # Standby/retired rows emit exactly zero demand and tasks — the
+    # ``pad_problem`` inert-row invariant.  The host packer and the
+    # difference-to-balance totals consume these arrays unmasked, so ghost
+    # demand on invalid rows would occupy hosts at stale placements and
+    # inflate the balanced-state target.
+    live = valid.astype(jnp.float32)
+    demand = state.base_demand * (mult * live)[:, None]
+    # Task fan-out follows demand sub-linearly (scaling adds tasks slower
+    # than it adds load); live apps always keep >= 1 task.
+    tasks = live * jnp.maximum(
+        1.0, state.base_tasks * (1.0 + cfg.task_elasticity * (mult - 1.0)))
+
+    state = dataclasses.replace(
+        state, key=key, flash=flash, valid=valid, tick=state.tick + 1)
+    return state, demand, tasks, valid
+
+
+def inject_flash_crowd(state: WorkloadState, app_ids: np.ndarray,
+                       magnitude: float) -> WorkloadState:
+    """Scenario-driven flash crowd: spike the given apps' multipliers.
+
+    Host-side event plumbing (runs once at the event tick); the decay back
+    to baseline happens inside the jitted step.
+    """
+    ids = jnp.asarray(np.asarray(app_ids, np.int32))
+    flash = state.flash.at[ids].max(jnp.float32(magnitude))
+    return dataclasses.replace(state, flash=flash)
+
+
+def set_churn_rates(state: WorkloadState, *, arrival_rate=None,
+                    retire_rate=None) -> WorkloadState:
+    """Scenario-driven churn re-rating — traced scalars, so no retrace."""
+    kw = {}
+    if arrival_rate is not None:
+        kw["arrival_rate"] = jnp.float32(arrival_rate)
+    if retire_rate is not None:
+        kw["retire_rate"] = jnp.float32(retire_rate)
+    return dataclasses.replace(state, **kw)

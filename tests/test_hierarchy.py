@@ -81,6 +81,51 @@ def test_wcnst_is_static_avoid(cluster):
     assert not avoid[np.arange(len(x0)), x0].any()
 
 
+def test_restart_rounds_never_worse_and_vetted(cluster):
+    """ROADMAP follow-up: the premasked path gets the diversification that
+    rejection rounds used to provide, as explicit perturbation restarts.
+    Candidates are re-vetted, and only adopted on objective improvement —
+    so the knob can spend solves but never quality or feasibility."""
+    s = Sptlb(cluster)
+    d0 = s.balance("local", timeout_s=30, variant="manual_cnst",
+                   max_feedback_rounds=20)
+    d1 = s.balance("local", timeout_s=30, variant="manual_cnst",
+                   max_feedback_rounds=20, restart_rounds=3)
+    assert d1.solve.objective <= d0.solve.objective + 1e-5
+    assert d1.violations.ok
+    tm = d1.cooperation.timings
+    assert 0 < tm["restarts"] <= 3
+    assert 0 <= tm["restart_improved"] <= tm["restarts"]
+    # restart-adopted moves still pass the region vet
+    region = RegionScheduler(cluster)
+    x = np.asarray(d1.assignment)
+    x0 = np.asarray(cluster.problem.assignment0)
+    moved = np.where(x != x0)[0]
+    assert region.check_many(moved, x[moved]).all()
+
+
+def test_check_tiers_force_packs_returner_tier():
+    """ROADMAP gap: a home tier whose only change is returning apps (no
+    movers to vet) must be re-packed instead of trusted to absorb them.
+    ``force_tiers`` packs it and surfaces residents that fail."""
+    import dataclasses
+    cluster = generate_cluster(num_apps=50, seed=1)
+    # shrink tier 0 to a single host so its own residents cannot pack
+    hosts = cluster.hosts_per_tier.copy()
+    hosts[0] = 1
+    x0 = np.zeros(50, np.int64)              # everyone lives in tier 0
+    cluster = dataclasses.replace(cluster, hosts_per_tier=hosts)
+    host = HostScheduler(cluster)
+    # no movers at all: the legacy call has nothing to pack...
+    assert host.check_tiers(x0, x0, np.empty(0, np.int64)).size == 0
+    assert host.resident_overflows == 0
+    # ...but the force re-pack vets the tier and counts the overflow
+    rej = host.check_tiers(x0, x0, np.empty(0, np.int64),
+                           force_tiers=np.array([0]))
+    assert rej.size == 0                     # residents never bounce
+    assert host.resident_overflows > 0       # the overflow is observable
+
+
 def test_greedy_engine_through_sptlb(cluster):
     d = Sptlb(cluster).balance("greedy-cpu")
     # Greedy honours the movement budget and SLO table but is capacity-naive
