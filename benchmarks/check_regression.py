@@ -1,0 +1,222 @@
+"""CI perf-regression gate over the smoke benchmark records.
+
+Compares the just-written ``BENCH_solver_smoke.json`` / ``BENCH_sim_smoke.json``
+against the committed baselines (stashed by CI before the smoke runs) with
+per-metric tolerances, and exits nonzero on any regression — the solver and
+simulator scorecards become a gate instead of an artifact someone has to
+remember to read.
+
+Two tolerance regimes, deliberately different:
+
+* **Machine-independent metrics** (violation-tick ratios, retrace and round
+  counts, objectives, budget compliance) are pinned tightly — these are
+  deterministic given the seeds, so drift means a behavior change.
+* **Wall-clock metrics** (moves/s, cooperation total seconds) carry generous
+  multipliers: the committed baseline and the CI runner are different
+  machines, so only order-of-magnitude regressions are actionable.
+
+Run what CI runs:
+
+    PYTHONPATH=src python -m benchmarks.check_regression --baseline .bench-baseline
+
+A missing baseline file skips that record (first run of a new benchmark); a
+baseline metric missing from the current record is a regression — a renamed
+metric must regenerate its committed baseline in the same PR.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import math
+import os
+import sys
+
+SIM_SMOKE = "BENCH_sim_smoke.json"
+SOLVER_SMOKE = "BENCH_solver_smoke.json"
+
+
+@dataclasses.dataclass(frozen=True)
+class Check:
+    """One gated metric.
+
+    ``rule`` is ``not_above`` (smaller is better: fail when
+    ``cur > base * (1 + rel_slack) + abs_slack``), ``not_below`` (bigger is
+    better: fail when ``cur < base / (1 + rel_slack) - abs_slack``), or
+    ``stays_true`` (fail when the baseline is truthy and the current value
+    is not).  ``path`` components may be ``"*"``, expanded against the
+    baseline record.
+    """
+
+    file: str
+    path: tuple
+    rule: str
+    abs_slack: float = 0.0
+    rel_slack: float = 0.0
+
+
+CHECKS = (
+    # --- fleet simulator smoke: deterministic scorecards, tight slack ----
+    Check(SIM_SMOKE, ("*", "compare", "slo_violation_ticks", "ratio"), "not_above", 0.10),
+    Check(SIM_SMOKE, ("*", "compare", "over_ideal_excess_integral", "ratio"), "not_above", 0.15),
+    Check(SIM_SMOKE, ("*", "compare", "movement", "within_budget"), "stays_true"),
+    Check(SIM_SMOKE, ("*", "balanced", "over_capacity_tier_ticks"), "not_above", 2),
+    Check(SIM_SMOKE, ("*", "balanced", "solver_retraces"), "not_above", 1),
+    Check(SIM_SMOKE, ("*", "balanced", "workload_retraces"), "not_above", 1),
+    Check(SIM_SMOKE, ("*", "balanced", "movement_cost"), "not_above", 10, 0.5),
+    # Whole-scenario wall-clock: cross-machine, order-of-magnitude only.
+    Check(SIM_SMOKE, ("*", "wall_s"), "not_above", 5.0, 3.0),
+    # --- solver smoke: counts/objectives tight, wall-clock generous ------
+    Check(SOLVER_SMOKE, ("local_search", "*", "batch16", "moves_per_s"), "not_below", 0, 3.0),
+    Check(SOLVER_SMOKE, ("local_search", "*", "batch1", "moves_per_s"), "not_below", 0, 3.0),
+    Check(SOLVER_SMOKE, ("local_search", "*", "batch16", "objective"), "not_above", 1e-3, 0.05),
+    Check(SOLVER_SMOKE, ("cooperate", "*", "premask", "total_s"), "not_above", 0.05, 3.0),
+    Check(SOLVER_SMOKE, ("cooperate", "*", "premask", "rounds"), "not_above", 2),
+    Check(SOLVER_SMOKE, ("cooperate", "*", "premask", "host_side_frac"), "not_above", 0.15, 1.0),
+    Check(SOLVER_SMOKE, ("cooperate", "*", "premask", "pack_retraces"), "not_above", 1),
+    # The premask contract: the solver must never propose a region-infeasible
+    # move, so the baseline (and the gate) pin this at exactly 0.
+    Check(SOLVER_SMOKE, ("cooperate", "*", "premask", "region_rejections"), "not_above", 0),
+    Check(SOLVER_SMOKE, ("cooperate", "*", "premask", "objective"), "not_above", 1e-3, 0.05),
+    Check(SOLVER_SMOKE, ("cooperate", "*", "premask", "accepted"), "stays_true"),
+    # Shape-bucketed jit caching: drifting sizes must keep sharing
+    # executables (the PR 1 contract).
+    Check(SOLVER_SMOKE, ("bucketing", "bucketed"), "not_above", 0),
+    Check(SOLVER_SMOKE, ("move_eval", "*", "candidates_per_s"), "not_below", 0, 3.0),
+    Check(SOLVER_SMOKE, ("pallas_parity", "tier_agreement"), "not_below", 0.01),
+    Check(SOLVER_SMOKE, ("pallas_parity", "rel_err"), "not_above", 1e-5, 9.0),
+)
+
+
+def _as_number(value, worst: float) -> float:
+    """Ratios may be null in JSON (balanced > 0 while the baseline integral
+    is 0) — null is the worst possible outcome for the metric's direction:
+    +inf for smaller-is-better checks, -inf for bigger-is-better ones."""
+    if value is None:
+        return worst
+    if isinstance(value, bool):
+        return float(value)
+    return float(value)
+
+
+def _expand(record: dict, path: tuple) -> list[tuple]:
+    """All concrete paths matching ``path`` in ``record`` (baseline-driven)."""
+    paths = [()]
+    node_for: dict = {(): record}
+    for part in path:
+        nxt = []
+        for prefix in paths:
+            node = node_for[prefix]
+            if not isinstance(node, dict):
+                continue
+            keys = sorted(node) if part == "*" else ([part] if part in node else [])
+            for key in keys:
+                concrete = prefix + (key,)
+                node_for[concrete] = node[key]
+                nxt.append(concrete)
+        paths = nxt
+    return paths
+
+
+def _lookup(record: dict, path: tuple):
+    node = record
+    for part in path:
+        if not isinstance(node, dict) or part not in node:
+            return KeyError
+        node = node[part]
+    return node
+
+
+def run_checks(baselines: dict, currents: dict) -> tuple[list[str], list[str]]:
+    """Returns (passed, regressions) as printable lines."""
+    passed: list[str] = []
+    regressions: list[str] = []
+    for check in CHECKS:
+        base_rec = baselines.get(check.file)
+        cur_rec = currents.get(check.file)
+        if base_rec is None:
+            continue
+        paths = _expand(base_rec, check.path)
+        if not paths:
+            # A check that matches nothing would silently un-gate itself —
+            # the likely cause is a metric renamed and regenerated into the
+            # baselines without updating CHECKS.
+            regressions.append(
+                f"{check.file}:{'/'.join(check.path)}: check matched no baseline metrics"
+            )
+            continue
+        for path in paths:
+            name = f"{check.file}:{'/'.join(map(str, path))}"
+            base_val = _lookup(base_rec, path)
+            cur_val = _lookup(cur_rec, path) if cur_rec is not None else KeyError
+            if cur_val is KeyError:
+                regressions.append(f"{name}: metric missing from current record")
+                continue
+            if check.rule == "stays_true":
+                if base_val and not cur_val:
+                    regressions.append(f"{name}: was {base_val!r}, now {cur_val!r}")
+                else:
+                    passed.append(f"{name}: {cur_val!r}")
+                continue
+            worst = math.inf if check.rule == "not_above" else -math.inf
+            base_num = _as_number(base_val, worst)
+            cur_num = _as_number(cur_val, worst)
+            if check.rule == "not_above":
+                limit = base_num * (1.0 + check.rel_slack) + check.abs_slack
+                ok = cur_num <= limit
+                op = "<="
+            else:
+                limit = base_num / (1.0 + check.rel_slack) - check.abs_slack
+                ok = cur_num >= limit
+                op = ">="
+            line = f"{name}: {cur_num:.6g} {op} {limit:.6g} (baseline {base_num:.6g})"
+            (passed if ok else regressions).append(line)
+    return passed, regressions
+
+
+def _load_records(directory: str) -> dict:
+    records = {}
+    for name in (SIM_SMOKE, SOLVER_SMOKE):
+        path = os.path.join(directory, name)
+        if os.path.exists(path):
+            with open(path) as f:
+                records[name] = json.load(f)
+    return records
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    parser.add_argument(
+        "--baseline",
+        required=True,
+        help="directory holding the committed BENCH_*_smoke.json baselines",
+    )
+    parser.add_argument(
+        "--current",
+        default=".",
+        help="directory holding the just-written smoke records (default: repo root)",
+    )
+    args = parser.parse_args(argv)
+
+    baselines = _load_records(args.baseline)
+    currents = _load_records(args.current)
+    if not baselines:
+        print(f"# no baselines under {args.baseline}; nothing to gate")
+        return 0
+    for name in (SIM_SMOKE, SOLVER_SMOKE):
+        if name in baselines and name not in currents:
+            print(f"REGRESSION {name}: current record missing from {args.current}")
+            return 1
+
+    passed, regressions = run_checks(baselines, currents)
+    for line in passed:
+        print(f"ok {line}")
+    for line in regressions:
+        print(f"REGRESSION {line}")
+    print(f"# {len(passed)} checks passed, {len(regressions)} regressions")
+    return 1 if regressions else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -65,13 +65,13 @@ def run(num_apps: int = 1200, timeouts=TIMEOUTS):
                    and (xj < xi or yj < yi or zj < zi)
                    for j, (xj, yj, zj, _) in enumerate(points3) if j != i)
     front3 = [points3[i][3] for i in range(len(points3)) if not dominated3(i)]
-    manual3 = [l for l in front3 if l.startswith("manual")]
+    manual3 = [lab for lab in front3 if lab.startswith("manual")]
 
     claims = [
         ("manual_cnst is Pareto-optimal over (time, balance, net latency)",
          len(manual3) > 0),
         ("w_cnst does not dominate the frontier",
-         sum(1 for l in front if l.startswith("w_cnst")) <= len(front) / 2),
+         sum(1 for lab in front if lab.startswith("w_cnst")) <= len(front) / 2),
         ("manual_cnst dominates w_cnst on balance (mean)",
          np.mean([p[1] for p in points if p[2].startswith("manual")])
          <= np.mean([p[1] for p in points if p[2].startswith("w_cnst")])),

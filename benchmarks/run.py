@@ -10,7 +10,6 @@ Prints ``name,us_per_call,derived`` CSV rows (comment lines start with '#').
 from __future__ import annotations
 
 import argparse
-import sys
 import time
 
 

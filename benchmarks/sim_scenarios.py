@@ -3,10 +3,13 @@ over every registry scenario, scored by trajectory-level SLO accounting.
 
 For each scenario the harness runs the same workload trajectory twice —
 ``static`` (the t=0 placement rides out the run) and ``balanced``
-(``BalanceController`` ticks with hysteresis/cooldown) — and records the
-violation integrals, movement (downtime proxy), d2b series, and solver
-wall-clock.  The per-scenario comparison ratios are the PR 3 acceptance
-numbers (flash_crowd and tier_drain must favour the controller).
+(``BalanceController`` ticks with hysteresis/cooldown, anticipating any
+declared maintenance advisories and pricing movement against the
+scenario's budget) — and records the violation integrals, priced movement
+vs budget, d2b series, and solver wall-clock.  The per-scenario comparison
+ratios are the PR 3/4 acceptance numbers (tier_drain must stay <= 0.15
+with movement inside the budget; region_outage must not regress), and
+``benchmarks/check_regression.py`` gates them in CI.
 
 Emits CSV rows like every other benchmark AND writes ``BENCH_sim.json`` at
 the repo root so the trajectory scorecard is tracked PR-over-PR
@@ -44,6 +47,7 @@ def bench_scenario(name: str, num_apps: int, ticks: int, seed: int = 0):
                    "balanced": out["balanced"].series()},
     }
     viol = cmp["slo_violation_ticks"]
+    move = cmp["movement"]
 
     def fmt(r):                      # ratio may be None (0-baseline)
         return "n/a" if r is None else f"{r:.3f}"
@@ -52,11 +56,16 @@ def bench_scenario(name: str, num_apps: int, ticks: int, seed: int = 0):
          f"viol_baseline={viol['baseline']};viol_balanced={viol['balanced']};"
          f"viol_ratio={fmt(viol['ratio'])};"
          f"excess_ratio={fmt(cmp['over_ideal_excess_integral']['ratio'])};"
-         f"moves={cmp['total_moves']};rebalances={cmp['rebalances']};"
+         f"moves={cmp['total_moves']};move_cost={move['cost']:.1f};"
+         f"move_budget={move['budget']};within_budget={move['within_budget']};"
+         f"rebalances={cmp['rebalances']};"
          f"solver_s={cmp['solver_time_s']:.2f}")
     comment(f"{name}: violation ticks {viol['baseline']} -> "
             f"{viol['balanced']} ({fmt(viol['ratio'])}x), "
-            f"{cmp['rebalances']} rebalances moved {cmp['total_moves']} apps")
+            f"{cmp['rebalances']} rebalances moved {cmp['total_moves']} apps "
+            f"(cost {move['cost']:.1f}"
+            + (f" of budget {move['budget']:.0f}" if move["budget"] else "")
+            + ")")
     RESULTS[name] = rec
     return rec
 

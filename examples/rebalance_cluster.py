@@ -10,7 +10,6 @@ Run:  PYTHONPATH=src python examples/rebalance_cluster.py [--apps 600]
 """
 import argparse
 
-import numpy as np
 
 from repro.core import Sptlb, generate_cluster
 from repro.distributed.fault import CapacityEvent, rebalance_after

@@ -12,10 +12,14 @@ from repro.core.hierarchy import (CooperationResult, HostScheduler,
 from repro.core.telemetry import ClusterState, ResourceMonitor, generate_cluster
 from repro.core.metrics import (difference_to_balance, network_p99_ms,
                                 projected_metrics)
+from repro.core.planner import (Advisory, MaintenancePlanner, PlannerConfig,
+                                PlanOutlook, move_costs, movement_cost_of)
 from repro.core.sptlb import BalanceDecision, Sptlb, engine_fn
 from repro.core.controller import BalanceController, ControllerConfig
 
 __all__ = [
+    "Advisory", "MaintenancePlanner", "PlannerConfig", "PlanOutlook",
+    "move_costs", "movement_cost_of",
     "GoalWeights", "Problem", "bucket_size", "make_problem", "pad_problem",
     "tier_loads",
     "utilization_fraction", "goal_terms", "objective", "Violations",

@@ -9,7 +9,6 @@ solver"), and the hierarchy loop.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

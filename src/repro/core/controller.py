@@ -13,6 +13,18 @@ Policies:
     ``trigger_over_ideal``, or at least ``trigger_slo_apps`` live apps sit
     on a tier no longer eligible for their SLO class (capacity events and
     outages strand incumbents — constraint 4 read as a state),
+  * anticipation: with declared maintenance advisories on board
+    (``set_advisories``), a ``core.planner.MaintenancePlanner`` derives
+    per-tick capacity/eligibility targets over the declared horizon; an
+    active outlook triggers proactively and the solver balances against
+    the planning problem — evacuation starts *before* the first ramp step
+    instead of after SLO-stranded triggers fire,
+  * movement budget: every applied decision is priced
+    (``core.planner.move_costs``, Madsen-style reconfiguration cost) and
+    charged against ``movement_cost_budget`` for the controller's
+    lifetime; decisions that would overrun are trimmed inside the
+    cooperation loop and exhausted budgets block movement entirely
+    (``budget_overruns`` counts both),
   * cooldown: at least ``cooldown_rounds`` collection rounds between moves,
   * dry_run: compute + log decisions without applying (shadow mode — how a
     new scheduler is actually rolled out at scale).
@@ -34,8 +46,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import metrics as M
+from repro.core.planner import (MaintenancePlanner, PlannerConfig, PlanOutlook,
+                                move_costs)
 from repro.core.problem import utilization_fraction
-from repro.core.sptlb import BalanceDecision, Sptlb
+from repro.core.sptlb import Sptlb
 from repro.core.telemetry import ClusterState
 
 
@@ -54,6 +68,14 @@ class ControllerConfig:
     timeout_s: int = 30
     dry_run: bool = False
     restart_rounds: int = 0
+    # Maintenance anticipation: lookahead (ticks) over declared advisories
+    # and the declared-capacity fraction below which a tier is premasked.
+    # Only engages once ``set_advisories`` hands the controller a schedule.
+    anticipation_horizon: int = 12
+    drain_avoid_threshold: float = 0.5
+    # Trajectory-level movement budget in ``core.planner.move_costs`` units
+    # (mean live app == 1.0); None leaves movement priced but uncapped.
+    movement_cost_budget: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -66,6 +88,13 @@ class ControllerEvent:
     d2b_after: Optional[float] = None
     moved: int = 0
     time_s: float = 0.0
+    # Priced reconfiguration cost of the decision (0 when nothing solved)
+    # and whether the movement budget bound this round (trimmed proposal or
+    # exhausted budget blocking the solve).
+    movement_cost: float = 0.0
+    budget_limited: bool = False
+    # Declared advisories inside the planning horizon this round.
+    plan_pending: int = 0
 
 
 class BalanceController:
@@ -81,18 +110,48 @@ class BalanceController:
         # it points at carries the memoized hierarchy precomputes — keep
         # both in lock-step instead of rebuilding per tick.
         self._sptlb = Sptlb(cluster)
+        # Anticipation + movement accounting (see module docstring).
+        self.planner: Optional[MaintenancePlanner] = None
+        self.now = 0                      # external tick of the last tick()
+        self.cost_spent = 0.0             # applied movement cost, lifetime
+        self.budget_overruns = 0          # rounds the budget bound movement
+
+    def set_advisories(self, advisories, *,
+                       horizon: Optional[int] = None) -> None:
+        """Hand the controller a declared maintenance schedule (a sequence
+        of ``core.planner.Advisory``).  An empty schedule disables
+        anticipation; the budget and history are untouched either way."""
+        advisories = tuple(advisories)
+        if not advisories or self.config.anticipation_horizon <= 0:
+            self.planner = None
+            return
+        self.planner = MaintenancePlanner(
+            advisories,
+            PlannerConfig(
+                horizon=(self.config.anticipation_horizon
+                         if horizon is None else horizon),
+                drain_threshold=self.config.drain_avoid_threshold))
 
     # -- trigger policy -----------------------------------------------------
-    def should_rebalance(self, d2b: Optional[float] = None) -> tuple[bool, str]:
+    def should_rebalance(self, d2b: Optional[float] = None,
+                         outlook: Optional[PlanOutlook] = None
+                         ) -> tuple[bool, str]:
         """Trigger decision.  ``d2b`` lets ``tick`` pass the
         difference-to-balance it already computed instead of paying the
-        tier-loads reduction twice per round."""
+        tier-loads reduction twice per round; ``outlook`` is the planner's
+        view of the declared horizon (an active outlook triggers
+        proactively — the whole point of declared maintenance)."""
         cfg = self.config
         p = self.cluster.problem
         if d2b is None:
             d2b = M.difference_to_balance(p, p.assignment0)
         if self.round - self.last_applied_round < cfg.cooldown_rounds:
             return False, f"cooldown ({d2b=:.3f})"
+        if outlook is not None and outlook.active:
+            return True, (
+                f"declared-maintenance ({outlook.pending} advisories within "
+                f"{outlook.horizon} ticks, min capacity factor "
+                f"{float(outlook.tier_factor.min()):.2f})")
         uf, tf = utilization_fraction(p, p.assignment0)
         over = float(jnp.max(uf - p.ideal_frac))
         over_t = float(jnp.max(tf - p.ideal_task_frac))
@@ -114,27 +173,55 @@ class BalanceController:
         self._sptlb.cluster = cluster
 
     # -- one control round ----------------------------------------------------
-    def tick(self, cluster: Optional[ClusterState] = None) -> ControllerEvent:
+    def tick(self, cluster: Optional[ClusterState] = None,
+             now: Optional[int] = None) -> ControllerEvent:
+        """One control round.  ``now`` is the external clock the advisory
+        schedule is declared against (the sim harness passes its tick);
+        callers without one get the controller's own 0-based round count."""
         if cluster is not None:
             self.observe(cluster)
         self.round += 1
+        self.now = (self.round - 1) if now is None else int(now)
         # Callers may also swap ``self.cluster`` directly between ticks; the
         # reused balancer must follow it either way.
         self._sptlb.cluster = self.cluster
         p = self.cluster.problem
+        outlook = (self.planner.outlook(self.now, self.cluster)
+                   if self.planner is not None else None)
         d2b_before = M.difference_to_balance(p, p.assignment0)
-        triggered, reason = self.should_rebalance(d2b_before)
+        triggered, reason = self.should_rebalance(d2b_before, outlook)
         ev = ControllerEvent(self.round, triggered, reason, False, d2b_before)
-        if triggered:
+        if outlook is not None:
+            ev.plan_pending = outlook.pending
+        budget = self.config.movement_cost_budget
+        remaining = float("inf") if budget is None else budget - self.cost_spent
+        if triggered and remaining <= 1e-9:
+            # The downtime budget is spent: movement is off the table, no
+            # matter what the metrics say.  Observable, never silent.
+            ev.reason = f"{reason}; movement budget exhausted"
+            ev.budget_limited = True
+            self.budget_overruns += 1
+        elif triggered:
             t0 = time.perf_counter()
             decision = self._sptlb.balance(
                 self.config.engine, timeout_s=self.config.timeout_s,
                 variant=self.config.variant,
-                restart_rounds=self.config.restart_rounds)
+                restart_rounds=self.config.restart_rounds,
+                plan=outlook, move_cost=move_costs(p), cost_budget=remaining)
             ev.time_s = time.perf_counter() - t0
             ev.d2b_after = decision.difference_to_balance
             ev.moved = decision.projected.num_moved
-            if not self.config.dry_run and decision.violations.ok:
+            ev.movement_cost = decision.movement_cost
+            if decision.budget_trimmed:
+                ev.budget_limited = True
+                self.budget_overruns += 1
+            # A decision the budget trimmed down to nothing executed nothing:
+            # marking it applied would reset the cooldown and count a no-op
+            # rebalance in the audit.
+            trimmed_to_noop = (decision.budget_trimmed
+                               and decision.projected.num_moved == 0)
+            if (not self.config.dry_run and decision.violations.ok
+                    and not trimmed_to_noop):
                 self.cluster = dataclasses.replace(
                     self.cluster,
                     problem=p.with_assignment0(
@@ -142,6 +229,7 @@ class BalanceController:
                 self._sptlb.cluster = self.cluster   # next tick re-syncs too
                 self.last_applied_round = self.round
                 ev.applied = True
+                self.cost_spent += decision.movement_cost
         self.history.append(ev)
         return ev
 
@@ -155,4 +243,7 @@ class BalanceController:
             "mean_improvement": float(np.mean(
                 [e.d2b_before - e.d2b_after for e in applied]))
             if applied else 0.0,
+            "movement_cost": round(self.cost_spent, 4),
+            "movement_cost_budget": self.config.movement_cost_budget,
+            "budget_overruns": self.budget_overruns,
         }

@@ -49,7 +49,8 @@ def move_delta_cost(
     ideal_task_frac: jax.Array,  # f32[T]
     util: jax.Array,          # f32[T, R] current absolute loads
     tier_tasks: jax.Array,    # f32[T]    current task loads
-    weights: jax.Array,       # f32[5] (under_ideal, resource_balance, task_balance, movement, criticality)
+    weights: jax.Array,       # f32[5] (under_ideal, resource_balance,
+                              #         task_balance, movement, criticality)
 ) -> jax.Array:
     """Returns delta[N, T]: objective change if app n moves to tier t.
 

@@ -49,12 +49,14 @@ def solve_greedy(problem: Problem, config: GreedyConfig = GreedyConfig()) -> Sol
     budget = int(problem.move_budget)   # same f32 rounding as the solvers
 
     if config.objective == "task":
-        load_of = lambda: np.bincount(x, weights=tasks, minlength=T)
+        def load_of():
+            return np.bincount(x, weights=tasks, minlength=T)
         target = ideal_task * task_limit
         app_size = tasks
     else:
         r = OBJECTIVES.index(config.objective)
-        load_of = lambda: np.bincount(x, weights=demand[:, r], minlength=T)
+        def load_of():
+            return np.bincount(x, weights=demand[:, r], minlength=T)
         target = ideal[:, r] * capacity[:, r]
         app_size = demand[:, r]
 

@@ -71,12 +71,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.goals import objective as _objective
+from repro.core.planner import movement_cost_of
 from repro.core.problem import Problem, bucket_size
 from repro.core.solver_local import SolveResult
 from repro.core.telemetry import ClusterState
 from repro.kernels.pack import pack_ffd, pack_ffd_tiers, pack_trace_count
 
 Variant = Literal["no_cnst", "w_cnst", "manual_cnst"]
+
+# The region scheduler's default latency budget (ms): placements must keep
+# an app within this worst-case latency of its data-source region.
+REGION_LATENCY_BUDGET_MS = 36.0
 
 
 class RegionScheduler:
@@ -85,11 +90,23 @@ class RegionScheduler:
     Accepts a placement iff the destination tier has hosts within a latency
     budget of the app's data-source region — "if it isn't possible to keep an
     app near its data source with the given tier, it returns false".
+
+    ``latency_budget_ms`` may be a scalar (every app gets the same budget)
+    or an f32[N] per-app array — the planner's maintenance placement mode
+    relaxes the budget for residents evacuating a declared deep drain
+    (``core.planner``), and the relaxation must bind proposal vetting, the
+    premask, and the revert paths identically, so it lives here.
     """
 
-    def __init__(self, cluster: ClusterState, latency_budget_ms: float = 36.0):
+    def __init__(self, cluster: ClusterState,
+                 latency_budget_ms=REGION_LATENCY_BUDGET_MS):
         self.cluster = cluster
-        self.budget = latency_budget_ms
+        if np.ndim(latency_budget_ms) == 0:
+            self.budget = float(latency_budget_ms)
+            self._budget_per_app = None
+        else:
+            self.budget = None
+            self._budget_per_app = np.asarray(latency_budget_ms, np.float32)
         self._worst_ms = self._worst_ms_matrix(cluster)
 
     @staticmethod
@@ -118,23 +135,35 @@ class RegionScheduler:
             cache["region_worst_ms"] = worst
         return cache["region_worst_ms"]
 
+    def _budget_of(self, apps) -> np.ndarray | float:
+        if self._budget_per_app is None:
+            return self.budget
+        return self._budget_per_app[apps]
+
     def check(self, app: int, tier: int) -> bool:
         """Accept iff the tier's worst region stays within the budget."""
         return bool(self._worst_ms[self.cluster.app_region[app], tier]
-                    <= self.budget)
+                    <= self._budget_of(app))
 
     def check_many(self, apps: np.ndarray, tiers: np.ndarray) -> np.ndarray:
         """Vectorized ``check`` over (app, tier) pairs -> bool[len(apps)]."""
         apps = np.asarray(apps, np.int64)
         tiers = np.asarray(tiers, np.int64)
-        return self._worst_ms[self.cluster.app_region[apps], tiers] <= self.budget
+        return (self._worst_ms[self.cluster.app_region[apps], tiers]
+                <= self._budget_of(apps))
 
     def feasibility_matrix(self) -> np.ndarray:
         """bool[N, T]: the full region-feasibility matrix for every app.
 
         Memoized per (cluster, budget) — this is what ``premask_region``
-        folds into the solver's avoid mask every cooperation pass.
+        folds into the solver's avoid mask every cooperation pass.  Per-app
+        budget arrays (maintenance placement mode) skip the memo: they are
+        derived per control round, and one cooperation pass reads the
+        matrix once.
         """
+        if self._budget_per_app is not None:
+            return (self._worst_ms[self.cluster.app_region]
+                    <= self._budget_per_app[:, None])
         key = ("region_feasibility", float(self.budget))
         cache = self.cluster._cache
         if key not in cache:
@@ -418,6 +447,71 @@ def _revert_unvetted(x_np: np.ndarray, x0_np: np.ndarray,
     return x_np
 
 
+def enforce_cost_budget(cluster: ClusterState, res: SolveResult,
+                         x0_np: np.ndarray, move_cost, cost_budget: float,
+                         host: HostScheduler | None, timings: dict) -> SolveResult:
+    """Price the final mapping and trim it to the round's movement budget.
+
+    Movement is the §3.2.1 goal-8 downtime the paper prices; Madsen et al.
+    price live reconfiguration explicitly.  Every vetted mapping is priced
+    (``timings["movement_cost"]``); when the caller hands down a finite
+    ``cost_budget`` and the mapping exceeds it, moves are reverted until it
+    fits.  Moves that rescue an SLO-stranded incumbent (home tier no longer
+    eligible for the app's class) are kept first — their revert costs
+    violation ticks, not just balance — then cheap moves before expensive
+    ones, so the budget buys as much placement repair as possible.
+
+    Reverting sends apps home, and home tiers can overflow on returners
+    (FFD is not monotone under item removal), so trimmed mappings re-run
+    the host-packing fixpoint with the affected home tiers force-packed —
+    the same contract as ``_revert_unvetted``.  Trimming never *adds* moves,
+    so the budget holds after the fixpoint too.
+    """
+    x_np = np.asarray(res.assignment)
+    total = movement_cost_of(x_np, x0_np, move_cost)
+    timings["movement_cost"] = total
+    if total <= cost_budget + 1e-9:
+        return res
+    t = time.perf_counter()
+    x_np = x_np.copy()
+    moved = np.where(x_np != x0_np)[0]
+    per = (np.ones(moved.size, np.float32) if move_cost is None
+           else np.asarray(move_cost)[moved])
+    p = cluster.problem
+    slo_ok_home = np.asarray(p.slo_allowed)[
+        x0_np[moved], np.asarray(p.slo)[moved]]
+    # lexsort: last key is primary — strand-fixers (slo_ok_home False) first,
+    # then ascending per-move cost within each class.
+    order = np.lexsort((per, slo_ok_home))
+    keep = np.zeros(moved.size, bool)
+    spent = 0.0
+    for i in order:
+        if spent + per[i] <= cost_budget + 1e-9:
+            spent += per[i]
+            keep[i] = True
+    reverted = moved[~keep]
+    x_np[reverted] = x0_np[reverted]
+    timings["budget_trimmed"] = (timings.get("budget_trimmed", 0)
+                                 + int(reverted.size))
+    if host is not None and reverted.size:
+        force = np.unique(x0_np[reverted])
+        movers = np.where(x_np != x0_np)[0]
+        while movers.size or force.size:
+            rej = host.check_tiers(x_np, x0_np, movers, force_tiers=force)
+            if rej.size == 0:
+                break
+            x_np[rej] = x0_np[rej]
+            force = np.unique(x0_np[rej])
+            movers = np.where(x_np != x0_np)[0]
+    timings["host_s"] = timings.get("host_s", 0.0) + (time.perf_counter() - t)
+    x_final = jnp.asarray(x_np)
+    timings["movement_cost"] = movement_cost_of(x_np, x0_np, move_cost)
+    return dataclasses.replace(
+        res, assignment=x_final,
+        num_moved=int(np.sum(x_np != x0_np)),
+        objective=float(_objective(cluster.problem, x_final)))
+
+
 def _restart_phase(cluster: ClusterState, problem: Problem, res: SolveResult,
                    timed_solve, region: RegionScheduler, host: HostScheduler,
                    timings: dict, restart_rounds: int, deadline: float,
@@ -471,9 +565,11 @@ def cooperate(
     *,
     max_rounds: int = 8,
     timeout_s: float = float("inf"),
-    region_budget_ms: float = 36.0,
+    region_budget_ms=REGION_LATENCY_BUDGET_MS,
     premask_region: bool = True,
     restart_rounds: int = 0,
+    move_cost: np.ndarray | None = None,
+    cost_budget: float = float("inf"),
 ) -> CooperationResult:
     """Run one SPTLB balancing pass under the chosen integration variant.
 
@@ -490,6 +586,18 @@ def cooperate(
     diversification the unmasked path got for free from its rejection
     rounds.  Every restart is fully re-vetted and only adopted if its
     objective improves, so the knob spends solves, never quality.
+
+    ``move_cost``/``cost_budget`` price movement (Madsen-style
+    reconfiguration costing — ``core.planner.move_costs``): every returned
+    mapping's total cost lands in ``timings["movement_cost"]`` (per-round
+    proposal costs in ``timings["round_costs"]``), and a finite budget
+    trims the final mapping to fit (``enforce_cost_budget``), preferring
+    moves that rescue SLO-stranded incumbents.
+
+    ``region_budget_ms`` may be an f32[N] per-app array (maintenance
+    placement mode — ``core.planner.PlanOutlook.relax_home_tiers``): the
+    premask, the per-round vet, and the revert fixpoint then all share the
+    same relaxed region contract.
     """
     t0 = time.perf_counter()
     problem = cluster.problem
@@ -497,6 +605,7 @@ def cooperate(
                "feedback_s": 0.0, "rounds": 1,
                "region_rejections": 0, "host_rejections": 0,
                "restarts": 0, "restart_improved": 0,
+               "movement_cost": 0.0, "budget_trimmed": 0, "round_costs": [],
                "premask": bool(premask_region) and variant == "manual_cnst"}
 
     def timed_solve(p, **kw):
@@ -512,6 +621,8 @@ def cooperate(
         if variant == "w_cnst":
             problem = problem.with_avoid(jnp.asarray(region_overlap_avoid(cluster)))
         res = timed_solve(problem)
+        res = enforce_cost_budget(cluster, res, np.asarray(problem.assignment0),
+                                   move_cost, cost_budget, None, timings)
         total = time.perf_counter() - t0
         _collect_pack_counters(timings, None)
         res.extra["coop_timings"] = _finish_timings(timings, total)
@@ -548,6 +659,8 @@ def cooperate(
     while rounds <= max_rounds and (time.perf_counter() - t0) < timeout_s:
         x_np = np.asarray(res.assignment)       # one device->host pull/round
         moved = np.where(x_np != x0_np)[0]
+        timings["round_costs"].append(
+            round(movement_cost_of(x_np, x0_np, move_cost), 4))
 
         # Fig. 2 order: region scheduler first (one vectorized gather; with
         # the premask on this is a no-op vet that always passes)...
@@ -574,6 +687,8 @@ def cooperate(
                     res = _restart_phase(
                         cluster, problem, res, timed_solve, region, host,
                         timings, restart_rounds, t0 + timeout_s, x0_np)
+                res = enforce_cost_budget(cluster, res, x0_np, move_cost,
+                                           cost_budget, host, timings)
                 total = time.perf_counter() - t0
                 timings["rounds"] = rounds
                 _collect_pack_counters(timings, host)
@@ -637,6 +752,8 @@ def cooperate(
         res, assignment=x_final,
         num_moved=int(np.sum(x_np != x0_np)),
         objective=float(_objective(cluster.problem, x_final)))
+    res = enforce_cost_budget(cluster, res, x0_np, move_cost, cost_budget,
+                               host, timings)
     total = time.perf_counter() - t0
     timings["rounds"] = rounds
     _collect_pack_counters(timings, host)

@@ -11,7 +11,6 @@ from __future__ import annotations
 
 import dataclasses
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.problem import Problem, utilization_fraction

@@ -25,7 +25,6 @@ bucket reuses one compiled executable.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional
 
 import jax

@@ -27,10 +27,14 @@ import time
 from typing import Literal, Optional
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import constraints, metrics
 from repro.core.greedy import GreedyConfig, solve_greedy
-from repro.core.hierarchy import CooperationResult, Variant, cooperate
+from repro.core.hierarchy import (REGION_LATENCY_BUDGET_MS, CooperationResult,
+                                  Variant, cooperate,
+                                  enforce_cost_budget)
+from repro.core.planner import PlanOutlook, movement_cost_of
 from repro.core.problem import Problem, bucket_size, pad_problem
 from repro.core.solver_local import LocalSearchConfig, SolveResult, solve_local
 from repro.core.solver_optimal import OptimalSearchConfig, solve_optimal
@@ -84,20 +88,29 @@ def engine_fn(engine: Engine, timeout_s: int = 30, seed: int = 0,
     if engine == "local":
         kw = {} if batch_moves is None else {"batch_moves": batch_moves}
         cfg = LocalSearchConfig(max_iters=budget, seed=seed, **kw)
-        fn = lambda p, init_assignment=None: solve_local(
-            p, cfg, init_assignment=init_assignment)
+
+        def fn(p, init_assignment=None):
+            return solve_local(p, cfg, init_assignment=init_assignment)
+
         return _bucketed(fn) if bucket_apps else fn
     if engine == "optimal":
         kw = {} if batch_moves is None else {"batch_moves": batch_moves}
         cfg = OptimalSearchConfig(steps=budget, seed=seed, **kw)
-        fn = lambda p, init_assignment=None: solve_optimal(p, cfg)
+
+        def fn(p, init_assignment=None):
+            return solve_optimal(p, cfg)
+
         return _bucketed(fn) if bucket_apps else fn
     if engine.startswith("greedy-"):
         # Host-side numpy: nothing to jit-cache, so never bucket.
         obj = engine.split("-", 1)[1]
         obj = {"task-count": "task"}.get(obj, obj)
         gcfg = GreedyConfig(objective=obj, max_steps=budget)
-        return lambda p, init_assignment=None: solve_greedy(p, gcfg)
+
+        def fn(p, init_assignment=None):
+            return solve_greedy(p, gcfg)
+
+        return fn
     raise ValueError(f"unknown engine {engine!r}")
 
 
@@ -112,6 +125,13 @@ class BalanceDecision:
     network_p99_ms: float
     solve: SolveResult
     cooperation: CooperationResult | None
+    # Madsen-style reconfiguration cost of the mapping (goal 8's downtime,
+    # priced — see core.planner.move_costs); the controller charges applied
+    # decisions against its trajectory budget.  ``budget_trimmed`` counts
+    # the moves reverted to fit ``cost_budget`` (every engine, including
+    # the hierarchy-unaware greedy baselines).
+    movement_cost: float = 0.0
+    budget_trimmed: int = 0
 
 
 class Sptlb:
@@ -132,6 +152,9 @@ class Sptlb:
         bucket_apps: bool = True,
         premask_region: bool = True,
         restart_rounds: int = 0,
+        plan: Optional[PlanOutlook] = None,
+        move_cost: Optional[np.ndarray] = None,
+        cost_budget: float = float("inf"),
     ) -> BalanceDecision:
         """One balancing pass.  ``premask_region`` (default on) folds the
         region scheduler's feasibility matrix into the solver's avoid mask
@@ -139,13 +162,51 @@ class Sptlb:
         host packing only; ``restart_rounds`` adds vetted perturbation
         restarts after an accepted fixed point (the diversification the
         unmasked path got from its rejection rounds) — see
-        ``hierarchy.cooperate``."""
+        ``hierarchy.cooperate``.
+
+        ``plan`` (a ``core.planner.PlanOutlook``) makes the pass proactive:
+        the *solver* balances against the planning problem (declared-horizon
+        capacity targets, will-drain tiers premasked), while the decision's
+        projected metrics, constraint validation, and d2b are evaluated
+        against the real collected problem — anticipation changes what the
+        solver aims for, never what the decision is judged on.  The host
+        scheduler packs against real host counts either way, so proposals
+        stay physically placeable.  ``move_cost``/``cost_budget`` price the
+        mapping and cap its reconfiguration cost (``hierarchy.cooperate``).
+        """
         solve_fn = engine_fn(engine, timeout_s, seed,
                              batch_moves=batch_moves, bucket_apps=bucket_apps)
+        solve_cluster = self.cluster
+        region_budget = REGION_LATENCY_BUDGET_MS
+        if plan is not None and plan.active:
+            # dataclasses.replace starts a fresh precompute cache, which is
+            # correct: the planning problem's avoid/slo tables differ from
+            # the real cluster's.
+            solve_cluster = dataclasses.replace(
+                self.cluster, problem=plan.apply(self.cluster.problem))
+            if plan.relax_home_tiers.any():
+                # Maintenance placement mode: residents of a declared deep
+                # drain may evacuate under a relaxed region latency budget
+                # (bounded degradation beats riding the drain into
+                # over-capacity); everyone else keeps the strict budget.
+                x0 = np.asarray(self.cluster.problem.assignment0)
+                region_budget = np.where(
+                    plan.relax_home_tiers[x0],
+                    REGION_LATENCY_BUDGET_MS * plan.relax_latency_factor,
+                    REGION_LATENCY_BUDGET_MS).astype(np.float32)
         t0 = time.perf_counter()
+        greedy_timings = None
         if engine.startswith("greedy-"):
-            # The baseline greedy scheduler is hierarchy-unaware by design.
-            res = solve_fn(self.cluster.problem)
+            # The baseline greedy scheduler is hierarchy-unaware by design —
+            # but the movement budget binds every engine, so its mapping is
+            # priced and trimmed too (no host re-pack: greedy never had the
+            # hierarchy's packing contract).
+            res = solve_fn(solve_cluster.problem)
+            greedy_timings = {}
+            res = enforce_cost_budget(self.cluster, res,
+                                      np.asarray(self.cluster.problem.assignment0),
+                                      move_cost, cost_budget, None,
+                                      greedy_timings)
             coop = None
         else:
             # The engine's iteration budget is the deterministic stand-in
@@ -154,15 +215,38 @@ class Sptlb:
             # bounds itself against the same deadline.  3x leaves the
             # feedback loop headroom over a single solve's nominal budget
             # while still cutting off pathological round/restart spirals.
-            coop = cooperate(self.cluster, solve_fn, variant,
+            coop = cooperate(solve_cluster, solve_fn, variant,
                              max_rounds=max_feedback_rounds,
                              timeout_s=3.0 * timeout_s,
+                             region_budget_ms=region_budget,
                              premask_region=premask_region,
-                             restart_rounds=restart_rounds)
+                             restart_rounds=restart_rounds,
+                             move_cost=move_cost,
+                             cost_budget=cost_budget)
             res = coop.result
         t_solve = time.perf_counter()
 
+        # Decision evaluation is always against the *real* collected problem
+        # — a plan only steers the solver (tightened capacity would otherwise
+        # mis-score a perfectly good mapping as over-capacity).
         problem: Problem = self.cluster.problem
+        if coop is not None:
+            movement = coop.timings.get("movement_cost", 0.0)
+            trimmed = int(coop.timings.get("budget_trimmed", 0))
+        elif greedy_timings is not None:
+            movement = greedy_timings["movement_cost"]
+            trimmed = int(greedy_timings.get("budget_trimmed", 0))
+        else:
+            movement = movement_cost_of(res.assignment, problem.assignment0,
+                                        move_cost)
+            trimmed = 0
+        if plan is not None and plan.active:
+            res.extra["plan"] = {
+                "pending": plan.pending,
+                "min_tier_factor": float(plan.tier_factor.min()),
+                "avoid_tiers": int(plan.avoid_tiers.sum()),
+                "relax_tiers": int(plan.relax_home_tiers.sum()),
+            }
         decision = BalanceDecision(
             assignment=res.assignment,
             projected=metrics.projected_metrics(problem, res.assignment),
@@ -171,6 +255,8 @@ class Sptlb:
             network_p99_ms=metrics.network_p99_ms(self.cluster, res.assignment),
             solve=res,
             cooperation=coop,
+            movement_cost=movement,
+            budget_trimmed=trimmed,
         )
         res.extra["balance_timings"] = {
             "solve_s": t_solve - t0,

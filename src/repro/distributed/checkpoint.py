@@ -24,7 +24,6 @@ from pathlib import Path
 from typing import Any, Optional
 
 import jax
-import jax.numpy as jnp
 import msgpack
 import numpy as np
 

@@ -22,7 +22,7 @@ representation.  `wire_bytes` reports the measured payload for EXPERIMENTS.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Literal, Optional
+from typing import Any, Literal
 
 import jax
 import jax.numpy as jnp

@@ -208,8 +208,11 @@ def _prepare(demand, tasks, criticality, assignment, assignment0,
     mean_in = jnp.concatenate([mean_f, mean_g[None]])[None, :]      # [1, R+1]
     w_in = jnp.pad(weights.astype(jnp.float32), (0, 8 - weights.shape[0]))[None, :]
 
-    app_spec = lambda width: pl.BlockSpec((BN, width), lambda i: (i, 0))
-    full_spec = lambda rows, cols: pl.BlockSpec((rows, cols), lambda i: (0, 0))
+    def app_spec(width):
+        return pl.BlockSpec((BN, width), lambda i: (i, 0))
+
+    def full_spec(rows, cols):
+        return pl.BlockSpec((rows, cols), lambda i: (0, 0))
     in_specs = [
         app_spec(1), app_spec(1),
         app_spec(R), app_spec(R), app_spec(R), app_spec(R),

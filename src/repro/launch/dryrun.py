@@ -17,7 +17,7 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 
-from repro.configs import ARCHS, get_config
+from repro.configs import get_config
 from repro.configs.shapes import SHAPES, cells, input_specs, shape_applicable
 from repro.distributed import sharding as SH
 from repro.launch.mesh import make_production_mesh

@@ -24,7 +24,7 @@ from pathlib import Path
 import jax
 import numpy as np
 
-from repro.configs import ARCHS, get_config
+from repro.configs import get_config
 from repro.configs.shapes import SHAPES
 from repro.models import build_model
 

@@ -21,15 +21,12 @@ from __future__ import annotations
 
 import argparse
 import time
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import Sptlb
-from repro.distributed import sharding as SH
 from repro.distributed.checkpoint import CheckpointManager
 from repro.distributed.fault import CapacityEvent, rebalance_after
 from repro.launch.mesh import make_host_mesh

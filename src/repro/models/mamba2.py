@@ -13,8 +13,6 @@ both derived from the same discretization so they agree numerically.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -20,6 +20,7 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import planner as P
 from repro.core.telemetry import ClusterState
 from repro.sim import workload as W
 
@@ -47,6 +48,11 @@ class FleetState:
     # Standing knobs (events edit these, then call refresh):
     tier_scale: np.ndarray         # f32[T] capacity scale per tier
     down_regions: set = dataclasses.field(default_factory=set)
+    # Advisory channel (``core.planner.Advisory``): the maintenance events
+    # this trajectory has *declared* in advance.  The harness hands it to
+    # the controller's planner; surprises (flash crowds, churn) never
+    # appear here.
+    declared_events: tuple = ()
     rng: np.random.Generator = dataclasses.field(
         default_factory=lambda: np.random.default_rng(0))
 
@@ -91,12 +97,22 @@ class FleetState:
 
 @dataclasses.dataclass(frozen=True)
 class TimedEvent:
-    """Base: fires once when the harness reaches tick ``at``."""
+    """Base: fires once when the harness reaches tick ``at``.
+
+    Maintenance-class events (capacity scales, region outage windows) are
+    scheduled in the real world, so they default to ``announced=True`` and
+    publish themselves on the advisory channel via ``declare``; surprises
+    (flash crowds, churn re-rates) return None and are never declared.
+    """
 
     at: int
 
     def apply(self, fleet: FleetState) -> None:  # pragma: no cover
         raise NotImplementedError
+
+    def declare(self):
+        """The ``core.planner.Advisory`` for this event, or None."""
+        return None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,10 +126,17 @@ class CapacityScale(TimedEvent):
 
     tier: int = 0
     scale: float = 1.0
+    announced: bool = True
 
     def apply(self, fleet: FleetState) -> None:
         fleet.tier_scale[self.tier] = self.scale
         fleet.refresh()
+
+    def declare(self):
+        if not self.announced:
+            return None
+        return P.Advisory(at=self.at, kind=P.CAPACITY, tier=self.tier,
+                          scale=self.scale)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -122,19 +145,31 @@ class RegionOutage(TimedEvent):
     and the SLO eligibility, and the region becomes latency-unreachable."""
 
     region: int = 0
+    announced: bool = True
 
     def apply(self, fleet: FleetState) -> None:
         fleet.down_regions.add(self.region)
         fleet.refresh()
 
+    def declare(self):
+        if not self.announced:
+            return None
+        return P.Advisory(at=self.at, kind=P.OUTAGE, region=self.region)
+
 
 @dataclasses.dataclass(frozen=True)
 class RegionRestore(TimedEvent):
     region: int = 0
+    announced: bool = True
 
     def apply(self, fleet: FleetState) -> None:
         fleet.down_regions.discard(self.region)
         fleet.refresh()
+
+    def declare(self):
+        if not self.announced:
+            return None
+        return P.Advisory(at=self.at, kind=P.RESTORE, region=self.region)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -90,6 +90,7 @@ def build_fleet(sc: Scenario) -> FleetState:
         base_slo_allowed=np.asarray(problem.slo_allowed).copy(),
         base_latency=cluster.region_latency.copy(),
         tier_scale=np.ones(problem.num_tiers, np.float32),
+        declared_events=sc.declared_events,
         rng=np.random.default_rng(sc.seed + 13))
 
 
@@ -140,12 +141,26 @@ def place_arrivals(fleet: FleetState, arrivals: np.ndarray) -> np.ndarray:
 
 def run_scenario(sc: Scenario, *, policy: str = "balanced",
                  config: ControllerConfig | None = None,
+                 anticipation: bool = True,
                  verbose: bool = False) -> SimReport:
-    """Run one scenario under one policy; returns the scored trajectory."""
+    """Run one scenario under one policy; returns the scored trajectory.
+
+    ``anticipation`` hands the scenario's declared maintenance advisories
+    (``Scenario.declared_events``) to the controller's planner, and the
+    scenario's ``move_budget`` (when set) becomes the controller's
+    trajectory movement budget unless the caller's config already pins one
+    — so the proactive evacuation is judged against what it spends.
+    """
     assert policy in ("balanced", "static"), policy
     fleet = build_fleet(sc)
-    ctl = (BalanceController(fleet.cluster, config or SIM_CONTROLLER)
-           if policy == "balanced" else None)
+    ctl = None
+    if policy == "balanced":
+        cfg = config or SIM_CONTROLLER
+        if sc.move_budget is not None and cfg.movement_cost_budget is None:
+            cfg = dataclasses.replace(cfg, movement_cost_budget=sc.move_budget)
+        ctl = BalanceController(fleet.cluster, cfg)
+        if anticipation:
+            ctl.set_advisories(fleet.declared_events)
     acct = SloAccountant()
     solver_traces0 = local_search_trace_count()
     wl_traces0 = workload_trace_count()
@@ -175,12 +190,14 @@ def run_scenario(sc: Scenario, *, policy: str = "balanced",
 
         # 4. Controller decides; the applied mapping becomes assignment0.
         if ctl is not None:
-            evr = ctl.tick(fleet.cluster)
+            evr = ctl.tick(fleet.cluster, now=tick)
             fleet.cluster = ctl.cluster
             stat = acct.observe(
                 fleet.cluster, moved=evr.moved if evr.applied else 0,
                 applied=evr.applied, triggered=evr.triggered,
-                solve_s=evr.time_s)
+                solve_s=evr.time_s,
+                movement_cost=evr.movement_cost if evr.applied else 0.0,
+                budget_limited=evr.budget_limited)
         else:
             stat = acct.observe(fleet.cluster)
         if verbose:
@@ -195,17 +212,23 @@ def run_scenario(sc: Scenario, *, policy: str = "balanced",
         workload_retraces=workload_trace_count() - wl_traces0,
         num_apps=sc.num_apps, pool=sc.max_apps)
     if ctl is not None:
-        report.extra["audit"] = ctl.audit()
+        report.extra.update(
+            audit=ctl.audit(),
+            # The budget the controller actually enforced — a caller-pinned
+            # config budget overrides the scenario default, and recording
+            # the scenario's number instead would misgrade within_budget.
+            move_budget=ctl.config.movement_cost_budget,
+            anticipation=bool(anticipation and fleet.declared_events))
     return report
 
 
 def run_pair(sc: Scenario, *, config: ControllerConfig | None = None,
-             verbose: bool = False) -> dict:
+             anticipation: bool = True, verbose: bool = False) -> dict:
     """Baseline + controller over the same trajectory, plus the comparison
     record (the per-scenario entry in BENCH_sim.json)."""
     baseline = run_scenario(sc, policy="static", verbose=verbose)
     balanced = run_scenario(sc, policy="balanced", config=config,
-                            verbose=verbose)
+                            anticipation=anticipation, verbose=verbose)
     return {
         "baseline": baseline,
         "balanced": balanced,

@@ -52,6 +52,10 @@ class Scenario:
     pool_frac: float = 1.0         # standby pool: Nmax = num_apps * pool_frac
     arrival_rate: float = 0.0      # expected arrivals per tick at t=0
     retire_rate: float = 0.0       # per-app retirement prob per tick at t=0
+    # Trajectory-level movement (downtime) budget in core.planner.move_costs
+    # units — the mean live app costs 1.0, so a budget of k buys ~k average
+    # moves over the whole run.  None leaves movement priced but uncapped.
+    move_budget: float | None = None
     # t=0 utilization as a multiple of the Fig. 3 calibration.  Dynamic
     # scenarios need headroom the one-shot experiment didn't: at the Fig. 3
     # levels the *perfectly balanced* cluster already sits at ~0.57 mean
@@ -65,6 +69,14 @@ class Scenario:
     @property
     def max_apps(self) -> int:
         return max(self.num_apps, int(round(self.num_apps * self.pool_frac)))
+
+    @property
+    def declared_events(self) -> tuple:
+        """The advisory channel: ``core.planner.Advisory`` records for every
+        announced maintenance event (drain staircases, outage windows).
+        Surprise events (flash crowds, churn re-rates) never declare."""
+        return tuple(adv for adv in (e.declare() for e in self.events)
+                     if adv is not None)
 
 
 _REGISTRY: dict[str, tuple[str, Callable[..., Scenario]]] = {}
@@ -140,7 +152,12 @@ def _tier_drain(num_apps: int, ticks: int, seed: int) -> Scenario:
         num_apps=num_apps, seed=seed,
         workload=WorkloadConfig(period=max(16, ticks // 2),
                                 diurnal_amp=0.15, burst_sigma=0.10),
-        events=tuple(events))
+        events=tuple(events),
+        # Maintenance is the scenario where movement is priced for real:
+        # the budget covers evacuating the hot tier and refilling it after
+        # the restore (~2 round trips of its population), with headroom for
+        # the diurnal rebalancing a run this long needs anyway.
+        move_budget=2.0 * num_apps)
 
 
 @scenario("region_outage", "a region goes dark: capacity + SLO eligibility "

@@ -28,6 +28,7 @@ import dataclasses
 import numpy as np
 
 from repro.core import metrics as M
+from repro.core.hierarchy import REGION_LATENCY_BUDGET_MS, RegionScheduler
 from repro.core.problem import Problem, utilization_fraction
 from repro.core.telemetry import ClusterState
 
@@ -53,6 +54,15 @@ class TickStats:
     applied: bool = False
     triggered: bool = False
     solve_s: float = 0.0
+    # Priced reconfiguration cost the controller actually spent this tick
+    # (core.planner.move_costs units: mean live app == 1.0), and whether
+    # the movement budget bound the round (trimmed or blocked movement).
+    movement_cost: float = 0.0
+    budget_limited: bool = False
+    # Live apps placed beyond the strict region latency budget — the
+    # maintenance placement mode's bounded degradation, surfaced so the
+    # relaxed-evacuation tradeoff is priced, never silent.
+    region_breach_apps: int = 0
 
 
 def score_cluster(problem: Problem) -> dict:
@@ -88,10 +98,19 @@ class SloAccountant:
 
     def observe(self, cluster: ClusterState, *, moved: int = 0,
                 applied: bool = False, triggered: bool = False,
-                solve_s: float = 0.0) -> TickStats:
+                solve_s: float = 0.0, movement_cost: float = 0.0,
+                budget_limited: bool = False) -> TickStats:
         s = score_cluster(cluster.problem)
+        p = cluster.problem
+        worst = RegionScheduler(cluster)._worst_ms   # memoized on the cluster
+        x = np.asarray(p.assignment0)
+        breach = (worst[cluster.app_region, x] > REGION_LATENCY_BUDGET_MS)
         stat = TickStats(tick=len(self.ticks), moved=moved, applied=applied,
-                         triggered=triggered, solve_s=solve_s, **s)
+                         triggered=triggered, solve_s=solve_s,
+                         movement_cost=movement_cost,
+                         budget_limited=budget_limited,
+                         region_breach_apps=int(
+                             np.sum(breach & np.asarray(p.valid))), **s)
         self.ticks.append(stat)
         return stat
 
@@ -128,6 +147,13 @@ class SimReport:
             "over_ideal_excess_integral": float(sum(
                 t.over_ideal_excess for t in ts)),
             "total_moves": sum(t.moved for t in ts if t.applied),
+            # Movement priced, not just counted (Madsen-style downtime
+            # accounting), plus the ticks the budget bound the controller.
+            "movement_cost": round(sum(
+                t.movement_cost for t in ts if t.applied), 4),
+            "budget_overruns": sum(1 for t in ts if t.budget_limited),
+            "region_breach_app_ticks": sum(
+                t.region_breach_apps for t in ts),
             "rebalances": sum(1 for t in ts if t.applied),
             "triggers": sum(1 for t in ts if t.triggered),
             "mean_d2b": float(d2b.mean()),
@@ -145,6 +171,8 @@ class SimReport:
             "over_ideal_tiers": [t.over_ideal_tiers for t in self.ticks],
             "live_apps": [t.live_apps for t in self.ticks],
             "moved": [t.moved if t.applied else 0 for t in self.ticks],
+            "movement_cost": [round(t.movement_cost, 3) if t.applied else 0.0
+                              for t in self.ticks],
         }
 
 
@@ -177,4 +205,19 @@ def compare(baseline: SimReport, balanced: SimReport) -> dict:
         "total_moves": c["total_moves"],
         "rebalances": c["rebalances"],
         "solver_time_s": c["solver_time_s"],
+        # What the win cost: priced movement vs the scenario's downtime
+        # budget (None = unbudgeted).  ``within_budget`` is the acceptance
+        # bit the regression gate pins.
+        "movement": {
+            "cost": c["movement_cost"],
+            "budget": c.get("move_budget"),
+            "overrun_ticks": c["budget_overruns"],
+            "within_budget": (c.get("move_budget") is None
+                              or c["movement_cost"]
+                              <= c["move_budget"] + 1e-6),
+        },
+        # Maintenance placement mode's bounded latency degradation, vs the
+        # baseline's own breaches (normally 0) — priced, never silent.
+        "region_breach_app_ticks": {"baseline": b["region_breach_app_ticks"],
+                                    "balanced": c["region_breach_app_ticks"]},
     }

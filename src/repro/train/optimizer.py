@@ -7,7 +7,7 @@ sharding rules that apply to params apply verbatim to the optimizer state
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -44,7 +44,8 @@ def lr_schedule(cfg: AdamWConfig, step) -> jax.Array:
 
 
 def adamw_init(params) -> AdamWState:
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
     return AdamWState(
         count=jnp.zeros((), jnp.int32),
         m=jax.tree.map(zeros, params),

@@ -6,8 +6,7 @@ slices — the standard memory/throughput knob for the perf pass.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp

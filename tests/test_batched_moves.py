@@ -3,7 +3,6 @@ cooperation loop: invariants, parity with the single-move/seed semantics,
 and the fused best-per-app kernel contract."""
 import dataclasses
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -16,7 +15,7 @@ from repro.core.delta import move_delta_cost
 from repro.core.problem import bucket_size, tier_loads
 from repro.core.solver_local import _weights_vector
 
-from _hypothesis_compat import hypothesis, st
+from _hypothesis_compat import hypothesis
 from test_solver import problems
 
 

@@ -1,0 +1,168 @@
+"""The CI perf-regression gate must pass on the committed smoke records and
+demonstrably fail on injected regressions (ISSUE 4 satellite)."""
+
+import copy
+import json
+import os
+import shutil
+
+import pytest
+
+from benchmarks.check_regression import SIM_SMOKE, SOLVER_SMOKE, main
+
+REPO_ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _stage(tmp_path, name):
+    baseline = tmp_path / "baseline"
+    current = tmp_path / "current"
+    baseline.mkdir(exist_ok=True)
+    current.mkdir(exist_ok=True)
+    shutil.copy(os.path.join(REPO_ROOT, name), baseline / name)
+    shutil.copy(os.path.join(REPO_ROOT, name), current / name)
+    return baseline, current
+
+
+def _rewrite(directory, name, mutate):
+    path = directory / name
+    record = json.loads(path.read_text())
+    mutate(record)
+    path.write_text(json.dumps(record))
+
+
+def _run(baseline, current):
+    return main(["--baseline", str(baseline), "--current", str(current)])
+
+
+def test_gate_passes_on_committed_smoke_records(tmp_path, capsys):
+    for name in (SIM_SMOKE, SOLVER_SMOKE):
+        _stage(tmp_path, name)
+    assert _run(tmp_path / "baseline", tmp_path / "current") == 0
+    out = capsys.readouterr().out
+    assert "REGRESSION" not in out
+    assert "checks passed" in out
+
+
+def test_gate_fails_on_violation_ratio_regression(tmp_path, capsys):
+    baseline, current = _stage(tmp_path, SIM_SMOKE)
+
+    def worsen(record):
+        scenario = sorted(record)[0]
+        block = record[scenario]["compare"]["slo_violation_ticks"]
+        block["ratio"] = (block["ratio"] or 0.0) + 0.5
+
+    _rewrite(current, SIM_SMOKE, worsen)
+    assert _run(baseline, current) == 1
+    assert "slo_violation_ticks/ratio" in capsys.readouterr().out
+
+
+def test_gate_treats_null_ratio_as_worst_case(tmp_path, capsys):
+    baseline, current = _stage(tmp_path, SIM_SMOKE)
+
+    def nullify(record):
+        scenario = sorted(record)[0]
+        record[scenario]["compare"]["slo_violation_ticks"]["ratio"] = None
+
+    _rewrite(current, SIM_SMOKE, nullify)
+    assert _run(baseline, current) == 1
+
+
+def test_gate_fails_on_throughput_collapse(tmp_path, capsys):
+    baseline, current = _stage(tmp_path, SOLVER_SMOKE)
+
+    def collapse(record):
+        for size in record["local_search"].values():
+            if isinstance(size, dict) and "batch16" in size:
+                size["batch16"]["moves_per_s"] /= 10.0
+
+    _rewrite(current, SOLVER_SMOKE, collapse)
+    assert _run(baseline, current) == 1
+    assert "moves_per_s" in capsys.readouterr().out
+
+
+def test_gate_tolerates_cross_machine_wall_clock(tmp_path):
+    baseline, current = _stage(tmp_path, SOLVER_SMOKE)
+
+    def slower(record):
+        for size in record["local_search"].values():
+            if isinstance(size, dict) and "batch16" in size:
+                size["batch16"]["moves_per_s"] /= 2.0  # a slower runner, not a bug
+
+    _rewrite(current, SOLVER_SMOKE, slower)
+    assert _run(baseline, current) == 0
+
+
+def test_gate_fails_when_budget_compliance_is_lost(tmp_path, capsys):
+    baseline, current = _stage(tmp_path, SIM_SMOKE)
+    budgeted = [
+        name
+        for name, rec in json.loads((baseline / SIM_SMOKE).read_text()).items()
+        if rec["compare"]["movement"]["within_budget"]
+    ]
+    assert budgeted, "at least one scenario must run under a movement budget"
+
+    def overrun(record):
+        record[budgeted[0]]["compare"]["movement"]["within_budget"] = False
+
+    _rewrite(current, SIM_SMOKE, overrun)
+    assert _run(baseline, current) == 1
+    assert "within_budget" in capsys.readouterr().out
+
+
+def test_gate_fails_on_retrace_creep(tmp_path, capsys):
+    baseline, current = _stage(tmp_path, SIM_SMOKE)
+
+    def creep(record):
+        scenario = sorted(record)[0]
+        record[scenario]["balanced"]["solver_retraces"] += 5
+
+    _rewrite(current, SIM_SMOKE, creep)
+    assert _run(baseline, current) == 1
+    assert "solver_retraces" in capsys.readouterr().out
+
+
+def test_gate_fails_on_missing_metric(tmp_path, capsys):
+    baseline, current = _stage(tmp_path, SIM_SMOKE)
+
+    def drop(record):
+        scenario = sorted(record)[0]
+        del record[scenario]["compare"]["slo_violation_ticks"]
+
+    _rewrite(current, SIM_SMOKE, drop)
+    assert _run(baseline, current) == 1
+    assert "missing" in capsys.readouterr().out
+
+
+def test_gate_fails_when_current_record_is_absent(tmp_path):
+    baseline, current = _stage(tmp_path, SIM_SMOKE)
+    os.remove(current / SIM_SMOKE)
+    assert _run(baseline, current) == 1
+
+
+def test_gate_skips_cleanly_without_baselines(tmp_path):
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    assert _run(empty, REPO_ROOT) == 0
+
+
+def test_checks_cover_both_records():
+    """Every gated file that exists in the repo is actually exercised."""
+    from benchmarks.check_regression import CHECKS
+
+    gated_files = {check.file for check in CHECKS}
+    assert gated_files == {SIM_SMOKE, SOLVER_SMOKE}
+
+
+@pytest.mark.parametrize("name", [SIM_SMOKE, SOLVER_SMOKE])
+def test_committed_smoke_records_exist(name):
+    """The gate is only meaningful while the baselines stay committed."""
+    assert os.path.exists(os.path.join(REPO_ROOT, name))
+
+
+def test_expand_handles_nested_wildcards():
+    from benchmarks.check_regression import _expand
+
+    record = {"a": {"x": {"v": 1}, "y": {"v": 2}}, "b": {"z": {"v": 3}}}
+    paths = _expand(record, ("*", "*", "v"))
+    assert paths == [("a", "x", "v"), ("a", "y", "v"), ("b", "z", "v")]
+    assert _expand(copy.deepcopy(record), ("a", "missing", "v")) == []

@@ -96,6 +96,78 @@ def test_slo_stranded_trigger(cluster):
     assert not triggered and "balanced" in reason
 
 
+def test_movement_budget_enforced_across_ticks(cluster):
+    """The trajectory budget is hard: applied cost never exceeds it, the
+    overruns are observable, and an exhausted budget blocks movement."""
+    budget = 3.0
+    ctl = BalanceController(cluster, ControllerConfig(
+        trigger_d2b=0.0, trigger_over_ideal=0.0, cooldown_rounds=1,
+        timeout_s=4, movement_cost_budget=budget))
+    for _ in range(4):
+        ctl.tick()
+    assert ctl.cost_spent <= budget + 1e-6
+    audit = ctl.audit()
+    assert audit["movement_cost"] <= budget + 1e-6
+    assert audit["movement_cost_budget"] == budget
+    assert audit["budget_overruns"] >= 1
+    limited = [e for e in ctl.history if e.budget_limited]
+    assert limited
+    # Once exhausted, later triggered rounds are blocked, not silently free.
+    exhausted = [e for e in ctl.history if "budget exhausted" in e.reason]
+    if exhausted:
+        assert all(not e.applied for e in exhausted)
+
+
+def test_unbudgeted_controller_still_prices_movement(cluster):
+    ctl = BalanceController(cluster, ControllerConfig(timeout_s=4))
+    ev = ctl.tick()
+    assert ev.applied and ev.movement_cost > 0
+    assert not ev.budget_limited
+    assert ctl.audit()["budget_overruns"] == 0
+
+
+QUIET = dict(trigger_d2b=10.0, trigger_over_ideal=10.0,
+             trigger_slo_apps=None, timeout_s=4, cooldown_rounds=1)
+
+
+def test_declared_event_never_fired_leaves_budget_untouched(cluster):
+    """An advisory beyond the horizon must not trigger, move, or spend —
+    declaring maintenance is free until the window approaches."""
+    from repro.core.planner import CAPACITY, Advisory
+    ctl = BalanceController(cluster, ControllerConfig(
+        **QUIET, movement_cost_budget=50.0))
+    ctl.set_advisories([Advisory(at=10_000, kind=CAPACITY, tier=2,
+                                 scale=0.05)])
+    for tick in range(3):
+        ev = ctl.tick(now=tick)
+        assert not ev.triggered and ev.plan_pending == 0
+    assert ctl.cost_spent == 0.0
+    assert ctl.audit()["budget_overruns"] == 0
+    assert ctl.audit()["rebalances"] == 0
+
+
+def test_declared_drain_triggers_proactively_and_pre_evacuates(cluster):
+    """With balance metrics quiet, a declared drain inside the horizon is
+    the only trigger — and the controller starts emptying the tier before
+    the event fires."""
+    from repro.core.planner import CAPACITY, Advisory
+    x0 = np.asarray(cluster.problem.assignment0)
+    valid = np.asarray(cluster.problem.valid)
+    hot = int(np.bincount(x0[valid]).argmax())
+    before = int(((x0 == hot) & valid).sum())
+
+    ctl = BalanceController(cluster, ControllerConfig(**QUIET))
+    ctl.set_advisories([Advisory(at=6, kind=CAPACITY, tier=hot,
+                                 scale=0.05)])
+    events = [ctl.tick(now=tick) for tick in range(4)]
+    assert any(e.triggered and "declared-maintenance" in e.reason
+               for e in events)
+    assert any(e.applied for e in events)
+    x = np.asarray(ctl.cluster.problem.assignment0)
+    after = int(((x == hot) & valid).sum())
+    assert after < before                      # evacuation began pre-event
+
+
 def test_controller_restart_rounds_threads_through(cluster):
     """restart_rounds reaches the cooperation loop (the never-worse
     objective contract itself is asserted in test_hierarchy.py)."""

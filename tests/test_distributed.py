@@ -13,7 +13,7 @@ from repro.distributed import sharding as SH
 from repro.distributed.checkpoint import CheckpointManager
 from repro.distributed.fault import (CapacityEvent, FaultInjector,
                                      apply_event, rebalance_after)
-from repro.core import generate_cluster, validate
+from repro.core import generate_cluster
 from repro.launch.mesh import make_host_mesh
 from repro.models import build_model, reduce_for_smoke
 from repro.train.optimizer import (AdamWConfig, adamw_init, adamw_update,

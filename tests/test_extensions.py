@@ -9,7 +9,7 @@ import pytest
 from repro.core import generate_cluster
 from repro.core.controller import BalanceController, ControllerConfig
 from repro.distributed.compress import GradCompressor
-from repro.launch.serve import Request, RequestQueue, latency_report, main as serve_main
+from repro.launch.serve import Request, RequestQueue, main as serve_main
 
 
 # ---------------------------------------------------------------------------

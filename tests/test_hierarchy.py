@@ -3,8 +3,7 @@ convergence, and the Fig. 4/5 qualitative trade-offs."""
 import numpy as np
 import pytest
 
-from repro.core import (RegionScheduler, HostScheduler, Sptlb, cooperate,
-                        engine_fn, generate_cluster, validate)
+from repro.core import HostScheduler, RegionScheduler, Sptlb, generate_cluster
 from repro.core.hierarchy import region_overlap_avoid
 
 

@@ -2,13 +2,12 @@
 
 Shapes / dtypes / feature flags swept per kernel, as required for (c).
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from benchmarks.common import random_problem_arrays
-from repro.kernels import ops, ref
+from repro.kernels import ops
 
 RNG = np.random.default_rng(0)
 

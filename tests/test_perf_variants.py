@@ -11,9 +11,7 @@ import sys
 import textwrap
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.models import build_model, reduce_for_smoke

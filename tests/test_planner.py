@@ -1,0 +1,233 @@
+"""Maintenance planner: advisory schedules, time-phased capacity targets,
+maintenance placement mode, movement pricing, and cost-budget trimming
+(ISSUE 4 tentpole)."""
+
+import numpy as np
+import pytest
+
+from repro.core import generate_cluster
+from repro.core.hierarchy import REGION_LATENCY_BUDGET_MS, RegionScheduler
+from repro.core.planner import (
+    CAPACITY,
+    OUTAGE,
+    RESTORE,
+    Advisory,
+    MaintenancePlanner,
+    PlannerConfig,
+    move_costs,
+    movement_cost_of,
+)
+from repro.core.problem import pad_problem
+from repro.core.sptlb import Sptlb
+
+
+@pytest.fixture(scope="module")
+def cluster():
+    return generate_cluster(num_apps=120, seed=3)
+
+
+# ---------------------------------------------------------------------------
+# advisory schedule
+# ---------------------------------------------------------------------------
+
+
+def test_declared_schedule_is_piecewise_constant():
+    planner = MaintenancePlanner(
+        [
+            Advisory(at=10, kind=CAPACITY, tier=2, scale=0.4),
+            Advisory(at=14, kind=CAPACITY, tier=2, scale=0.05),
+            Advisory(at=6, kind=OUTAGE, region=1),
+            Advisory(at=12, kind=RESTORE, region=1),
+        ]
+    )
+    assert planner.declared_scale(2, 9) == 1.0
+    assert planner.declared_scale(2, 10) == 0.4
+    assert planner.declared_scale(2, 13) == 0.4
+    assert planner.declared_scale(2, 20) == 0.05
+    assert planner.declared_scale(0, 20) == 1.0  # undeclared tier
+    assert planner.declared_down(5) == set()
+    assert planner.declared_down(6) == {1}
+    assert planner.declared_down(12) == set()
+
+
+# ---------------------------------------------------------------------------
+# time-phased capacity targets
+# ---------------------------------------------------------------------------
+
+
+def test_outlook_phases_targets_toward_the_event(cluster):
+    planner = MaintenancePlanner(
+        [
+            Advisory(at=10, kind=CAPACITY, tier=2, scale=0.4),
+            Advisory(at=14, kind=CAPACITY, tier=2, scale=0.05),
+        ],
+        PlannerConfig(horizon=8),
+    )
+    # Both events beyond the horizon: nothing to plan against yet.
+    assert not planner.outlook(0, cluster).active
+
+    # Event 8 ticks out has just entered the window: barely tightened.
+    far = planner.outlook(2, cluster)
+    assert far.active
+    assert 0.9 < far.tier_factor[2] < 1.0
+
+    # Halfway there: weight (8 - 5 + 1) / 8 = 0.5 of the 0.6 step.
+    mid = planner.outlook(5, cluster)
+    assert mid.tier_factor[2] == pytest.approx(0.7, abs=1e-6)
+    assert not mid.relax_home_tiers[2]  # 0.4 is not a deep drain
+
+    # One tick before the step fires the target IS the declared scale, the
+    # deep follow-up step (0.05 < deep_drain_threshold) arms maintenance
+    # placement mode, and the will-drain tier is premasked (< 0.5).
+    close = planner.outlook(9, cluster)
+    assert close.tier_factor[2] == pytest.approx(0.4, abs=1e-6)
+    assert close.relax_home_tiers[2]
+    assert close.avoid_tiers[2]
+
+    # Monotone approach: the target never loosens as the event nears.
+    factors = [planner.outlook(now, cluster).tier_factor[2] for now in range(2, 10)]
+    assert all(a >= b - 1e-6 for a, b in zip(factors, factors[1:]))
+
+
+def test_outlook_is_relative_to_current_declared_scale(cluster):
+    planner = MaintenancePlanner(
+        [
+            Advisory(at=4, kind=CAPACITY, tier=1, scale=0.5),
+            Advisory(at=20, kind=CAPACITY, tier=1, scale=1.0),
+        ],
+        PlannerConfig(horizon=8),
+    )
+    # Mid-drain (the 0.5 already fired): only the restore is ahead, and a
+    # restore never tightens — the reactive path refills for free.
+    assert planner.outlook(14, cluster).tier_factor[1] == pytest.approx(1.0)
+
+
+def test_outage_outlook_premasks_and_desanctions_overlapping_tiers(cluster):
+    planner = MaintenancePlanner(
+        [
+            Advisory(at=6, kind=OUTAGE, region=0),
+            Advisory(at=12, kind=RESTORE, region=0),
+        ],
+        PlannerConfig(horizon=6),
+    )
+    out = planner.outlook(3, cluster)
+    affected = cluster.tier_regions[:, 0]
+    assert affected.any()
+    assert out.active
+    assert out.slo_off_tiers[affected].all()
+    assert out.avoid_tiers[affected].all()
+    assert (out.tier_factor[affected] < 1.0).all()
+    assert not out.slo_off_tiers[~affected].any()
+
+    # Already inside the declared window: the live cluster reflects the
+    # outage, and the upcoming restore is not a tightening — inactive.
+    assert not planner.outlook(8, cluster).active
+
+
+def test_apply_builds_the_planning_problem(cluster):
+    planner = MaintenancePlanner(
+        [Advisory(at=2, kind=CAPACITY, tier=2, scale=0.3)],
+        PlannerConfig(horizon=4),
+    )
+    out = planner.outlook(1, cluster)
+    problem = cluster.problem
+    planned = out.apply(problem)
+    np.testing.assert_allclose(
+        np.asarray(planned.capacity),
+        np.asarray(problem.capacity) * out.tier_factor[:, None],
+        rtol=1e-6,
+    )
+    np.testing.assert_allclose(
+        np.asarray(planned.task_limit),
+        np.asarray(problem.task_limit) * out.tier_factor,
+        rtol=1e-6,
+    )
+    # Will-drain tier is avoided for everyone except its incumbents (the
+    # premask home-column convention: staying put stays legal).
+    assert out.avoid_tiers[2]
+    x0 = np.asarray(problem.assignment0)
+    avoid = np.asarray(planned.avoid)
+    assert avoid[x0 != 2, 2].all()
+    assert not avoid[x0 == 2, 2].any()
+
+
+# ---------------------------------------------------------------------------
+# maintenance placement mode (relaxed region budgets)
+# ---------------------------------------------------------------------------
+
+
+def test_per_app_region_budgets_relax_feasibility(cluster):
+    strict = RegionScheduler(cluster)
+    n = cluster.problem.num_apps
+    relaxed_budget = np.full(n, REGION_LATENCY_BUDGET_MS * 100.0, np.float32)
+    relaxed = RegionScheduler(cluster, latency_budget_ms=relaxed_budget)
+    feas_strict = strict.feasibility_matrix()
+    feas_relaxed = relaxed.feasibility_matrix()
+    # Relaxing only ever adds destinations, and a huge budget opens all of
+    # them (every tier has hosts somewhere).
+    assert (feas_relaxed | feas_strict).sum() == feas_relaxed.sum()
+    assert feas_relaxed.sum() > feas_strict.sum()
+    # check_many agrees with the matrix on both schedulers.
+    apps = np.arange(n)
+    tiers = np.full(n, 2)
+    np.testing.assert_array_equal(strict.check_many(apps, tiers), feas_strict[:, 2])
+    np.testing.assert_array_equal(relaxed.check_many(apps, tiers), feas_relaxed[:, 2])
+
+
+# ---------------------------------------------------------------------------
+# movement pricing + cost budgets
+# ---------------------------------------------------------------------------
+
+
+def test_move_costs_mean_one_over_live_apps(cluster):
+    problem = cluster.problem
+    costs = move_costs(problem)
+    valid = np.asarray(problem.valid)
+    assert costs[valid].mean() == pytest.approx(1.0, abs=1e-5)
+    # Demand-proportional: the hungriest live app costs the most.
+    load = np.asarray(problem.demand).sum(axis=1)
+    assert costs.argmax() == load.argmax()
+    # Padding rows are inert and free.
+    padded = pad_problem(problem, 256)
+    costs_padded = move_costs(padded)
+    assert (costs_padded[int(valid.sum()) :] == 0).all()
+    np.testing.assert_allclose(costs_padded[: costs.size], costs, rtol=1e-6)
+
+
+def test_movement_cost_of_counts_and_prices():
+    x0 = np.array([0, 1, 2, 0])
+    x = np.array([1, 1, 0, 0])
+    assert movement_cost_of(x, x0) == 2.0
+    costs = np.array([0.5, 9.0, 2.0, 9.0], np.float32)
+    assert movement_cost_of(x, x0, costs) == pytest.approx(2.5)
+
+
+def test_cost_budget_trims_the_decision(cluster):
+    baseline = Sptlb(cluster).balance("local", timeout_s=4)
+    assert baseline.movement_cost > 2.0
+    assert baseline.cooperation.timings["budget_trimmed"] == 0
+
+    budget = baseline.movement_cost / 2.0
+    capped = Sptlb(cluster).balance(
+        "local",
+        timeout_s=4,
+        move_cost=move_costs(cluster.problem),
+        cost_budget=budget,
+    )
+    assert capped.movement_cost <= budget + 1e-6
+    assert capped.cooperation.timings["budget_trimmed"] > 0
+    assert capped.cooperation.timings["movement_cost"] == pytest.approx(
+        capped.movement_cost
+    )
+    assert capped.violations.ok
+    # Trimmed decisions still improve on doing nothing.
+    assert capped.projected.num_moved > 0
+
+
+def test_round_costs_are_priced_every_round(cluster):
+    decision = Sptlb(cluster).balance(
+        "local", timeout_s=4, move_cost=move_costs(cluster.problem)
+    )
+    round_costs = decision.cooperation.timings["round_costs"]
+    assert len(round_costs) >= 1
+    assert all(c >= 0.0 for c in round_costs)

@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.hierarchy import RegionScheduler
 from repro.core.telemetry import sample_app_population
 from repro.sim import (CapacityScale, RegionOutage, RegionRestore,
                        WorkloadConfig, build_fleet, get_scenario,
@@ -96,6 +97,76 @@ def test_capacity_scale_and_region_outage_rewrite_cluster():
                                fleet.base_latency, rtol=1e-6)
 
 
+def test_region_restore_reenables_premask_eligibility():
+    """The planner pre-evacuates against the §3.4 premask, so a restore
+    must hand the region scheduler back exactly the pre-outage
+    feasibility matrix (the premask is memoized per cluster — a stale
+    cache here would keep the region dark forever)."""
+    sc = get_scenario("region_outage", num_apps=96, ticks=8)
+    fleet = build_fleet(sc)
+    feas0 = RegionScheduler(fleet.cluster).feasibility_matrix().copy()
+    assert feas0.any()
+
+    RegionOutage(at=0, region=0).apply(fleet)
+    feas_out = RegionScheduler(fleet.cluster).feasibility_matrix()
+    lost = feas0 & ~feas_out
+    assert lost.any()                          # the outage closed placements
+    assert not (feas_out & ~feas0).any()       # and never opened new ones
+
+    RegionRestore(at=0, region=0).apply(fleet)
+    feas_back = RegionScheduler(fleet.cluster).feasibility_matrix()
+    np.testing.assert_array_equal(feas_back, feas0)
+
+
+def test_overlapping_capacity_and_outage_events_compose():
+    """FleetState.refresh is the single composition point: a capacity scale
+    and a region outage on the same tier multiply, and unwinding one knob
+    leaves the other exactly in place."""
+    sc = get_scenario("steady_diurnal", num_apps=96, ticks=8)
+    fleet = build_fleet(sc)
+    cap0 = np.asarray(fleet.cluster.problem.capacity).copy()
+    affected = fleet.cluster.tier_regions[:, 0]
+    tier = int(np.where(affected)[0][0])
+    regions = fleet.cluster.tier_regions[tier]
+    live_share = (regions & ~np.eye(len(regions), dtype=bool)[0]).sum() / regions.sum()
+
+    CapacityScale(at=0, tier=tier, scale=0.5).apply(fleet)
+    RegionOutage(at=0, region=0).apply(fleet)
+    cap = np.asarray(fleet.cluster.problem.capacity)
+    np.testing.assert_allclose(cap[tier], cap0[tier] * 0.5 * live_share,
+                               rtol=1e-5)
+
+    # Restoring the region must leave the standing capacity scale intact...
+    RegionRestore(at=0, region=0).apply(fleet)
+    np.testing.assert_allclose(np.asarray(fleet.cluster.problem.capacity)[tier],
+                               cap0[tier] * 0.5, rtol=1e-5)
+    # ...and unwinding the scale recovers as-built exactly.
+    CapacityScale(at=0, tier=tier, scale=1.0).apply(fleet)
+    np.testing.assert_allclose(np.asarray(fleet.cluster.problem.capacity),
+                               cap0, rtol=1e-5)
+
+
+def test_declared_events_channel():
+    """Maintenance events publish advisories; surprises never do."""
+    drain = get_scenario("tier_drain", num_apps=96, ticks=40)
+    advisories = drain.declared_events
+    assert len(advisories) == len(drain.events)
+    assert all(a.kind == "capacity" and a.tier == 2 for a in advisories)
+    assert [a.at for a in advisories] == sorted(a.at for a in advisories)
+
+    outage = get_scenario("region_outage", num_apps=96, ticks=40)
+    assert {a.kind for a in outage.declared_events} == {"outage", "restore"}
+
+    flash = get_scenario("flash_crowd", num_apps=96, ticks=40)
+    assert flash.declared_events == ()
+
+    # Per-event opt-out: an unannounced drain stays off the channel.
+    quiet = dataclasses.replace(
+        drain, events=tuple(dataclasses.replace(e, announced=False)
+                            for e in drain.events))
+    assert quiet.declared_events == ()
+
+
 def test_place_arrivals_respects_slo_table():
     sc = get_scenario("churn_heavy", num_apps=96, ticks=8)
     fleet = build_fleet(sc)
@@ -166,6 +237,42 @@ def test_tier_drain_controller_beats_baseline(drain_pair):
         cmp["slo_violation_ticks"]["baseline"]
     assert cmp["slo_violation_ticks"]["ratio"] < 0.9
     assert cmp["over_ideal_excess_integral"]["ratio"] < 0.9
+
+
+def test_tier_drain_respects_movement_budget(drain_pair):
+    """Maintenance evacuation is priced: the trajectory's movement cost
+    stays inside the scenario budget and the scorecard says so."""
+    cmp = drain_pair["compare"]
+    summary = drain_pair["balanced"].summary()
+    assert summary["move_budget"] is not None
+    assert cmp["movement"]["budget"] == summary["move_budget"]
+    assert cmp["movement"]["within_budget"]
+    assert 0 < cmp["movement"]["cost"] <= summary["move_budget"]
+    assert summary["movement_cost"] == pytest.approx(
+        summary["audit"]["movement_cost"], abs=1e-3)
+
+
+def test_anticipation_never_worse_and_moves_less(drain_pair):
+    """The declared drain is known in advance: planning against it must
+    not lose on violations and should spend less movement than reacting
+    to each capacity step after it bites."""
+    assert drain_pair["balanced"].extra["anticipation"]
+    blind = run_pair(get_scenario("tier_drain", num_apps=160, ticks=40,
+                                  seed=0), anticipation=False)
+    assert not blind["balanced"].extra["anticipation"]
+    ant_cmp, blind_cmp = drain_pair["compare"], blind["compare"]
+    assert (ant_cmp["slo_violation_ticks"]["balanced"]
+            <= blind_cmp["slo_violation_ticks"]["balanced"])
+    assert (ant_cmp["movement"]["cost"]
+            <= blind_cmp["movement"]["cost"] * 1.05)
+
+
+def test_region_breach_accounting_present(drain_pair):
+    """Maintenance placement mode's latency degradation is priced, never
+    silent: both policies report region-breach app-ticks."""
+    for policy in ("baseline", "balanced"):
+        s = drain_pair[policy].summary()
+        assert s["region_breach_app_ticks"] >= 0
 
 
 def test_controller_pays_moves_for_the_win(flash_pair):

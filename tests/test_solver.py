@@ -4,13 +4,11 @@ Includes hypothesis property tests over random problem instances — the
 solver must uphold the paper's hard constraints (§3.2.1 items 1-4) on every
 input, not just the calibrated workload.
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import (GoalWeights, LocalSearchConfig, OptimalSearchConfig,
-                        GreedyConfig, generate_cluster, goal_terms, objective,
+                        GreedyConfig, goal_terms, objective,
                         solve_greedy, solve_local, solve_optimal,
                         utilization_fraction, validate,
                         difference_to_balance)
@@ -44,7 +42,8 @@ def test_local_search_balances_all_three_objectives(cluster300):
     res = solve_local(p, LocalSearchConfig(max_iters=256))
     uf, tf = utilization_fraction(p, res.assignment)
     uf0, tf0 = utilization_fraction(p, p.assignment0)
-    spread = lambda a: float(jnp.max(a) - jnp.min(a))
+    def spread(a):
+        return float(jnp.max(a) - jnp.min(a))
     for r in range(2):
         assert spread(uf[:, r]) < spread(uf0[:, r]) * 0.5
     assert spread(tf) < spread(tf0)
@@ -54,7 +53,8 @@ def test_greedy_balances_only_its_objective(cluster300):
     """Paper Fig. 3: each greedy variant balances only its own resource."""
     p = cluster300.problem
     uf0, tf0 = utilization_fraction(p, p.assignment0)
-    spread = lambda a: float(jnp.max(a) - jnp.min(a))
+    def spread(a):
+        return float(jnp.max(a) - jnp.min(a))
 
     res = solve_greedy(p, GreedyConfig(objective="cpu"))
     uf, tf = utilization_fraction(p, res.assignment)

@@ -1,7 +1,6 @@
 """End-to-end behaviour: the full driver (SPTLB routing + train loop +
 checkpoint/restart + failure rebalance) and the paper's orchestration."""
 import numpy as np
-import pytest
 
 from repro.core import Sptlb, generate_cluster
 from repro.launch.train import main as train_main
