@@ -12,22 +12,23 @@ import time
 import numpy as np
 
 from benchmarks.common import TIMEOUTS, comment, emit, load_cluster
-from repro.core import Sptlb
+from repro.core import CoopConfig, Sptlb
 
 
 def run(num_apps: int = 1200, timeouts=TIMEOUTS):
     cluster = load_cluster(num_apps)
     s = Sptlb(cluster)
     # warm the jit caches so timings reflect solve time, not compilation
-    s.balance("local", timeout_s=30, variant="no_cnst")
-    s.balance("optimal", timeout_s=30, variant="no_cnst")
+    s.balance("local", timeout_s=30, config=CoopConfig(variant="no_cnst"))
+    s.balance("optimal", timeout_s=30, config=CoopConfig(variant="no_cnst"))
     rows = []
     for engine in ("local", "optimal"):
         for timeout_s in timeouts:
             for variant in ("no_cnst", "w_cnst", "manual_cnst"):
                 t0 = time.perf_counter()
-                d = s.balance(engine, timeout_s=timeout_s, variant=variant,
-                              max_feedback_rounds=20)
+                d = s.balance(engine, timeout_s=timeout_s,
+                              config=CoopConfig(variant=variant,
+                                                max_rounds=20))
                 dt = time.perf_counter() - t0
                 rows.append((engine, timeout_s, variant, d.network_p99_ms,
                              dt, d.difference_to_balance))

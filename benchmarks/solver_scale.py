@@ -34,8 +34,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import comment, emit, random_problem_arrays
-from repro.core import (LocalSearchConfig, Sptlb, generate_cluster,
-                        solve_local)
+from repro.core import (CoopConfig, LocalSearchConfig, Sptlb,
+                        generate_cluster, solve_local)
 from repro.core.sptlb import engine_fn
 from repro.core.solver_local import local_search_trace_count
 from repro.kernels import ops
@@ -94,31 +94,43 @@ def bench_local_search_batched(N: int, sweeps: int = 64, batch: int = 16):
 
 
 def bench_cooperate(N: int, timeout_s: int = 8):
-    """Cooperation section (the PR 2 tentpole): per-phase split, rounds,
-    region/host rejection breakdown, and pack dispatch/retrace counters of
-    a manual_cnst pass with region pre-masking off vs on.  host_side_frac
-    is everything that is neither the solver nor the compiled pack
-    dispatches (acceptance: <=0.10 at N=10_000 with premask on)."""
+    """Cooperation section (PR 2 tentpole + PR 5 bus): per-phase split,
+    rounds, per-level rejection breakdown, and pack dispatch/retrace
+    counters of a manual_cnst pass with level pre-masking off vs on, all
+    through the generic cooperation bus (``CoopConfig`` + default
+    region+host ``Hierarchy``).  host_side_frac is everything that is
+    neither the solver nor the levels' compiled dispatches (acceptance:
+    <=0.10 at N=10_000 with premask on); bus_overhead_frac isolates the
+    generic bus's own routing glue (wall-clock belonging to no phase),
+    gated <= ~5% so the protocol refactor can never quietly tax the
+    two-level hot path.  A third record runs the region+host+shard stack —
+    the plugin-level cost is observable, not gated."""
     cluster = generate_cluster(num_apps=N, seed=2)
     s = Sptlb(cluster)
     rec = {}
-    for premask in (False, True):
-        label = "premask" if premask else "unmasked"
-        s.balance("local", timeout_s=timeout_s, variant="manual_cnst",
-                  premask_region=premask)                        # warm jit
-        d = s.balance("local", timeout_s=timeout_s, variant="manual_cnst",
-                      premask_region=premask)
+    cases = {
+        "unmasked": CoopConfig(premask=False),
+        "premask": CoopConfig(premask=True),
+        "shard_stack": CoopConfig(premask=True,
+                                  levels=("region", "host", "shard")),
+    }
+    for label, cfg in cases.items():
+        s.balance("local", timeout_s=timeout_s, config=cfg)      # warm jit
+        d = s.balance("local", timeout_s=timeout_s, config=cfg)
         tm = dict(d.cooperation.timings)
         rec[label] = {**tm, "objective": d.solve.objective,
                       "d2b": d.difference_to_balance,
                       "accepted": d.cooperation.accepted}
+        shard_rej = tm.get("shard_rejections", "-")
         emit(f"solver_scale/cooperate/N{N}/{label}", tm["total_s"] * 1e6,
              f"rounds={tm['rounds']};region_rej={tm['region_rejections']};"
-             f"host_rej={tm['host_rejections']};solve_s={tm['solve_s']:.3f};"
+             f"host_rej={tm['host_rejections']};shard_rej={shard_rej};"
+             f"solve_s={tm['solve_s']:.3f};"
              f"pack_s={tm['pack_s']:.4f};"
              f"pack_dispatches={tm['pack_dispatches']};"
              f"pack_retraces={tm['pack_retraces']};"
              f"host_side_frac={tm['host_side_frac']:.3f};"
+             f"bus_overhead_frac={tm['bus_overhead_frac']:.3f};"
              f"objective={d.solve.objective:.4g}")
     rec["speedup_premask"] = (rec["unmasked"]["total_s"]
                               / max(rec["premask"]["total_s"], 1e-12))
@@ -126,7 +138,9 @@ def bench_cooperate(N: int, timeout_s: int = 8):
             f"rounds {rec['unmasked']['rounds']} -> {rec['premask']['rounds']}, "
             f"region rejections {rec['unmasked']['region_rejections']} -> "
             f"{rec['premask']['region_rejections']}, host_side_frac "
-            f"{rec['premask']['host_side_frac']:.3f}")
+            f"{rec['premask']['host_side_frac']:.3f}, bus_overhead_frac "
+            f"{rec['premask']['bus_overhead_frac']:.3f}, 3-level stack "
+            f"{rec['shard_stack']['total_s']:.3f}s")
     RESULTS.setdefault("cooperate", {})[f"N{N}"] = rec
     return rec
 

@@ -10,7 +10,7 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import jax
 import numpy as np
 
-from repro.core import Sptlb, generate_cluster, utilization_fraction
+from repro.core import CoopConfig, Sptlb, generate_cluster, utilization_fraction
 from repro.models import build_model, reduce_for_smoke
 from repro.configs import get_config
 from repro.streams import StreamConfig, TokenStream
@@ -39,8 +39,9 @@ def main():
     print(f"mem util per tier : {greedy.projected.util_frac[:, 1].round(2)}  (left unbalanced!)")
 
     # --- hierarchy co-operation (paper Figs 2, 4, 5) ------------------------
-    coop = sptlb.balance("local", timeout_s=30, variant="manual_cnst",
-                         max_feedback_rounds=20)
+    coop = sptlb.balance("local", timeout_s=30,
+                         config=CoopConfig(variant="manual_cnst",
+                                           max_rounds=20))
     print("\n== manual_cnst co-operation with region/host schedulers ==")
     print(f"feedback rounds {coop.cooperation.feedback_rounds}, "
           f"avoid constraints learned {coop.cooperation.num_rejections}, "

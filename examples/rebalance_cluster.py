@@ -7,11 +7,26 @@
     re-balance (the framework's fault-tolerance loop).
 
 Run:  PYTHONPATH=src python examples/rebalance_cluster.py [--apps 600]
+
+The cooperation knobs ride a ``CoopConfig`` and the lower-level scheduler
+stack is a ``Hierarchy`` built from registry names — ``--levels
+region,host,shard`` runs the three-level stack (the shard locality plugin
+vetting data-shard co-location) through the exact same bus.  Registering
+your own level is one call:
+
+    from repro.core import SchedulerLevel, register_level
+
+    class QuotaLevel(SchedulerLevel):
+        name = "quota"
+        def __init__(self, cluster): ...
+        def vet(self, proposal): ...     # -> rejected app ids
+
+    register_level("quota", QuotaLevel)  # then --levels region,host,quota
 """
 import argparse
 
 
-from repro.core import Sptlb, generate_cluster
+from repro.core import CoopConfig, Hierarchy, Sptlb, generate_cluster
 from repro.distributed.fault import CapacityEvent, rebalance_after
 
 
@@ -19,23 +34,31 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--apps", type=int, default=600)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--levels", default="region,host",
+                    help="comma-separated scheduler-level stack for the "
+                         "cooperation bus (registry names; e.g. "
+                         "region,host,shard adds data-shard co-location "
+                         "vetting)")
     ap.add_argument("--no-premask", action="store_true",
-                    help="disable region pre-masking (the manual_cnst "
-                         "feedback loop then re-learns region feasibility "
-                         "one rejection round at a time, as in the paper's "
-                         "plain variant)")
+                    help="disable level pre-masking (the manual_cnst "
+                         "feedback loop then re-learns each level's "
+                         "feasibility one rejection round at a time, as in "
+                         "the paper's plain variant)")
     args = ap.parse_args()
 
     cluster = generate_cluster(num_apps=args.apps, seed=args.seed)
     sptlb = Sptlb(cluster)
+    hierarchy = Hierarchy.from_names(args.levels)
 
+    print(f"levels: {args.levels}")
     print(f"{'variant':14s} {'engine':8s} {'d2b':>6s} {'p99 ms':>7s} "
           f"{'moved':>6s} {'rounds':>6s} {'time s':>7s} ok")
     for engine in ("local", "optimal"):
         for variant in ("no_cnst", "w_cnst", "manual_cnst"):
-            d = sptlb.balance(engine, timeout_s=30, variant=variant,
-                              max_feedback_rounds=20,
-                              premask_region=not args.no_premask)
+            cfg = CoopConfig(variant=variant, max_rounds=20,
+                             premask=not args.no_premask)
+            d = sptlb.balance(engine, timeout_s=30, config=cfg,
+                              hierarchy=hierarchy)
             rounds = d.cooperation.feedback_rounds if d.cooperation else 1
             t = d.cooperation.total_time_s if d.cooperation else d.solve.solve_time_s
             print(f"{variant:14s} {engine:8s} {d.difference_to_balance:6.3f} "

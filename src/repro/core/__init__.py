@@ -9,7 +9,11 @@ from repro.core.solver_optimal import OptimalSearchConfig, solve_optimal
 from repro.core.greedy import GreedyConfig, solve_greedy
 from repro.core.hierarchy import (CooperationResult, HostScheduler,
                                   RegionScheduler, cooperate)
-from repro.core.telemetry import ClusterState, ResourceMonitor, generate_cluster
+from repro.core.levels import (CoopConfig, CoopTimings, Hierarchy,
+                               SchedulerLevel, ShardLocalityScheduler,
+                               register_level)
+from repro.core.telemetry import (ClusterState, ResourceMonitor,
+                                  generate_cluster, shard_affinity_of)
 from repro.core.metrics import (difference_to_balance, network_p99_ms,
                                 projected_metrics)
 from repro.core.planner import (Advisory, MaintenancePlanner, PlannerConfig,
@@ -26,7 +30,10 @@ __all__ = [
     "validate", "LocalSearchConfig", "SolveResult", "solve_local",
     "OptimalSearchConfig", "solve_optimal", "GreedyConfig", "solve_greedy",
     "CooperationResult", "HostScheduler", "RegionScheduler", "cooperate",
+    "CoopConfig", "CoopTimings", "Hierarchy", "SchedulerLevel",
+    "ShardLocalityScheduler", "register_level",
     "ClusterState", "ResourceMonitor", "generate_cluster",
+    "shard_affinity_of",
     "difference_to_balance", "network_p99_ms", "projected_metrics",
     "BalanceDecision", "Sptlb", "engine_fn",
     "BalanceController", "ControllerConfig",

@@ -46,6 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import metrics as M
+from repro.core.levels import CoopConfig
 from repro.core.planner import (MaintenancePlanner, PlannerConfig, PlanOutlook,
                                 move_costs)
 from repro.core.problem import utilization_fraction
@@ -53,7 +54,7 @@ from repro.core.sptlb import Sptlb
 from repro.core.telemetry import ClusterState
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class ControllerConfig:
     trigger_d2b: float = 0.15
     trigger_over_ideal: float = 0.05
@@ -64,6 +65,8 @@ class ControllerConfig:
     trigger_slo_apps: Optional[int] = 1
     cooldown_rounds: int = 3
     engine: str = "local"
+    # Legacy cooperation knobs, folded into ``coop`` when it is not given
+    # explicitly (kept so historical ControllerConfig(...) call sites work).
     variant: str = "manual_cnst"
     timeout_s: int = 30
     dry_run: bool = False
@@ -76,6 +79,33 @@ class ControllerConfig:
     # Trajectory-level movement budget in ``core.planner.move_costs`` units
     # (mean live app == 1.0); None leaves movement priced but uncapped.
     movement_cost_budget: Optional[float] = None
+    # The cooperation configuration every tick's balance runs under —
+    # variant, round cap, premask, restarts, and the scheduler-level stack
+    # (``coop.levels`` names, e.g. ("region", "host", "shard")).  The
+    # controller fills the per-tick dynamic fields (plan / move_cost /
+    # cost_budget) itself via dataclasses.replace.
+    coop: Optional[CoopConfig] = None
+
+    def __post_init__(self):
+        if self.coop is None:
+            self.coop = CoopConfig(variant=self.variant,
+                                   restart_rounds=self.restart_rounds)
+            return
+        # Same shim precedence as Sptlb.balance/cooperate: a legacy field
+        # the caller actually set (non-default) that disagrees with an
+        # explicit coop config warns and overrides (after folding they
+        # agree, so dataclasses.replace stays silent).
+        import warnings as _warnings
+        for legacy, default in (("variant", "manual_cnst"),
+                                ("restart_rounds", 0)):
+            value = getattr(self, legacy)
+            if value != default and value != getattr(self.coop, legacy):
+                _warnings.warn(
+                    f"ControllerConfig({legacy}=...) is deprecated alongside "
+                    f"an explicit coop config; the legacy value overrides — "
+                    f"set CoopConfig({legacy}=...) instead",
+                    DeprecationWarning, stacklevel=3)
+                self.coop = dataclasses.replace(self.coop, **{legacy: value})
 
 
 @dataclasses.dataclass
@@ -203,11 +233,12 @@ class BalanceController:
             self.budget_overruns += 1
         elif triggered:
             t0 = time.perf_counter()
+            coop_cfg = dataclasses.replace(
+                self.config.coop, plan=outlook, move_cost=move_costs(p),
+                cost_budget=remaining)
             decision = self._sptlb.balance(
                 self.config.engine, timeout_s=self.config.timeout_s,
-                variant=self.config.variant,
-                restart_rounds=self.config.restart_rounds,
-                plan=outlook, move_cost=move_costs(p), cost_budget=remaining)
+                config=coop_cfg)
             ev.time_s = time.perf_counter() - t0
             ev.d2b_after = decision.difference_to_balance
             ev.moved = decision.projected.num_moved

@@ -9,82 +9,85 @@ Three lower-level-scheduler integration variants for SPTLB:
                       (>50%) of regions.  Static constraints, "vastly
                       increasing its complexity",
   * ``manual_cnst`` — the paper's proposal: SPTLB proposes a mapping; the
-                      region scheduler then the host scheduler accept or
-                      reject each placement; rejections return to SPTLB as
-                      avoid constraints ("similar to Constraint 3 in section
-                      3.2.1") and it re-solves.  "These iterations continue
-                      until SPTLB times out or the number of iterations limit
-                      is reached."
+                      lower-level schedulers accept or reject each placement;
+                      rejections return to SPTLB as avoid constraints
+                      ("similar to Constraint 3 in section 3.2.1") and it
+                      re-solves.  "These iterations continue until SPTLB
+                      times out or the number of iterations limit is
+                      reached."
 
-The region and host schedulers are themselves small, self-contained
-schedulers — the paper treats them as black boxes that answer accept/reject,
-and that contract is exactly what we implement.
+Since PR 5 the ``manual_cnst`` loop is a *generic cooperation bus* over an
+ordered stack of ``core.levels.SchedulerLevel`` objects (see that module
+for the protocol).  The bus:
 
-Device-resident feedback rounds: a ``manual_cnst`` pass used to leave the
-device three times per round (per-tier host packing dispatches, numpy avoid
-matrices rebuilt and re-uploaded, region vetting of moves the region level
-was always going to reject).  The loop is now structured so the device does
-the heavy phases and the host only routes ids:
+  * folds every level's ``premask`` into the solver's avoid mask before the
+    first solve (home column re-opened — staying put is always legal),
+  * runs the solve -> vet -> feedback fixpoint: each round every level vets
+    the proposal in stack order (a level only sees the candidates that
+    survived the levels above it), rejections are scattered into the
+    standing device-resident avoid mask, accepted moves are locked, and the
+    solver re-solves warm-started,
+  * offers each level a ``feedback`` escalation hook (extra standing avoid
+    rows beyond the per-(app, dest) scatter),
+  * reverts still-unvetted moves at the iteration/timeout limit through a
+    stack-wide fixpoint (levels whose accept depends on whole-group state —
+    host packing — are re-vetted with the ``returners`` each revert sends
+    home),
+  * aggregates per-level wall-clock and rejection counters into
+    ``CoopTimings.levels`` (flat legacy keys like ``region_s`` /
+    ``host_rejections`` keep resolving).
 
-  * **region pre-masking** (``premask_region``, default on): the region
-    scheduler's full [N, T] feasibility matrix is folded into the problem's
-    avoid mask *before the first solve*, so the solver never proposes a
-    region-infeasible move and the region-rejection class disappears from
-    the feedback loop entirely (staying home is always allowed — the current
-    placement was accepted by the lower levels by definition),
-  * **all-tier batched packing** (``HostScheduler.check_tiers``): the
-    proposal's apps are segment-sorted by destination tier into one padded
-    [T, M_b, R] membership tensor and every tier is packed in a single
-    vmapped FFD dispatch (``kernels.pack.pack_ffd_tiers``) — one compiled
-    executable per (app-bucket, host-bucket) instead of one per tier size,
-    bit-identical accept/reject to the per-tier scan,
-  * **a resident round loop**: the avoid/ack mask and warm-start assignment
-    stay on device across rounds and are updated with scatter ops instead of
-    rebuilding numpy matrices and re-converting each round.
+``RegionScheduler`` and ``HostScheduler`` are the paper's two lower levels
+refactored into the protocol — the default ``Hierarchy`` stack reproduces
+the pre-protocol two-level path bit-for-bit (tests/test_coop_parity.py
+pins assignment hashes, objectives, rounds, and rejection counts captured
+before the refactor).  A third level is a plugin, not a rewrite:
+``core.levels.ShardLocalityScheduler`` vets data-shard co-location and
+rides the same bus (``Hierarchy.from_names("region,host,shard")``).
 
-``cooperate`` reports the per-phase wall-clock split (solve / region / host
-glue / pack / feedback), per-round pack dispatch and retrace counters, and
-the region/host rejection breakdown in ``CooperationResult.timings`` and
-``SolveResult.extra["coop_timings"]``.  ``host_side_frac`` is everything
-that is neither the solver nor the pack dispatches, as a fraction of the
-total — driven from 0.53 (seed) to 0.21 (PR 1) to <=0.03 here.  Note the
-definition tightened in this PR: PR 1 counted pack time as host-side
-(packing was dispatched from a per-tier Python loop); now that packing is
-a single compiled device scan per round it counts device-side, and under
-PR 1's everything-but-solve definition the premasked N=10_000 pass still
-measures ~0.16 — both the glue and the classification improved.
+Device-resident mechanics carried over from PR 1/2 (unchanged contracts):
+region pre-masking kills the region-rejection class before the first
+solve; all-tier batched FFD packing (``HostScheduler.check_tiers``) packs
+every destination tier in one vmapped dispatch; the avoid/ack mask stays
+on device across rounds and is updated with ``mode="drop"`` scatters.
+``host_side_frac`` (everything that is neither the solver nor a level's
+compiled device dispatches) stays <= ~0.03 at N=10_000, and the new
+``bus_overhead_frac`` isolates the generic bus's own glue (unaccounted
+wall-clock outside solver/levels/feedback) — gated <= ~5% in
+``benchmarks/check_regression.py``.
 
 Precomputes that depend only on cluster geometry (the region worst-latency
-matrix, the region feasibility matrix, the w_cnst overlap mask) are memoized
-on ``ClusterState._cache`` so controller ticks stop paying them on every
-``cooperate``/``balance`` call; any ``dataclasses.replace`` of the cluster
-(capacity events, applied rebalances) resets the cache.
+matrix, the region feasibility matrix, the w_cnst overlap mask, shard
+affinity) are memoized on ``ClusterState._cache``; any
+``dataclasses.replace`` of the cluster resets the cache.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Literal
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.goals import objective as _objective
+from repro.core.levels import (BusState, CoopConfig, CoopTimings,
+                               DEFAULT_LEVELS, Hierarchy, Proposal,
+                               SchedulerLevel, Variant, register_level,
+                               warn_deprecated_kwarg)
 from repro.core.planner import movement_cost_of
 from repro.core.problem import Problem, bucket_size
 from repro.core.solver_local import SolveResult
 from repro.core.telemetry import ClusterState
-from repro.kernels.pack import pack_ffd, pack_ffd_tiers, pack_trace_count
-
-Variant = Literal["no_cnst", "w_cnst", "manual_cnst"]
+from repro.kernels.pack import DispatchStats, pack_ffd, pack_ffd_tiers
 
 # The region scheduler's default latency budget (ms): placements must keep
 # an app within this worst-case latency of its data-source region.
 REGION_LATENCY_BUDGET_MS = 36.0
 
 
-class RegionScheduler:
+class RegionScheduler(SchedulerLevel):
     """Region-preference placement (paper [4]-style shard placement).
 
     Accepts a placement iff the destination tier has hosts within a latency
@@ -92,11 +95,14 @@ class RegionScheduler:
     app near its data source with the given tier, it returns false".
 
     ``latency_budget_ms`` may be a scalar (every app gets the same budget)
-    or an f32[N] per-app array — the planner's maintenance placement mode
-    relaxes the budget for residents evacuating a declared deep drain
-    (``core.planner``), and the relaxation must bind proposal vetting, the
-    premask, and the revert paths identically, so it lives here.
+    or an f32[N] per-app array; the ``relax`` hook derives the per-app
+    array itself from a declared maintenance plan (residents evacuating a
+    declared deep drain get ``budget x relax_latency_factor``), and the
+    relaxation binds proposal vetting, the premask, and the revert paths
+    identically because they all read the same budget state.
     """
+
+    name = "region"
 
     def __init__(self, cluster: ClusterState,
                  latency_budget_ms=REGION_LATENCY_BUDGET_MS):
@@ -155,8 +161,8 @@ class RegionScheduler:
     def feasibility_matrix(self) -> np.ndarray:
         """bool[N, T]: the full region-feasibility matrix for every app.
 
-        Memoized per (cluster, budget) — this is what ``premask_region``
-        folds into the solver's avoid mask every cooperation pass.  Per-app
+        Memoized per (cluster, budget) — this is what the premask folds
+        into the solver's avoid mask every cooperation pass.  Per-app
         budget arrays (maintenance placement mode) skip the memo: they are
         derived per control round, and one cooperation pass reads the
         matrix once.
@@ -170,8 +176,36 @@ class RegionScheduler:
             cache[key] = self._worst_ms[self.cluster.app_region] <= self.budget
         return cache[key]
 
+    # -- SchedulerLevel protocol ---------------------------------------------
+    def premask(self, problem: Problem) -> np.ndarray:
+        """Region infeasibility as an avoid contribution (home column is
+        re-opened by the bus)."""
+        return ~self.feasibility_matrix()
 
-class HostScheduler:
+    def vet(self, proposal: Proposal) -> np.ndarray:
+        c = proposal.candidates
+        if c.size == 0:
+            return np.asarray(c, np.int64)
+        ok = self.check_many(c, proposal.x[c])
+        return np.asarray(c[~ok], np.int64)
+
+    def relax(self, plan, cluster) -> None:
+        """Maintenance placement mode: residents of a declared deep drain
+        may evacuate under a relaxed latency budget (bounded degradation
+        beats riding the drain into over-capacity); everyone else keeps
+        the strict budget."""
+        relax_tiers = getattr(plan, "relax_home_tiers", None)
+        if relax_tiers is None or not np.asarray(relax_tiers).any():
+            return
+        base = self.budget if self.budget is not None else REGION_LATENCY_BUDGET_MS
+        factor = float(getattr(plan, "relax_latency_factor", 1.5))
+        x0 = np.asarray(self.cluster.problem.assignment0)
+        self._budget_per_app = np.where(
+            np.asarray(relax_tiers)[x0], base * factor, base).astype(np.float32)
+        self.budget = None
+
+
+class HostScheduler(SchedulerLevel):
     """Host allocation: first-fit-decreasing bin-packing into tier hosts.
 
     Accepts a placement iff every app mapped to the tier still fits after
@@ -186,8 +220,11 @@ class HostScheduler:
     per app bucket.  ``check_tiers`` packs every tier of a proposal in a
     single vmapped dispatch; ``check_tier`` is the legacy one-tier entry
     point with identical decisions.  The instance accumulates pack dispatch
-    / retrace / wall-clock counters for ``CooperationResult.timings``.
+    / retrace / wall-clock counters, surfaced through the level
+    ``counters()`` hook into ``CoopTimings.levels["host"]``.
     """
+
+    name = "host"
 
     def __init__(self, cluster: ClusterState):
         self.cluster = cluster
@@ -204,9 +241,7 @@ class HostScheduler:
                 jnp.asarray(cluster.host_capacity),            # f32[R]
                 jnp.asarray(cluster.hosts_per_tier.astype(np.int32)))
         self._demand, self._cap_dev, self._hosts_dev = cache["host_pack_consts"]
-        self.pack_s = 0.0
-        self.pack_dispatches = 0
-        self.pack_retraces = 0
+        self._stats = DispatchStats()
         # Residents (apps already home) of a *force-packed* tier that failed
         # to pack.  They have nowhere better to go — home is the fallback of
         # every revert path — but they must be observable instead of the
@@ -220,14 +255,22 @@ class HostScheduler:
         """Distinct residents that failed a force re-pack."""
         return len(self._resident_overflow_ids)
 
+    # Legacy counter aliases (``kernels.pack.DispatchStats`` owns the
+    # bookkeeping; these stay readable for existing callers/tests).
+    @property
+    def pack_s(self) -> float:
+        return self._stats.seconds
+
+    @property
+    def pack_dispatches(self) -> int:
+        return self._stats.dispatches
+
+    @property
+    def pack_retraces(self) -> int:
+        return self._stats.retraces
+
     def _dispatch(self, fn, *args, **kw) -> np.ndarray:
-        t = time.perf_counter()
-        before = pack_trace_count()
-        out = np.asarray(fn(*args, **kw))          # asarray syncs the device
-        self.pack_retraces += pack_trace_count() - before
-        self.pack_dispatches += 1
-        self.pack_s += time.perf_counter() - t
-        return out
+        return self._stats.run(fn, *args, **kw)
 
     def check_tier(self, tier: int, apps: np.ndarray) -> list[int]:
         """Returns the app ids that could NOT be packed into this tier."""
@@ -317,6 +360,31 @@ class HostScheduler:
                 rej[(x[rej] == x0[rej]) & in_force[x[rej]]].tolist())
         return rej[x[rej] != x0[rej]]                        # newcomers bounce
 
+    # -- SchedulerLevel protocol ---------------------------------------------
+    def vet(self, proposal: Proposal) -> np.ndarray:
+        force = None
+        if proposal.final:
+            # Revert fixpoint: home tiers of the apps other levels (or this
+            # one, last sweep) sent home must be re-packed even with no
+            # newcomers left — FFD is not monotone under item removal.
+            force = (np.unique(proposal.x0[proposal.returners])
+                     if proposal.returners.size else np.empty(0, np.int64))
+        return self.check_tiers(proposal.x, proposal.x0, proposal.candidates,
+                                force_tiers=force)
+
+    def counters(self) -> dict:
+        return {"pack_s": self.pack_s,
+                "pack_dispatches": self.pack_dispatches,
+                "pack_retraces": self.pack_retraces,
+                "resident_overflows": self.resident_overflows}
+
+    def device_time_s(self) -> float:
+        return self.pack_s
+
+
+register_level("region", RegionScheduler)
+register_level("host", HostScheduler)
+
 
 @dataclasses.dataclass
 class CooperationResult:
@@ -326,14 +394,12 @@ class CooperationResult:
     num_rejections: int
     total_time_s: float
     accepted: bool
-    # Per-phase wall-clock split: solve_s (device solver), pack_s (device
-    # FFD dispatches), region_s / host_s (lower-level scheduler glue),
-    # feedback_s (avoid-mask scatter updates); plus counters: rounds,
-    # region_rejections / host_rejections, pack_dispatches / pack_retraces,
-    # and premask (whether region pre-masking was active).  host_side_frac
-    # is everything except the device phases (solve_s + pack_s) as a
-    # fraction of the total.
-    timings: dict = dataclasses.field(default_factory=dict)
+    # Typed per-phase observability (see core.levels.CoopTimings): scalar
+    # phases (solve_s / feedback_s / total_s), per-level sub-dicts under
+    # ``levels`` (glue wall-clock, rejections, pack counters), and the
+    # legacy flat keys ("region_s", "host_rejections", "pack_retraces", ...)
+    # still resolving through the mapping interface.
+    timings: CoopTimings = dataclasses.field(default_factory=CoopTimings)
 
 
 def region_overlap_avoid(cluster: ClusterState) -> np.ndarray:
@@ -388,68 +454,96 @@ def _pad_ids(ids: np.ndarray, sentinel: int, minimum: int = 32) -> np.ndarray:
     return out
 
 
-def _finish_timings(timings: dict, total_s: float) -> dict:
-    # Device phases are the solver and the compiled pack dispatches;
-    # everything else counts as host-side — the per-phase counters plus
-    # untimed glue (membership builds, np/jnp conversions), so the fraction
-    # cannot undercount host work.
-    timings["total_s"] = total_s
-    device_s = timings.get("solve_s", 0.0) + timings.get("pack_s", 0.0)
-    timings["host_side_frac"] = (
+def _finish_timings(timings: CoopTimings, total_s: float) -> CoopTimings:
+    # Device phases are the solver and the levels' compiled dispatches
+    # (``device_time_s``, already split out of each level's glue by
+    # ``_collect_level_counters``); everything else counts as host-side —
+    # the per-phase counters plus untimed glue, so the fraction cannot
+    # undercount host work.  ``bus_overhead_frac`` narrows further: the
+    # wall-clock that belongs to no phase at all (the generic bus's own
+    # routing), the number the PR-5 regression gate pins.
+    timings.total_s = total_s
+    device_s = timings.solve_s + sum(
+        float(sub.get("device_s", 0.0)) for sub in timings.levels.values())
+    timings.host_side_frac = (
         max(0.0, total_s - device_s) / total_s if total_s > 0 else 0.0)
+    accounted = timings.solve_s + timings.feedback_s + sum(
+        float(sub.get("level_s", 0.0)) + float(sub.get("device_s", 0.0))
+        for sub in timings.levels.values())
+    timings.bus_overhead_frac = (
+        max(0.0, total_s - accounted) / total_s if total_s > 0 else 0.0)
     return timings
 
 
-def _collect_pack_counters(timings: dict, host: HostScheduler | None) -> None:
-    if host is None:                 # variant never packed anything
-        timings.update(pack_s=0.0, pack_dispatches=0, pack_retraces=0,
-                       resident_overflows=0)
-        return
-    timings["pack_s"] = host.pack_s
-    # check_tier(s) wall-clock minus the device dispatches = host-side glue.
-    timings["host_s"] = max(0.0, timings["host_s"] - host.pack_s)
-    timings["pack_dispatches"] = host.pack_dispatches
-    timings["pack_retraces"] = host.pack_retraces
-    timings["resident_overflows"] = host.resident_overflows
+def _collect_level_counters(timings: CoopTimings, levels) -> None:
+    """Merge each level's ``counters()`` into its timings sub-dict and
+    split its compiled-dispatch time out of the level's glue wall-clock."""
+    for lv in levels:
+        sub = timings.levels.setdefault(lv.name,
+                                        {"level_s": 0.0, "rejections": 0})
+        sub.update(lv.counters())
+        dev = float(lv.device_time_s())
+        if dev:
+            sub["device_s"] = dev
+            sub["level_s"] = max(0.0, sub["level_s"] - dev)
 
 
-def _revert_unvetted(x_np: np.ndarray, x0_np: np.ndarray,
-                     region: RegionScheduler, host: HostScheduler,
-                     timings: dict) -> np.ndarray:
-    """Drop region/host-unvetted moves (stay-home is safe — the original
-    placement was accepted by the lower levels) and re-pack to a fixpoint.
+def _vet_timed(level, proposal: Proposal, timings: CoopTimings) -> np.ndarray:
+    t = time.perf_counter()
+    rej = np.asarray(level.vet(proposal), np.int64)
+    timings.add_level_time(level.name, time.perf_counter() - t)
+    return rej
 
-    Home tiers whose only change is their *returners* are force re-packed
-    too: the seed trusted them to absorb returners unchecked, but FFD is
-    not monotone under item removal, so even a membership that shrank back
-    toward the original can overflow.  A forced tier's residents that still
-    fail have no better placement than home; they are surfaced through
-    ``HostScheduler.resident_overflows`` instead of being silently trusted.
-    Each re-pack iteration reverts at least one mover, so it terminates.
+
+def _revert_fixpoint(levels, x_np: np.ndarray, x0_np: np.ndarray,
+                     timings: CoopTimings,
+                     seed_returners: np.ndarray | None = None) -> np.ndarray:
+    """Drop unvetted moves (stay-home is safe — the original placement was
+    accepted by every level) and re-vet the stack to a fixpoint.
+
+    Every revert sends apps home, and a level's accept can depend on
+    whole-group state (host packing is not monotone under item removal), so
+    each level is re-vetted with the ``returners`` sent home since it last
+    answered — home tiers whose only change is their returners get force
+    re-packed through ``Proposal.final``.  Each sweep reverts at least one
+    mover or terminates, so the fixpoint is finite.  ``seed_returners``
+    pre-loads the returner set (budget trimming reverts moves before the
+    fixpoint starts).
     """
     x_np = x_np.copy()
-    t = time.perf_counter()
-    moved = np.where(x_np != x0_np)[0]
-    bad = moved[~region.check_many(moved, x_np[moved])]
-    x_np[bad] = x0_np[bad]
-    timings["region_s"] += time.perf_counter() - t
-    t = time.perf_counter()
-    force = np.unique(x0_np[bad]) if bad.size else np.empty(0, np.int64)
-    movers = np.where(x_np != x0_np)[0]
-    while movers.size or force.size:
-        rej = host.check_tiers(x_np, x0_np, movers, force_tiers=force)
-        if rej.size == 0:
-            break
-        x_np[rej] = x0_np[rej]
-        force = np.unique(x0_np[rej])
-        movers = np.where(x_np != x0_np)[0]
-    timings["host_s"] += time.perf_counter() - t
-    return x_np
+    empty = np.empty(0, np.int64)
+    pending = {lv.name: (seed_returners if seed_returners is not None
+                         else empty) for lv in levels}
+    while True:
+        rejected_any = False
+        for lv in levels:
+            movers = np.where(x_np != x0_np)[0]
+            returners = pending[lv.name]
+            if movers.size == 0 and returners.size == 0:
+                continue
+            rej = _vet_timed(lv, Proposal(x_np, x0_np, movers,
+                                          returners=returners, final=True),
+                             timings)
+            pending[lv.name] = empty
+            # Defensive protocol clamp: only movers can be rejected (the
+            # incumbent placement is every revert's fallback).  A plugin
+            # level that bounced a returner would otherwise no-op the
+            # revert while keeping rejected_any set — an infinite fixpoint.
+            rej = rej[x_np[rej] != x0_np[rej]]
+            if rej.size:
+                x_np[rej] = x0_np[rej]
+                for other in levels:
+                    prev = pending[other.name]
+                    pending[other.name] = (rej if prev.size == 0
+                                           else np.concatenate([prev, rej]))
+                rejected_any = True
+        if not rejected_any:
+            return x_np
 
 
 def enforce_cost_budget(cluster: ClusterState, res: SolveResult,
-                         x0_np: np.ndarray, move_cost, cost_budget: float,
-                         host: HostScheduler | None, timings: dict) -> SolveResult:
+                        x0_np: np.ndarray, move_cost, cost_budget: float,
+                        levels, timings) -> SolveResult:
     """Price the final mapping and trim it to the round's movement budget.
 
     Movement is the §3.2.1 goal-8 downtime the paper prices; Madsen et al.
@@ -463,16 +557,16 @@ def enforce_cost_budget(cluster: ClusterState, res: SolveResult,
 
     Reverting sends apps home, and home tiers can overflow on returners
     (FFD is not monotone under item removal), so trimmed mappings re-run
-    the host-packing fixpoint with the affected home tiers force-packed —
-    the same contract as ``_revert_unvetted``.  Trimming never *adds* moves,
-    so the budget holds after the fixpoint too.
+    the stack's revert fixpoint with the reverted apps as seed returners —
+    the same contract as ``_revert_fixpoint``.  Trimming never *adds*
+    moves, so the budget holds after the fixpoint too.  ``levels`` may be
+    empty (hierarchy-unaware engines: no re-vet to run).
     """
     x_np = np.asarray(res.assignment)
     total = movement_cost_of(x_np, x0_np, move_cost)
     timings["movement_cost"] = total
     if total <= cost_budget + 1e-9:
         return res
-    t = time.perf_counter()
     x_np = x_np.copy()
     moved = np.where(x_np != x0_np)[0]
     per = (np.ones(moved.size, np.float32) if move_cost is None
@@ -493,17 +587,9 @@ def enforce_cost_budget(cluster: ClusterState, res: SolveResult,
     x_np[reverted] = x0_np[reverted]
     timings["budget_trimmed"] = (timings.get("budget_trimmed", 0)
                                  + int(reverted.size))
-    if host is not None and reverted.size:
-        force = np.unique(x0_np[reverted])
-        movers = np.where(x_np != x0_np)[0]
-        while movers.size or force.size:
-            rej = host.check_tiers(x_np, x0_np, movers, force_tiers=force)
-            if rej.size == 0:
-                break
-            x_np[rej] = x0_np[rej]
-            force = np.unique(x0_np[rej])
-            movers = np.where(x_np != x0_np)[0]
-    timings["host_s"] = timings.get("host_s", 0.0) + (time.perf_counter() - t)
+    if levels and reverted.size:
+        x_np = _revert_fixpoint(levels, x_np, x0_np, timings,
+                                seed_returners=reverted)
     x_final = jnp.asarray(x_np)
     timings["movement_cost"] = movement_cost_of(x_np, x0_np, move_cost)
     return dataclasses.replace(
@@ -513,8 +599,8 @@ def enforce_cost_budget(cluster: ClusterState, res: SolveResult,
 
 
 def _restart_phase(cluster: ClusterState, problem: Problem, res: SolveResult,
-                   timed_solve, region: RegionScheduler, host: HostScheduler,
-                   timings: dict, restart_rounds: int, deadline: float,
+                   timed_solve, levels, timings: CoopTimings,
+                   restart_rounds: int, deadline: float,
                    x0_np: np.ndarray) -> SolveResult:
     """Perturbation restarts after an accepted fixed point (ROADMAP knob).
 
@@ -523,9 +609,9 @@ def _restart_phase(cluster: ClusterState, problem: Problem, res: SolveResult,
     removes those rounds, so at small N it can land in a worse local
     optimum at a *better* wall-clock.  Each restart sends a random third of
     the current movers home, re-solves warm-started under the same standing
-    avoid mask, re-vets the proposal (region + host, exactly like the
-    exhausted-rounds path), and keeps the best vetted objective — so the
-    result can never get worse, only cost extra solves.
+    avoid mask, re-vets the proposal against the whole stack (exactly like
+    the exhausted-rounds path), and keeps the best vetted objective — so
+    the result can never get worse, only cost extra solves.
     """
     x_best = np.asarray(res.assignment).copy()
     obj_best = float(_objective(cluster.problem, jnp.asarray(x_best)))
@@ -543,14 +629,14 @@ def _restart_phase(cluster: ClusterState, problem: Problem, res: SolveResult,
         attempts += 1
         r = timed_solve(problem, init_assignment=jnp.asarray(
             x_pert.astype(np.int32)))
-        x_r = _revert_unvetted(np.asarray(r.assignment), x0_np, region, host,
+        x_r = _revert_fixpoint(levels, np.asarray(r.assignment), x0_np,
                                timings)
         obj_r = float(_objective(cluster.problem, jnp.asarray(x_r)))
         if obj_r < obj_best - 1e-9:
             obj_best, x_best = obj_r, x_r
             improved += 1
-    timings["restarts"] = attempts
-    timings["restart_improved"] = improved
+    timings.restarts = attempts
+    timings.restart_improved = improved
     if improved:
         res = dataclasses.replace(
             res, assignment=jnp.asarray(x_best), objective=obj_best,
@@ -558,142 +644,182 @@ def _restart_phase(cluster: ClusterState, problem: Problem, res: SolveResult,
     return res
 
 
+def _resolve_config(variant, config, kwargs) -> CoopConfig:
+    """Fold the deprecated ``cooperate`` kwargs into a CoopConfig."""
+    cfg = config if config is not None else CoopConfig()
+    if variant is not None:
+        cfg = dataclasses.replace(cfg, variant=variant)
+    renames = {"max_rounds": "max_rounds", "timeout_s": "timeout_s",
+               "premask_region": "premask", "restart_rounds": "restart_rounds",
+               "move_cost": "move_cost", "cost_budget": "cost_budget"}
+    for kwarg, field in renames.items():
+        value = kwargs.get(kwarg)
+        if value is not None:
+            warn_deprecated_kwarg("cooperate", kwarg, field)
+            cfg = dataclasses.replace(cfg, **{field: value})
+    return cfg
+
+
 def cooperate(
     cluster: ClusterState,
     solve_fn: Callable[[Problem], SolveResult],
-    variant: Variant = "manual_cnst",
+    variant: Optional[Variant] = None,
     *,
-    max_rounds: int = 8,
-    timeout_s: float = float("inf"),
-    region_budget_ms=REGION_LATENCY_BUDGET_MS,
-    premask_region: bool = True,
-    restart_rounds: int = 0,
-    move_cost: np.ndarray | None = None,
-    cost_budget: float = float("inf"),
+    config: Optional[CoopConfig] = None,
+    hierarchy: Optional[Hierarchy] = None,
+    max_rounds: Optional[int] = None,
+    timeout_s: Optional[float] = None,
+    region_budget_ms=None,
+    premask_region: Optional[bool] = None,
+    restart_rounds: Optional[int] = None,
+    move_cost: Optional[np.ndarray] = None,
+    cost_budget: Optional[float] = None,
 ) -> CooperationResult:
-    """Run one SPTLB balancing pass under the chosen integration variant.
+    """Run one SPTLB balancing pass: the generic cooperation bus.
 
-    ``premask_region`` (manual_cnst only, default on) folds the region
-    scheduler's feasibility matrix into the avoid mask before the first
-    solve: the solver stops proposing region-infeasible moves, the region
-    level stops rejecting, and the feedback loop converges in fewer rounds.
-    The final mapping is vetted by exactly the same region/host checks
-    either way, so the knob trades search-space pruning for rounds, never
-    feasibility.
+    ``config`` (a ``core.levels.CoopConfig``) carries every knob; the bare
+    keyword arguments are the historical API kept as deprecated shims (they
+    warn and override the config).  ``hierarchy`` overrides the scheduler
+    stack (default: ``config.levels`` names, else region+host).  The
+    ``manual_cnst`` variant drives the stack through premask -> solve ->
+    vet -> feedback rounds exactly as the module docstring describes;
+    ``no_cnst`` / ``w_cnst`` never consult the stack.
 
-    ``restart_rounds`` (manual_cnst only, default 0) adds perturbation
-    restarts after the pass reaches an accepted fixed point — the
-    diversification the unmasked path got for free from its rejection
-    rounds.  Every restart is fully re-vetted and only adopted if its
-    objective improves, so the knob spends solves, never quality.
-
-    ``move_cost``/``cost_budget`` price movement (Madsen-style
-    reconfiguration costing — ``core.planner.move_costs``): every returned
-    mapping's total cost lands in ``timings["movement_cost"]`` (per-round
-    proposal costs in ``timings["round_costs"]``), and a finite budget
-    trims the final mapping to fit (``enforce_cost_budget``), preferring
-    moves that rescue SLO-stranded incumbents.
-
-    ``region_budget_ms`` may be an f32[N] per-app array (maintenance
-    placement mode — ``core.planner.PlanOutlook.relax_home_tiers``): the
-    premask, the per-round vet, and the revert fixpoint then all share the
-    same relaxed region contract.
+    ``config.premask`` folds every level's feasibility into the avoid mask
+    before the first solve — the solver stops proposing level-infeasible
+    moves and the feedback loop converges in fewer rounds; the final
+    mapping is vetted by exactly the same level checks either way, so the
+    knob trades search-space pruning for rounds, never feasibility.
+    ``config.restart_rounds`` adds fully re-vetted perturbation restarts
+    after an accepted fixed point.  ``config.move_cost`` /
+    ``config.cost_budget`` price movement and trim the final mapping to
+    budget (``enforce_cost_budget``).  ``config.plan`` reaches each level's
+    ``relax`` hook (maintenance placement mode).
     """
+    cfg = _resolve_config(variant, config, dict(
+        max_rounds=max_rounds, timeout_s=timeout_s,
+        premask_region=premask_region, restart_rounds=restart_rounds,
+        move_cost=move_cost, cost_budget=cost_budget))
+    if region_budget_ms is not None and hierarchy is None:
+        warn_deprecated_kwarg("cooperate", "region_budget_ms",
+                              "levels (bind a RegionScheduler with the "
+                              "budget via a custom Hierarchy)")
+        hierarchy = Hierarchy((
+            lambda c: RegionScheduler(c, latency_budget_ms=region_budget_ms),
+            HostScheduler))
+    wallclock = cfg.timeout_s if cfg.timeout_s is not None else float("inf")
+
     t0 = time.perf_counter()
     problem = cluster.problem
-    timings = {"solve_s": 0.0, "region_s": 0.0, "host_s": 0.0,
-               "feedback_s": 0.0, "rounds": 1,
-               "region_rejections": 0, "host_rejections": 0,
-               "restarts": 0, "restart_improved": 0,
-               "movement_cost": 0.0, "budget_trimmed": 0, "round_costs": [],
-               "premask": bool(premask_region) and variant == "manual_cnst"}
+    use_variant = cfg.variant
+
+    if use_variant in ("no_cnst", "w_cnst"):
+        # Neither variant consults the stack, so don't pay its precomputes
+        # (the host scheduler's demand transfer, the region matrices) just
+        # to return early.  The legacy flat keys (region_s, host_rejections,
+        # pack counters) stay resolvable at their historical zeros.
+        timings = CoopTimings.for_levels(DEFAULT_LEVELS)
+
+        def timed_solve0(p, **kw):
+            t = time.perf_counter()
+            r = solve_fn(p, **kw)
+            timings.solve_s += time.perf_counter() - t
+            return r
+
+        if use_variant == "w_cnst":
+            problem = problem.with_avoid(jnp.asarray(region_overlap_avoid(cluster)))
+        res = timed_solve0(problem)
+        res = enforce_cost_budget(cluster, res, np.asarray(problem.assignment0),
+                                  cfg.move_cost, cfg.cost_budget, (), timings)
+        total = time.perf_counter() - t0
+        res.extra["coop_timings"] = _finish_timings(timings, total)
+        return CooperationResult(res, use_variant, 1, 0, total, True,
+                                 timings=timings)
+
+    assert use_variant == "manual_cnst", use_variant
+    levels = cfg.hierarchy(hierarchy).bind(cluster)
+    timings = CoopTimings.for_levels(
+        [lv.name for lv in levels],
+        premask=bool(cfg.premask), round_costs=[])
+    if cfg.plan is not None:
+        for lv in levels:
+            lv.relax(cfg.plan, cluster)
 
     def timed_solve(p, **kw):
         t = time.perf_counter()
         r = solve_fn(p, **kw)
-        timings["solve_s"] += time.perf_counter() - t
+        timings.solve_s += time.perf_counter() - t
         return r
 
-    if variant in ("no_cnst", "w_cnst"):
-        # Neither variant consults the lower-level schedulers, so don't pay
-        # their precomputes (the host scheduler's demand transfer, the
-        # region matrices) just to return early.
-        if variant == "w_cnst":
-            problem = problem.with_avoid(jnp.asarray(region_overlap_avoid(cluster)))
-        res = timed_solve(problem)
-        res = enforce_cost_budget(cluster, res, np.asarray(problem.assignment0),
-                                   move_cost, cost_budget, None, timings)
-        total = time.perf_counter() - t0
-        _collect_pack_counters(timings, None)
-        res.extra["coop_timings"] = _finish_timings(timings, total)
-        return CooperationResult(res, variant, 1, 0, total, True,
-                                 timings=timings)
-
-    assert variant == "manual_cnst", variant
-    region = RegionScheduler(cluster, latency_budget_ms=region_budget_ms)
-    host = HostScheduler(cluster)
     x0_np = np.asarray(problem.assignment0)
     x0_dev = problem.assignment0
-    if timings["premask"]:
-        # Tentpole (1): commit region feasibility into the solver's mask so
-        # the region-rejection class never reaches the feedback loop.  The
-        # home column stays open — the current placement was already
-        # accepted by the lower levels, so "stay" must remain legal even
-        # for apps whose data source has since drifted out of budget.
-        t = time.perf_counter()
-        pre = ~region.feasibility_matrix()
-        pre[np.arange(problem.num_apps), x0_np] = False
-        problem = problem.with_avoid(jnp.asarray(pre))
-        timings["region_s"] += time.perf_counter() - t
+    home_open = np.arange(problem.num_apps)
+    if cfg.premask:
+        # Commit every level's feasibility into the solver's mask so those
+        # rejection classes never reach the feedback loop.  The home column
+        # stays open — the current placement was already accepted by the
+        # stack, so "stay" must remain legal even for apps whose data
+        # source has since drifted out of budget.
+        for lv in levels:
+            t = time.perf_counter()
+            pre = lv.premask(problem)
+            if pre is not None:
+                pre = np.asarray(pre, bool).copy()
+                pre[home_open, x0_np] = False
+                problem = problem.with_avoid(jnp.asarray(pre))
+            timings.add_level_time(lv.name, time.perf_counter() - t)
 
-    # Tentpole (3): the avoid/ack mask lives on device for the whole pass
-    # and is updated by scatter ops; ``base_avoid`` (caller avoids + the
-    # premask) is OR-ed back each round so accumulated feedback can never
-    # clear a standing constraint.
+    # The avoid/ack mask lives on device for the whole pass and is updated
+    # by scatter ops; ``base_avoid`` (caller avoids + the premasks + any
+    # level feedback escalations) is OR-ed back each round so accumulated
+    # feedback can never clear a standing constraint.
     base_avoid = problem.avoid
     avoid = base_avoid
     total_rejections = 0
     x_prev = None                    # continuation fixed-point detector
     res = timed_solve(problem)
     rounds = 1
-    while rounds <= max_rounds and (time.perf_counter() - t0) < timeout_s:
+    while rounds <= cfg.max_rounds and (time.perf_counter() - t0) < wallclock:
         x_np = np.asarray(res.assignment)       # one device->host pull/round
         moved = np.where(x_np != x0_np)[0]
-        timings["round_costs"].append(
-            round(movement_cost_of(x_np, x0_np, move_cost), 4))
+        timings.round_costs.append(
+            round(movement_cost_of(x_np, x0_np, cfg.move_cost), 4))
 
-        # Fig. 2 order: region scheduler first (one vectorized gather; with
-        # the premask on this is a no-op vet that always passes)...
-        t = time.perf_counter()
-        region_ok = region.check_many(moved, x_np[moved])
-        rej_region = moved[~region_ok]
-        surviving = moved[region_ok]
-        timings["region_s"] += time.perf_counter() - t
+        # Fig. 2 order: each level vets in stack order; a level only sees
+        # the candidates that survived the levels above it (with premasks
+        # on, the upper vets are no-op passes and packing decides).
+        candidates = moved
+        round_rej: dict[str, np.ndarray] = {}
+        for lv in levels:
+            rej = _vet_timed(lv, Proposal(x_np, x0_np, candidates), timings)
+            if rej.size:
+                # Defensive protocol clamp: a level may only reject its own
+                # candidates.  An id outside the candidate set (a plugin
+                # bug) would otherwise be scattered as avoid[n, x0[n]] —
+                # forbidding the app's fallback of staying home.
+                rej = rej[np.isin(rej, candidates)]
+            round_rej[lv.name] = rej
+            timings.add_rejections(lv.name, rej.size)
+            if rej.size:
+                candidates = candidates[~np.isin(candidates, rej)]
+        rej_n = (np.concatenate(list(round_rej.values()))
+                 if round_rej else np.empty(0, np.int64))
 
-        # ...then host allocation: every destination tier packed in one
-        # batched device dispatch (tentpole 2).
-        t = time.perf_counter()
-        rej_host = host.check_tiers(x_np, x0_np, surviving)
-        timings["host_s"] += time.perf_counter() - t
-
-        timings["region_rejections"] += int(rej_region.size)
-        timings["host_rejections"] += int(rej_host.size)
-        rej_n = np.concatenate([rej_region, rej_host])
         if rej_n.size == 0:
-            if (res.converged or rounds >= max_rounds
-                    or (time.perf_counter() - t0) >= timeout_s
+            if (res.converged or rounds >= cfg.max_rounds
+                    or (time.perf_counter() - t0) >= wallclock
                     or (x_prev is not None and np.array_equal(x_np, x_prev))):
-                if restart_rounds > 0:
+                if cfg.restart_rounds > 0:
                     res = _restart_phase(
-                        cluster, problem, res, timed_solve, region, host,
-                        timings, restart_rounds, t0 + timeout_s, x0_np)
-                res = enforce_cost_budget(cluster, res, x0_np, move_cost,
-                                           cost_budget, host, timings)
+                        cluster, problem, res, timed_solve, levels,
+                        timings, cfg.restart_rounds, t0 + wallclock, x0_np)
+                res = enforce_cost_budget(cluster, res, x0_np, cfg.move_cost,
+                                          cfg.cost_budget, levels, timings)
                 total = time.perf_counter() - t0
-                timings["rounds"] = rounds
-                _collect_pack_counters(timings, host)
+                timings.rounds = rounds
+                _collect_level_counters(timings, levels)
                 res.extra["coop_timings"] = _finish_timings(timings, total)
-                return CooperationResult(res, variant, rounds,
+                return CooperationResult(res, use_variant, rounds,
                                          total_rejections, total, True,
                                          timings=timings)
             # The proposal was accepted whole, but the solver ran out of
@@ -721,7 +847,7 @@ def cooperate(
         # [N, T] numpy rebuild, no re-upload, no per-shape recompiles.
         t = time.perf_counter()
         total_rejections += int(rej_n.size)
-        acked = surviving[~np.isin(surviving, rej_host)]     # ack'd placements
+        acked = candidates                       # ack'd placements
         N = x_np.shape[0]
         rej_pad = _pad_ids(rej_n, N)
         acked_pad = _pad_ids(acked, N)
@@ -732,17 +858,32 @@ def cooperate(
             jnp.asarray(acked_pad),
             jnp.asarray(np.take(x_np, acked_pad, mode="clip")),
             jnp.asarray(np.take(x0_np, acked_pad, mode="clip")))
+        # Level escalation hook: a level may answer a rejection round with
+        # extra *standing* avoid rows (beyond the per-(app, dest) scatter).
+        state = BusState(round=rounds, x=x_np, x0=x0_np, rejections=round_rej)
+        extra_masks = []
+        for lv in levels:
+            extra = lv.feedback(state)
+            if extra is not None:
+                extra = np.asarray(extra, bool).copy()
+                extra[home_open, x0_np] = False  # staying home stays legal
+                extra_masks.append(extra)
+        if extra_masks:
+            mask_dev = jnp.asarray(np.logical_or.reduce(extra_masks))
+            base_avoid = base_avoid | mask_dev
+            avoid = avoid | mask_dev
         problem = dataclasses.replace(problem, avoid=avoid)
-        timings["feedback_s"] += time.perf_counter() - t
+        timings.feedback_s += time.perf_counter() - t
 
         res = timed_solve(problem, init_assignment=x_accepted)
         rounds += 1
 
-    # Iteration/timeout limit: drop still-rejected moves and re-pack to a
-    # fixpoint — including pure-returner home tiers (see _revert_unvetted;
-    # the batched pack already re-vetted tiers whose returners arrived
-    # alongside surviving newcomers, this closes the no-movers-left gap).
-    x_np = _revert_unvetted(np.asarray(res.assignment), x0_np, region, host,
+    # Iteration/timeout limit: drop still-rejected moves and re-vet the
+    # stack to a fixpoint — including pure-returner home tiers (see
+    # _revert_fixpoint; the batched pack already re-vetted tiers whose
+    # returners arrived alongside surviving newcomers, this closes the
+    # no-movers-left gap).
+    x_np = _revert_fixpoint(levels, np.asarray(res.assignment), x0_np,
                             timings)
     x_final = jnp.asarray(x_np)
     # Reverting moves changes the mapping, so the solver's reported
@@ -752,11 +893,11 @@ def cooperate(
         res, assignment=x_final,
         num_moved=int(np.sum(x_np != x0_np)),
         objective=float(_objective(cluster.problem, x_final)))
-    res = enforce_cost_budget(cluster, res, x0_np, move_cost, cost_budget,
-                               host, timings)
+    res = enforce_cost_budget(cluster, res, x0_np, cfg.move_cost,
+                              cfg.cost_budget, levels, timings)
     total = time.perf_counter() - t0
-    timings["rounds"] = rounds
-    _collect_pack_counters(timings, host)
+    timings.rounds = rounds
+    _collect_level_counters(timings, levels)
     res.extra["coop_timings"] = _finish_timings(timings, total)
-    return CooperationResult(res, variant, rounds, total_rejections,
+    return CooperationResult(res, use_variant, rounds, total_rejections,
                              total, False, timings=timings)

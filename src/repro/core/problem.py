@@ -148,7 +148,7 @@ class Problem:
         This is the §3.4 feedback channel: rejections from lower-level
         schedulers become avoid constraints "similar to Constraint 3".
         It also carries the region pre-mask (``hierarchy.cooperate`` with
-        ``premask_region=True`` folds the whole [N, T] region-feasibility
+        ``CoopConfig(premask=True)`` folds the whole [N, T] region-feasibility
         matrix in before the first solve, keeping the home column open) —
         the solver then never proposes a region-infeasible move.
         """

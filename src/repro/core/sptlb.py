@@ -31,9 +31,9 @@ import numpy as np
 
 from repro.core import constraints, metrics
 from repro.core.greedy import GreedyConfig, solve_greedy
-from repro.core.hierarchy import (REGION_LATENCY_BUDGET_MS, CooperationResult,
-                                  Variant, cooperate,
+from repro.core.hierarchy import (CooperationResult, Variant, cooperate,
                                   enforce_cost_budget)
+from repro.core.levels import CoopConfig, Hierarchy, warn_deprecated_kwarg
 from repro.core.planner import PlanOutlook, movement_cost_of
 from repro.core.problem import Problem, bucket_size, pad_problem
 from repro.core.solver_local import LocalSearchConfig, SolveResult, solve_local
@@ -140,89 +140,107 @@ class Sptlb:
     def __init__(self, cluster: ClusterState):
         self.cluster = cluster
 
+    _LEGACY_BALANCE_KWARGS = {
+        "variant": "variant", "max_feedback_rounds": "max_rounds",
+        "batch_moves": "batch_moves", "bucket_apps": "bucket_apps",
+        "premask_region": "premask", "restart_rounds": "restart_rounds",
+    }
+
     def balance(
         self,
         engine: Engine = "local",
         *,
         timeout_s: int = 30,
-        variant: Variant = "manual_cnst",
-        max_feedback_rounds: int = 8,
         seed: int = 0,
-        batch_moves: Optional[int] = None,
-        bucket_apps: bool = True,
-        premask_region: bool = True,
-        restart_rounds: int = 0,
+        config: Optional[CoopConfig] = None,
+        hierarchy: Optional[Hierarchy] = None,
         plan: Optional[PlanOutlook] = None,
         move_cost: Optional[np.ndarray] = None,
-        cost_budget: float = float("inf"),
+        cost_budget: Optional[float] = None,
+        variant: Optional[Variant] = None,
+        max_feedback_rounds: Optional[int] = None,
+        batch_moves: Optional[int] = None,
+        bucket_apps: Optional[bool] = None,
+        premask_region: Optional[bool] = None,
+        restart_rounds: Optional[int] = None,
     ) -> BalanceDecision:
-        """One balancing pass.  ``premask_region`` (default on) folds the
-        region scheduler's feasibility matrix into the solver's avoid mask
-        before the first manual_cnst solve, so feedback rounds are spent on
-        host packing only; ``restart_rounds`` adds vetted perturbation
-        restarts after an accepted fixed point (the diversification the
-        unmasked path got from its rejection rounds) — see
-        ``hierarchy.cooperate``.
+        """One balancing pass.
 
-        ``plan`` (a ``core.planner.PlanOutlook``) makes the pass proactive:
-        the *solver* balances against the planning problem (declared-horizon
-        capacity targets, will-drain tiers premasked), while the decision's
-        projected metrics, constraint validation, and d2b are evaluated
-        against the real collected problem — anticipation changes what the
-        solver aims for, never what the decision is judged on.  The host
-        scheduler packs against real host counts either way, so proposals
-        stay physically placeable.  ``move_cost``/``cost_budget`` price the
-        mapping and cap its reconfiguration cost (``hierarchy.cooperate``).
+        ``config`` (a ``core.levels.CoopConfig``) carries the cooperation
+        knobs — variant, round cap, premask, restarts, engine batching, the
+        scheduler-level stack (``config.levels`` names or an explicit
+        ``hierarchy``), and the movement pricing; ``plan`` / ``move_cost``
+        / ``cost_budget`` stay accepted per call because the controller
+        derives them every tick.  The historical keyword knobs (variant,
+        max_feedback_rounds, batch_moves, bucket_apps, premask_region,
+        restart_rounds) remain as deprecated shims for one release: they
+        warn and override the config.
+
+        ``config.plan`` (a ``core.planner.PlanOutlook``) makes the pass
+        proactive: the *solver* balances against the planning problem
+        (declared-horizon capacity targets, will-drain tiers premasked),
+        while the decision's projected metrics, constraint validation, and
+        d2b are evaluated against the real collected problem —
+        anticipation changes what the solver aims for, never what the
+        decision is judged on.  The host scheduler packs against real host
+        counts either way, so proposals stay physically placeable; each
+        level's ``relax`` hook sees the plan (maintenance placement mode).
         """
-        solve_fn = engine_fn(engine, timeout_s, seed,
-                             batch_moves=batch_moves, bucket_apps=bucket_apps)
-        solve_cluster = self.cluster
-        region_budget = REGION_LATENCY_BUDGET_MS
-        if plan is not None and plan.active:
-            # dataclasses.replace starts a fresh precompute cache, which is
-            # correct: the planning problem's avoid/slo tables differ from
-            # the real cluster's.
-            solve_cluster = dataclasses.replace(
-                self.cluster, problem=plan.apply(self.cluster.problem))
-            if plan.relax_home_tiers.any():
-                # Maintenance placement mode: residents of a declared deep
-                # drain may evacuate under a relaxed region latency budget
-                # (bounded degradation beats riding the drain into
-                # over-capacity); everyone else keeps the strict budget.
-                x0 = np.asarray(self.cluster.problem.assignment0)
-                region_budget = np.where(
-                    plan.relax_home_tiers[x0],
-                    REGION_LATENCY_BUDGET_MS * plan.relax_latency_factor,
-                    REGION_LATENCY_BUDGET_MS).astype(np.float32)
-        t0 = time.perf_counter()
-        greedy_timings = None
-        if engine.startswith("greedy-"):
-            # The baseline greedy scheduler is hierarchy-unaware by design —
-            # but the movement budget binds every engine, so its mapping is
-            # priced and trimmed too (no host re-pack: greedy never had the
-            # hierarchy's packing contract).
-            res = solve_fn(solve_cluster.problem)
-            greedy_timings = {}
-            res = enforce_cost_budget(self.cluster, res,
-                                      np.asarray(self.cluster.problem.assignment0),
-                                      move_cost, cost_budget, None,
-                                      greedy_timings)
-            coop = None
-        else:
+        cfg = config if config is not None else CoopConfig()
+        legacy = dict(variant=variant, max_feedback_rounds=max_feedback_rounds,
+                      batch_moves=batch_moves, bucket_apps=bucket_apps,
+                      premask_region=premask_region,
+                      restart_rounds=restart_rounds)
+        for kwarg, field in self._LEGACY_BALANCE_KWARGS.items():
+            if legacy[kwarg] is not None:
+                warn_deprecated_kwarg("Sptlb.balance", kwarg, field)
+                cfg = dataclasses.replace(cfg, **{field: legacy[kwarg]})
+        # Per-call dynamic inputs (documented, not deprecated): the
+        # controller re-derives them every tick.
+        if plan is not None:
+            cfg = dataclasses.replace(cfg, plan=plan)
+        if move_cost is not None:
+            cfg = dataclasses.replace(cfg, move_cost=move_cost)
+        if cost_budget is not None:
+            cfg = dataclasses.replace(cfg, cost_budget=cost_budget)
+        if cfg.timeout_s is None:
             # The engine's iteration budget is the deterministic stand-in
             # for ``timeout_s`` *within* a solve; across rounds the paper's
             # "until SPTLB times out" is wall-clock, and the restart phase
             # bounds itself against the same deadline.  3x leaves the
             # feedback loop headroom over a single solve's nominal budget
             # while still cutting off pathological round/restart spirals.
-            coop = cooperate(solve_cluster, solve_fn, variant,
-                             max_rounds=max_feedback_rounds,
-                             timeout_s=3.0 * timeout_s,
-                             region_budget_ms=region_budget,
-                             premask_region=premask_region,
-                             restart_rounds=restart_rounds,
-                             move_cost=move_cost,
-                             cost_budget=cost_budget)
+            cfg = dataclasses.replace(cfg, timeout_s=3.0 * timeout_s)
+
+        solve_fn = engine_fn(engine, timeout_s, seed,
+                             batch_moves=cfg.batch_moves,
+                             bucket_apps=cfg.bucket_apps)
+        solve_cluster = self.cluster
+        plan = cfg.plan
+        if plan is not None and plan.active:
+            # dataclasses.replace starts a fresh precompute cache, which is
+            # correct: the planning problem's avoid/slo tables differ from
+            # the real cluster's.  The level relax hooks (region latency,
+            # shard co-location) fire inside ``cooperate`` via cfg.plan.
+            solve_cluster = dataclasses.replace(
+                self.cluster, problem=plan.apply(self.cluster.problem))
+        t0 = time.perf_counter()
+        greedy_timings = None
+        if engine.startswith("greedy-"):
+            # The baseline greedy scheduler is hierarchy-unaware by design —
+            # but the movement budget binds every engine, so its mapping is
+            # priced and trimmed too (no level re-vet: greedy never had the
+            # stack's packing contract).
+            res = solve_fn(solve_cluster.problem)
+            greedy_timings = {}
+            res = enforce_cost_budget(self.cluster, res,
+                                      np.asarray(self.cluster.problem.assignment0),
+                                      cfg.move_cost, cfg.cost_budget, (),
+                                      greedy_timings)
+            coop = None
+        else:
+            coop = cooperate(solve_cluster, solve_fn, config=cfg,
+                             hierarchy=hierarchy)
             res = coop.result
         t_solve = time.perf_counter()
 
@@ -238,7 +256,7 @@ class Sptlb:
             trimmed = int(greedy_timings.get("budget_trimmed", 0))
         else:
             movement = movement_cost_of(res.assignment, problem.assignment0,
-                                        move_cost)
+                                        cfg.move_cost)
             trimmed = 0
         if plan is not None and plan.active:
             res.extra["plan"] = {

@@ -51,6 +51,11 @@ class ClusterState:
     region_latency: np.ndarray    # f32[G, G] inter-region latency (ms)
     hosts_per_tier: np.ndarray    # i32[T]
     host_capacity: np.ndarray     # f32[R] per-host capacity
+    # Optional per-app data-shard co-location: f32[N, T] share of the app's
+    # shard mass hosted in each tier's regions (consumed by the shard
+    # locality scheduler level and the SLO scorecard).  None derives the
+    # matrix from geometry via ``shard_affinity_of``.
+    shard_affinity: np.ndarray | None = None
     # Memoized hierarchy precomputes (region worst-latency matrix, overlap
     # avoid, ...) keyed by the deriving function — see core/hierarchy.py.
     # ``init=False`` so every ``dataclasses.replace`` (capacity events,
@@ -76,6 +81,38 @@ class ResourceMonitor:
         bursts = self.rng.lognormal(mean=0.0, sigma=0.35, size=(num_samples, N, R))
         series = self.base[None] * bursts
         return np.percentile(series, 99, axis=0).astype(np.float32)
+
+
+# Shard-distribution decay: an app's shard mass concentrates on its data
+# region and falls off exponentially with ring distance (per hop).
+SHARD_DECAY_HOPS = 1.0
+
+
+def shard_affinity_of(cluster: ClusterState) -> np.ndarray:
+    """f32[N, T] data-shard affinity: the share of each app's shard mass
+    co-located with each tier's regions.
+
+    A stream job's state shards live near its data source, so the per-app
+    shard distribution over regions decays exponentially with ring distance
+    from ``app_region``; a tier's affinity is the shard mass its regions
+    hold.  ``cluster.shard_affinity`` (when telemetry collected a real
+    matrix) takes precedence; the derived matrix depends only on geometry
+    and is memoized on ``ClusterState._cache`` (any ``dataclasses.replace``
+    of the cluster rebuilds it — the standing invalidation contract).
+    """
+    if cluster.shard_affinity is not None:
+        return np.asarray(cluster.shard_affinity, np.float32)
+    cache = cluster._cache
+    if "shard_affinity" not in cache:
+        G = cluster.region_latency.shape[0]
+        ring = np.abs(np.arange(G)[:, None] - np.arange(G)[None, :])
+        ring = np.minimum(ring, G - ring)
+        mass = np.exp(-ring / SHARD_DECAY_HOPS)             # [G, G]
+        mass = mass / mass.sum(axis=1, keepdims=True)
+        shard_frac = mass[cluster.app_region]               # [N, G]
+        affinity = shard_frac @ cluster.tier_regions.astype(np.float32).T
+        cache["shard_affinity"] = affinity.astype(np.float32)
+    return cache["shard_affinity"]
 
 
 def sample_app_population(

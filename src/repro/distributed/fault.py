@@ -29,7 +29,7 @@ from typing import Callable, Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ClusterState, Sptlb
+from repro.core import ClusterState, CoopConfig, Sptlb
 from repro.core.solver_local import SolveResult
 
 
@@ -94,7 +94,8 @@ def rebalance_after(cluster: ClusterState, event: CapacityEvent,
     """The paper's loop, triggered by infrastructure: capacity change ->
     SPTLB re-solve (movement-bounded) -> new app->tier mapping."""
     degraded = apply_event(cluster, event)
-    decision = Sptlb(degraded).balance(engine, variant=variant)
+    decision = Sptlb(degraded).balance(
+        engine, config=CoopConfig(variant=variant))
     new_problem = degraded.problem.with_assignment0(
         jnp.asarray(decision.assignment))
     rebalanced = dataclasses.replace(degraded, problem=new_problem)

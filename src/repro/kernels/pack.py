@@ -33,14 +33,20 @@ is batching tiers and caching executables, which XLA already gives us.
 
 Retrace counters (``pack_trace_count``) increment at *trace* time only, like
 ``solver_local.local_search_trace_count``: a delta of 0 across a call means
-the jit cache was hit.
+the jit cache was hit.  ``DispatchStats`` wraps a compiled call with the
+wall-clock / dispatch / retrace bookkeeping every caller of these kernels
+wants (the host scheduler level reports it through the cooperation bus's
+per-level ``counters()`` hook).
 """
 from __future__ import annotations
 
+import dataclasses
+import time
 from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 _TRACE_COUNTS = {"pack_ffd": 0, "pack_ffd_tiers": 0}
 
@@ -48,6 +54,31 @@ _TRACE_COUNTS = {"pack_ffd": 0, "pack_ffd_tiers": 0}
 def pack_trace_count() -> int:
     """Total (re)traces of the packing executables across both entry points."""
     return _TRACE_COUNTS["pack_ffd"] + _TRACE_COUNTS["pack_ffd_tiers"]
+
+
+@dataclasses.dataclass
+class DispatchStats:
+    """Device-dispatch bookkeeping for the packing kernels.
+
+    ``run`` executes one compiled call synchronously (``np.asarray`` blocks
+    on the device) and accumulates wall-clock seconds, dispatch count, and
+    the retrace delta observed across the call — the counters the
+    cooperation bus folds into ``CoopTimings.levels["host"]`` and
+    ``host_side_frac`` classification (dispatch time counts device-side).
+    """
+
+    seconds: float = 0.0
+    dispatches: int = 0
+    retraces: int = 0
+
+    def run(self, fn, *args, **kw) -> np.ndarray:
+        t = time.perf_counter()
+        before = pack_trace_count()
+        out = np.asarray(fn(*args, **kw))      # asarray syncs the device
+        self.retraces += pack_trace_count() - before
+        self.dispatches += 1
+        self.seconds += time.perf_counter() - t
+        return out
 
 
 def _ffd_scan(demand_sorted: jax.Array, capacity: jax.Array,

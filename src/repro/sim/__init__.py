@@ -8,7 +8,7 @@ provide.  See ``sim.scenario`` for the registry and
 """
 from repro.sim.events import (CapacityScale, ChurnRate, FlashCrowd,
                               FleetState, RegionOutage, RegionRestore,
-                              TimedEvent)
+                              ShardSkew, TimedEvent)
 from repro.sim.harness import (SIM_CONTROLLER, build_fleet, place_arrivals,
                                run_pair, run_scenario)
 from repro.sim.scenario import (Scenario, get_scenario, list_scenarios,
@@ -21,7 +21,7 @@ from repro.sim.workload import (WorkloadConfig, WorkloadState,
 
 __all__ = [
     "CapacityScale", "ChurnRate", "FlashCrowd", "FleetState", "RegionOutage",
-    "RegionRestore", "TimedEvent",
+    "RegionRestore", "ShardSkew", "TimedEvent",
     "SIM_CONTROLLER", "build_fleet", "place_arrivals", "run_pair",
     "run_scenario",
     "Scenario", "get_scenario", "list_scenarios", "scenario",

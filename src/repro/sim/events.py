@@ -188,6 +188,24 @@ class FlashCrowd(TimedEvent):
 
 
 @dataclasses.dataclass(frozen=True)
+class ShardSkew(TimedEvent):
+    """A data-shard hotspot: demand spikes on the apps whose shard mass is
+    anchored in one region (their state lives there, so the load cannot be
+    shed by moving them far away — the shard locality level constrains the
+    controller's repair moves).  Decays back like a flash crowd; data
+    hotspots are surprises, so the event never declares an advisory."""
+
+    region: int = 0
+    magnitude: float = 5.0
+
+    def apply(self, fleet: FleetState) -> None:
+        live = np.asarray(fleet.wl.valid)
+        ids = np.where(live & (fleet.cluster.app_region == self.region))[0]
+        if ids.size:
+            fleet.wl = W.inject_flash_crowd(fleet.wl, ids, self.magnitude)
+
+
+@dataclasses.dataclass(frozen=True)
 class ChurnRate(TimedEvent):
     """Re-rate arrivals/retirements (traced workload state — no retrace)."""
 

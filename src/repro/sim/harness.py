@@ -28,6 +28,7 @@ import numpy as np
 
 from repro.core.controller import BalanceController, ControllerConfig
 from repro.core.hierarchy import RegionScheduler
+from repro.core.levels import DEFAULT_LEVELS
 from repro.core.solver_local import local_search_trace_count
 from repro.core.telemetry import FIG3_INITIAL_UTIL, generate_cluster
 from repro.sim.events import FleetState, events_at
@@ -158,6 +159,12 @@ def run_scenario(sc: Scenario, *, policy: str = "balanced",
         cfg = config or SIM_CONTROLLER
         if sc.move_budget is not None and cfg.movement_cost_budget is None:
             cfg = dataclasses.replace(cfg, movement_cost_budget=sc.move_budget)
+        if sc.levels is not None and cfg.coop.levels is None:
+            # The scenario names its scheduler stack (e.g. shard_skew runs
+            # region+host+shard); a caller-pinned stack wins.
+            cfg = dataclasses.replace(
+                cfg, coop=dataclasses.replace(cfg.coop,
+                                              levels=tuple(sc.levels)))
         ctl = BalanceController(fleet.cluster, cfg)
         if anticipation:
             ctl.set_advisories(fleet.declared_events)
@@ -214,6 +221,7 @@ def run_scenario(sc: Scenario, *, policy: str = "balanced",
     if ctl is not None:
         report.extra.update(
             audit=ctl.audit(),
+            levels=list(ctl.config.coop.levels or DEFAULT_LEVELS),
             # The budget the controller actually enforced — a caller-pinned
             # config budget overrides the scenario default, and recording
             # the scenario's number instead would misgrade within_budget.

@@ -37,7 +37,8 @@ import dataclasses
 from typing import Callable
 
 from repro.sim.events import (CapacityScale, ChurnRate, FlashCrowd,
-                              RegionOutage, RegionRestore, TimedEvent)
+                              RegionOutage, RegionRestore, ShardSkew,
+                              TimedEvent)
 from repro.sim.workload import WorkloadConfig
 
 
@@ -56,6 +57,10 @@ class Scenario:
     # units — the mean live app costs 1.0, so a budget of k buys ~k average
     # moves over the whole run.  None leaves movement priced but uncapped.
     move_budget: float | None = None
+    # Scheduler-level stack for the controller's cooperation bus (names in
+    # the ``core.levels`` registry, e.g. ("region", "host", "shard")).
+    # None keeps the default region+host stack.
+    levels: tuple[str, ...] | None = None
     # t=0 utilization as a multiple of the Fig. 3 calibration.  Dynamic
     # scenarios need headroom the one-shot experiment didn't: at the Fig. 3
     # levels the *perfectly balanced* cluster already sits at ~0.57 mean
@@ -170,6 +175,27 @@ def _region_outage(num_apps: int, ticks: int, seed: int) -> Scenario:
                                 diurnal_amp=0.15, burst_sigma=0.10),
         events=(RegionOutage(at=ticks // 4, region=0),
                 RegionRestore(at=(3 * ticks) // 4, region=0)))
+
+
+@scenario("shard_skew", "data-shard hotspot: demand piles onto apps whose "
+                        "shards sit in one region (runs the three-level "
+                        "region+host+shard stack)")
+def _shard_skew(num_apps: int, ticks: int, seed: int) -> Scenario:
+    # The repair moves for a shard hotspot are the constrained kind: the
+    # spiking apps' state lives in the hot region, so the shard locality
+    # level only accepts destinations that still hold their shard mass.
+    # Two staggered hotspots on different regions force the controller to
+    # rebalance *within* each shard neighbourhood rather than spraying the
+    # load fleet-wide.
+    return Scenario(
+        name="shard_skew", description="", ticks=ticks,
+        num_apps=num_apps, seed=seed,
+        levels=("region", "host", "shard"),
+        workload=WorkloadConfig(period=max(16, ticks // 2),
+                                diurnal_amp=0.20, burst_sigma=0.12,
+                                flash_decay=0.88),
+        events=(ShardSkew(at=ticks // 4, region=2, magnitude=5.0),
+                ShardSkew(at=(5 * ticks) // 8, region=4, magnitude=6.0)))
 
 
 @scenario("churn_heavy", "app arrivals/retirements over a standby pool "

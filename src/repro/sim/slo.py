@@ -29,8 +29,9 @@ import numpy as np
 
 from repro.core import metrics as M
 from repro.core.hierarchy import REGION_LATENCY_BUDGET_MS, RegionScheduler
+from repro.core.levels import SHARD_MIN_AFFINITY
 from repro.core.problem import Problem, utilization_fraction
-from repro.core.telemetry import ClusterState
+from repro.core.telemetry import ClusterState, shard_affinity_of
 
 # Slack on the over-ideal / over-capacity tests so float noise at exactly
 # the ideal line does not count as a violation tick.
@@ -63,6 +64,10 @@ class TickStats:
     # maintenance placement mode's bounded degradation, surfaced so the
     # relaxed-evacuation tradeoff is priced, never silent.
     region_breach_apps: int = 0
+    # Live apps placed on a tier holding less than the shard locality
+    # level's minimum of their data-shard mass (every window/join reads
+    # remote state) — what the shard_skew scenario's third level protects.
+    shard_misplaced_apps: int = 0
 
 
 def score_cluster(problem: Problem) -> dict:
@@ -104,13 +109,21 @@ class SloAccountant:
         p = cluster.problem
         worst = RegionScheduler(cluster)._worst_ms   # memoized on the cluster
         x = np.asarray(p.assignment0)
+        valid = np.asarray(p.valid)
         breach = (worst[cluster.app_region, x] > REGION_LATENCY_BUDGET_MS)
+        # Shard co-location is scored for every policy (the static baseline
+        # included): the affinity matrix is memoized on the cluster, and a
+        # placement below the bar is remote-state I/O whether or not the
+        # controller ran a shard level.
+        aff = shard_affinity_of(cluster)
+        misplaced = aff[np.arange(x.size), x] < SHARD_MIN_AFFINITY
         stat = TickStats(tick=len(self.ticks), moved=moved, applied=applied,
                          triggered=triggered, solve_s=solve_s,
                          movement_cost=movement_cost,
                          budget_limited=budget_limited,
-                         region_breach_apps=int(
-                             np.sum(breach & np.asarray(p.valid))), **s)
+                         region_breach_apps=int(np.sum(breach & valid)),
+                         shard_misplaced_apps=int(np.sum(misplaced & valid)),
+                         **s)
         self.ticks.append(stat)
         return stat
 
@@ -154,6 +167,8 @@ class SimReport:
             "budget_overruns": sum(1 for t in ts if t.budget_limited),
             "region_breach_app_ticks": sum(
                 t.region_breach_apps for t in ts),
+            "shard_misplaced_app_ticks": sum(
+                t.shard_misplaced_apps for t in ts),
             "rebalances": sum(1 for t in ts if t.applied),
             "triggers": sum(1 for t in ts if t.triggered),
             "mean_d2b": float(d2b.mean()),
@@ -220,4 +235,11 @@ def compare(baseline: SimReport, balanced: SimReport) -> dict:
         # baseline's own breaches (normally 0) — priced, never silent.
         "region_breach_app_ticks": {"baseline": b["region_breach_app_ticks"],
                                     "balanced": c["region_breach_app_ticks"]},
+        # Data-shard co-location held by the shard locality level: a
+        # controller without it may fix balance by scattering apps away
+        # from their state — this is the metric that would catch it.
+        "shard_misplaced_app_ticks": {
+            "baseline": b["shard_misplaced_app_ticks"],
+            "balanced": c["shard_misplaced_app_ticks"],
+            "ratio": ratio("shard_misplaced_app_ticks")},
     }

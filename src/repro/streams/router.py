@@ -10,7 +10,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.core import ClusterState, Sptlb, make_problem
+from repro.core import ClusterState, CoopConfig, Sptlb, make_problem
 from repro.core.telemetry import PAPER_SLO_TABLE
 from repro.streams.app import StreamApp
 
@@ -89,7 +89,8 @@ class StreamRouter:
         self.assignment = np.asarray(cluster.problem.assignment0).copy()
 
     def route(self, *, engine: str = "local", variant: str = "manual_cnst"):
-        decision = Sptlb(self.cluster).balance(engine, variant=variant)
+        decision = Sptlb(self.cluster).balance(
+            engine, config=CoopConfig(variant=variant))
         self.assignment = np.asarray(decision.assignment)
         return decision
 

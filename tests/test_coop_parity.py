@@ -1,0 +1,206 @@
+"""Parity suite for the PR-5 pluggable-hierarchy refactor.
+
+The protocol-based default region+host stack must reproduce the
+pre-refactor ``cooperate`` outputs bit-for-bit: ``tests/data/coop_golden.json``
+was captured at the pre-refactor commit (seed 3, local engine, timeout 4,
+8 feedback rounds) and pins the assignment hash, objective, rounds, and
+rejection counts at N in {64, 1000} for all three variants plus the
+premask-off / restart / cost-budget knob paths.
+
+Also covered here: the deprecated kwarg shims warn and produce identical
+results to the ``CoopConfig`` API, and a no-op custom level appended to
+the stack never changes results (property test over seeded clusters).
+"""
+
+import dataclasses
+import hashlib
+import json
+import os
+
+import numpy as np
+import pytest
+from _hypothesis_compat import hypothesis, st
+
+from repro.core import CoopConfig, Hierarchy, Sptlb, generate_cluster
+from repro.core.levels import SchedulerLevel
+from repro.core.planner import move_costs
+
+with open(os.path.join(os.path.dirname(__file__), "data", "coop_golden.json")) as f:
+    GOLDEN = json.load(f)
+
+# name -> (num_apps, CoopConfig kwargs); mirrors the capture script.
+CASES = {
+    "N64/no_cnst": (64, {"variant": "no_cnst"}),
+    "N64/w_cnst": (64, {"variant": "w_cnst"}),
+    "N64/manual_cnst": (64, {}),
+    "N1000/no_cnst": (1000, {"variant": "no_cnst"}),
+    "N1000/w_cnst": (1000, {"variant": "w_cnst"}),
+    "N1000/manual_cnst": (1000, {}),
+    "N64/manual_cnst/unmasked": (64, {"premask": False}),
+    "N64/manual_cnst/restarts": (64, {"restart_rounds": 2}),
+    "N64/manual_cnst/budget": (64, {"cost_budget": 3.0, "move_cost": "derive"}),
+    "N1000/manual_cnst/unmasked": (1000, {"premask": False}),
+}
+
+
+def _decide(cluster, config):
+    return Sptlb(cluster).balance("local", timeout_s=4, config=config)
+
+
+def _record(cluster, decision):
+    x = np.asarray(decision.assignment, np.int64)
+    rec = {
+        "assignment_sha": hashlib.sha256(x.tobytes()).hexdigest(),
+        "objective": float(decision.solve.objective),
+        "num_moved": int(np.sum(x != np.asarray(cluster.problem.assignment0))),
+        "d2b": float(decision.difference_to_balance),
+    }
+    if decision.cooperation is not None:
+        tm = decision.cooperation.timings
+        rec.update(
+            rounds=int(tm["rounds"]),
+            feedback_rounds=int(decision.cooperation.feedback_rounds),
+            num_rejections=int(decision.cooperation.num_rejections),
+            region_rejections=int(tm["region_rejections"]),
+            host_rejections=int(tm["host_rejections"]),
+            accepted=bool(decision.cooperation.accepted),
+            movement_cost=float(tm.get("movement_cost", 0.0)),
+            budget_trimmed=int(tm.get("budget_trimmed", 0)),
+        )
+    return rec
+
+
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_default_stack_matches_pre_refactor_golden(name):
+    num_apps, kw = CASES[name]
+    cluster = generate_cluster(num_apps=num_apps, seed=3)
+    kw = dict(kw)
+    if kw.get("move_cost") == "derive":
+        kw["move_cost"] = move_costs(cluster.problem)
+    got = _record(cluster, _decide(cluster, CoopConfig(max_rounds=8, **kw)))
+    want = GOLDEN[name]
+    assert got == want, {k: (want[k], got[k]) for k in want if got[k] != want[k]}
+
+
+def test_explicit_hierarchy_matches_default():
+    """Hierarchy.default() / from_names('region,host') are the same stack."""
+    cluster = generate_cluster(num_apps=200, seed=3)
+    base = _record(cluster, _decide(cluster, CoopConfig()))
+    for hierarchy in (Hierarchy.default(), Hierarchy.from_names("region,host")):
+        d = Sptlb(cluster).balance("local", timeout_s=4, config=CoopConfig(), hierarchy=hierarchy)
+        assert _record(cluster, d) == base
+
+
+def test_legacy_kwargs_warn_and_match_config_api():
+    """The deprecated shims (variant / max_feedback_rounds / premask_region /
+    restart_rounds / batch_moves / bucket_apps) warn but produce bit-identical
+    results to the CoopConfig path."""
+    cluster = generate_cluster(num_apps=150, seed=5)
+    via_config = _record(
+        cluster,
+        _decide(cluster, CoopConfig(max_rounds=6, premask=False, restart_rounds=1)),
+    )
+    with pytest.warns(DeprecationWarning):
+        legacy = Sptlb(cluster).balance(
+            "local",
+            timeout_s=4,
+            variant="manual_cnst",
+            max_feedback_rounds=6,
+            premask_region=False,
+            restart_rounds=1,
+        )
+    assert _record(cluster, legacy) == via_config
+
+
+def test_each_legacy_kwarg_warns():
+    cluster = generate_cluster(num_apps=64, seed=5)
+    for kw in (
+        {"variant": "no_cnst"},
+        {"max_feedback_rounds": 4},
+        {"premask_region": True},
+        {"restart_rounds": 0},
+        {"batch_moves": 8},
+        {"bucket_apps": True},
+    ):
+        with pytest.warns(DeprecationWarning):
+            Sptlb(cluster).balance("local", timeout_s=4, **kw)
+
+
+class NoopLevel(SchedulerLevel):
+    """A level that accepts everything and constrains nothing."""
+
+    name = "noop"
+
+    def __init__(self, cluster):
+        self.cluster = cluster
+
+
+@hypothesis.settings(max_examples=5, deadline=None)
+@hypothesis.given(
+    st.sampled_from([64, 150, 300]),
+    st.integers(0, 5),
+    st.sampled_from([True, False]),
+)
+def test_noop_custom_level_never_changes_results(num_apps, seed, premask):
+    """Appending a no-op level anywhere in the stack is invisible: same
+    assignment, objective, rounds, and rejection counts as the default."""
+    cluster = generate_cluster(num_apps=num_apps, seed=seed)
+    cfg = CoopConfig(premask=premask)
+    base = _record(cluster, _decide(cluster, cfg))
+    stacked = Hierarchy(
+        (
+            lambda c: NoopLevel(c),
+            *Hierarchy.default().factories,
+            lambda c: NoopLevel(c),
+        )
+    )
+    d = Sptlb(cluster).balance("local", timeout_s=4, config=cfg, hierarchy=stacked)
+    got = _record(cluster, d)
+    assert got == base
+    # the no-op level is visible in the observability, invisible in results
+    tm = d.cooperation.timings
+    assert tm["noop_rejections"] == 0
+    assert "noop" in tm.levels
+
+
+def test_controller_config_legacy_fields_fold_into_coop():
+    from repro.core.controller import ControllerConfig
+
+    cfg = ControllerConfig(variant="no_cnst", restart_rounds=3)
+    assert cfg.coop.variant == "no_cnst"
+    assert cfg.coop.restart_rounds == 3
+    explicit = ControllerConfig(coop=CoopConfig(levels=("region", "host", "shard")))
+    assert explicit.coop.levels == ("region", "host", "shard")
+    carried = dataclasses.replace(explicit, movement_cost_budget=5.0)
+    assert carried.coop.levels == ("region", "host", "shard")
+
+
+def test_plan_relax_path_unchanged_through_levels():
+    """Maintenance placement mode now flows through the level relax hooks;
+    the resulting per-app region budget must match the historical
+    ``np.where(relax_home_tiers[x0], base * factor, base)`` array."""
+    from repro.core.hierarchy import REGION_LATENCY_BUDGET_MS, RegionScheduler
+    from repro.core.planner import PlanOutlook
+
+    cluster = generate_cluster(num_apps=120, seed=2)
+    T = cluster.problem.num_tiers
+    relax = np.zeros(T, bool)
+    relax[2] = True
+    plan = PlanOutlook(
+        now=0,
+        horizon=8,
+        tier_factor=np.ones(T, np.float32),
+        avoid_tiers=np.zeros(T, bool),
+        slo_off_tiers=np.zeros(T, bool),
+        pending=1,
+        relax_home_tiers=relax,
+        relax_latency_factor=1.5,
+    )
+    level = RegionScheduler(cluster)
+    level.relax(plan, cluster)
+    x0 = np.asarray(cluster.problem.assignment0)
+    want = np.where(
+        relax[x0], REGION_LATENCY_BUDGET_MS * 1.5, REGION_LATENCY_BUDGET_MS
+    ).astype(np.float32)
+    assert level.budget is None
+    np.testing.assert_array_equal(level._budget_per_app, want)

@@ -1,0 +1,310 @@
+"""Pluggable scheduler levels (PR 5): protocol, registry, CoopTimings
+back-compat, the shard locality plugin, and the shard_skew scenario."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CoopConfig,
+    CoopTimings,
+    Hierarchy,
+    SchedulerLevel,
+    ShardLocalityScheduler,
+    Sptlb,
+    generate_cluster,
+    register_level,
+    shard_affinity_of,
+)
+from repro.core.levels import SHARD_MIN_AFFINITY, Proposal
+
+
+@pytest.fixture(scope="module")
+def cluster():
+    return generate_cluster(num_apps=200, seed=1)
+
+
+# -- CoopTimings mapping back-compat -----------------------------------------
+
+
+def test_coop_timings_flat_keys_resolve_into_level_dicts():
+    tm = CoopTimings.for_levels(("region", "host"), premask=True)
+    tm.add_level_time("region", 0.5)
+    tm.add_rejections("host", 7)
+    tm.levels["host"].update(pack_s=0.25, pack_dispatches=3, pack_retraces=1)
+    assert tm["region_s"] == 0.5
+    assert tm["host_rejections"] == 7
+    assert tm["region_rejections"] == 0
+    assert tm["pack_s"] == 0.25 and tm["pack_dispatches"] == 3
+    assert tm["premask"] is True
+    # writes through the legacy keys land in the level dicts too
+    tm["host_s"] = 1.25
+    assert tm.levels["host"]["level_s"] == 1.25
+    with pytest.raises(KeyError):
+        tm["nonexistent_level_s"]
+    assert tm.get("nonexistent_level_s", 42) == 42
+    assert "region_s" in tm and "shard_s" not in tm
+
+
+def test_coop_timings_flattens_like_the_legacy_dict():
+    tm = CoopTimings.for_levels(("region", "host"))
+    flat = dict(tm)
+    for key in (
+        "solve_s",
+        "feedback_s",
+        "total_s",
+        "host_side_frac",
+        "rounds",
+        "region_s",
+        "host_s",
+        "region_rejections",
+        "host_rejections",
+        "pack_s",
+        "pack_dispatches",
+        "pack_retraces",
+        "resident_overflows",
+        "restarts",
+        "movement_cost",
+        "budget_trimmed",
+        "round_costs",
+        "premask",
+        "levels",
+    ):
+        assert key in flat, key
+
+
+# -- registry / Hierarchy ----------------------------------------------------
+
+
+def test_hierarchy_from_names_and_unknown_level():
+    assert len(Hierarchy.from_names("region,host,shard")) == 3
+    assert len(Hierarchy.from_names(("region", "host"))) == 2
+    with pytest.raises(KeyError, match="unknown scheduler level"):
+        Hierarchy.from_names("region,bogus")
+
+
+def test_registered_custom_level_is_addressable_by_name(cluster):
+    class VetoTierLevel(SchedulerLevel):
+        """Rejects every move into tier 0 (a quota-style plugin)."""
+
+        name = "veto0"
+
+        def __init__(self, cluster):
+            self.cluster = cluster
+
+        def vet(self, proposal):
+            c = proposal.candidates
+            return c[proposal.x[c] == 0]
+
+    register_level("veto0", VetoTierLevel)
+    d = Sptlb(cluster).balance(
+        "local",
+        timeout_s=4,
+        config=CoopConfig(levels=("region", "host", "veto0")),
+    )
+    assert d.violations.ok
+    x = np.asarray(d.assignment)
+    x0 = np.asarray(cluster.problem.assignment0)
+    moved = np.where(x != x0)[0]
+    assert not (x[moved] == 0).any()  # the veto held in the final mapping
+    assert "veto0" in d.cooperation.timings.levels
+
+
+def test_misbehaving_level_cannot_hang_the_bus_or_poison_home(cluster):
+    """Protocol clamp: a plugin that rejects ids outside its candidate set
+    (residents, returners) must not deadlock the revert fixpoint or scatter
+    an avoid over an app's home column.  The bus clamps rejections to the
+    contract; the pass terminates with everything sent home."""
+
+    class BounceEverything(SchedulerLevel):
+        name = "bounce"
+
+        def __init__(self, cluster):
+            self.n = cluster.problem.num_apps
+
+        def vet(self, proposal):
+            return np.arange(self.n, dtype=np.int64)  # protocol violation
+
+    register_level("bounce", BounceEverything)
+    d = Sptlb(cluster).balance(
+        "local",
+        timeout_s=4,
+        config=CoopConfig(levels=("region", "host", "bounce"), max_rounds=3),
+    )
+    x = np.asarray(d.assignment)
+    x0 = np.asarray(cluster.problem.assignment0)
+    np.testing.assert_array_equal(x, x0)  # every move bounced -> all home
+    assert d.violations.ok
+
+
+def test_controller_config_legacy_fields_override_explicit_coop_with_warning():
+    import dataclasses as dc
+
+    from repro.core.controller import ControllerConfig
+
+    with pytest.warns(DeprecationWarning, match="variant"):
+        cfg = ControllerConfig(
+            variant="no_cnst", coop=CoopConfig(levels=("region", "host", "shard"))
+        )
+    assert cfg.coop.variant == "no_cnst"  # legacy shim overrides, like balance()
+    assert cfg.coop.levels == ("region", "host", "shard")
+    # idempotent: dataclasses.replace re-runs __post_init__ silently
+    import warnings
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        again = dc.replace(cfg, movement_cost_budget=9.0)
+        # legacy fields left at their defaults never touch an explicit coop
+        silent = ControllerConfig(coop=CoopConfig(variant="no_cnst"))
+    assert again.coop.variant == "no_cnst"
+    assert silent.coop.variant == "no_cnst"
+
+
+# -- shard affinity telemetry ------------------------------------------------
+
+
+def test_shard_affinity_matrix_shape_and_memoization(cluster):
+    aff = shard_affinity_of(cluster)
+    N, T = cluster.problem.num_apps, cluster.problem.num_tiers
+    assert aff.shape == (N, T)
+    assert aff.dtype == np.float32
+    assert (aff >= 0).all() and (aff <= 1 + 1e-6).all()
+    assert shard_affinity_of(cluster) is aff  # memoized on the cluster
+    fresh = dataclasses.replace(cluster)
+    assert shard_affinity_of(fresh) is not aff  # replace resets the cache
+    override = np.full((N, T), 0.5, np.float32)
+    with_field = dataclasses.replace(cluster, shard_affinity=override)
+    np.testing.assert_array_equal(shard_affinity_of(with_field), override)
+
+
+# -- the shard locality level ------------------------------------------------
+
+
+def _proposal_for(cluster, app, dest):
+    x0 = np.asarray(cluster.problem.assignment0, np.int64)
+    x = x0.copy()
+    x[app] = dest
+    return Proposal(x, x0, np.array([app], np.int64))
+
+
+def test_shard_level_vets_against_affinity_bar(cluster):
+    level = ShardLocalityScheduler(cluster)
+    aff = shard_affinity_of(cluster)
+    x0 = np.asarray(cluster.problem.assignment0)
+    # an app whose home tier holds plenty of shard mass
+    rich = int(np.argmax(aff[np.arange(len(x0)), x0]))
+    good = int(np.argmax(aff[rich]))
+    bad = int(np.argmin(aff[rich]))
+    assert level.vet(_proposal_for(cluster, rich, good)).size == 0
+    if aff[rich, bad] < SHARD_MIN_AFFINITY:
+        assert level.vet(_proposal_for(cluster, rich, bad)).tolist() == [rich]
+
+
+def test_shard_level_bar_capped_by_home_affinity(cluster):
+    """An app already below the threshold at home must stay movable to any
+    tier at least as good — the bar never exceeds what home provides."""
+    level = ShardLocalityScheduler(cluster, min_affinity=0.99)
+    aff = shard_affinity_of(cluster)
+    x0 = np.asarray(cluster.problem.assignment0)
+    app = 0
+    better = int(np.argmax(aff[app]))
+    assert aff[app, better] >= aff[app, x0[app]]
+    assert level.vet(_proposal_for(cluster, app, better)).size == 0
+
+
+def test_shard_level_premask_keeps_home_open_through_bus(cluster):
+    d = Sptlb(cluster).balance(
+        "local",
+        timeout_s=4,
+        config=CoopConfig(levels=("region", "host", "shard")),
+    )
+    assert d.violations.ok
+    assert d.cooperation.timings["shard_rejections"] == 0  # premasked away
+    level = ShardLocalityScheduler(cluster)
+    x = np.asarray(d.assignment, np.int64)
+    x0 = np.asarray(cluster.problem.assignment0, np.int64)
+    moved = np.where(x != x0)[0]
+    assert level.vet(Proposal(x, x0, moved)).size == 0
+
+
+def test_shard_level_relax_lowers_bar_for_drain_residents(cluster):
+    from repro.core.planner import PlanOutlook
+
+    T = cluster.problem.num_tiers
+    relax = np.zeros(T, bool)
+    relax[1] = True
+    plan = PlanOutlook(
+        now=0,
+        horizon=8,
+        tier_factor=np.ones(T, np.float32),
+        avoid_tiers=np.zeros(T, bool),
+        slo_off_tiers=np.zeros(T, bool),
+        pending=1,
+        relax_home_tiers=relax,
+        relax_latency_factor=2.0,
+    )
+    level = ShardLocalityScheduler(cluster)
+    bar_before = level._bar.copy()
+    level.relax(plan, cluster)
+    x0 = np.asarray(cluster.problem.assignment0)
+    resident = relax[x0]
+    np.testing.assert_allclose(level._bar[resident], bar_before[resident] / 2.0)
+    np.testing.assert_array_equal(level._bar[~resident], bar_before[~resident])
+
+
+def test_shard_level_feedback_escalates_repeat_offenders(cluster):
+    from repro.core.levels import BusState
+
+    level = ShardLocalityScheduler(cluster, escalate_after=2)
+    aff = shard_affinity_of(cluster)
+    x0 = np.asarray(cluster.problem.assignment0)
+    candidates = [
+        n
+        for n in range(len(x0))
+        if aff[n].min() < level._bar[n] and int(np.argmin(aff[n])) != x0[n]
+    ]
+    app = candidates[0]
+    bad = int(np.argmin(aff[app]))
+    state = BusState(round=1, x=x0, x0=x0, rejections={})
+    assert level.feedback(state) is None  # nothing escalated yet
+    for _ in range(2):
+        rejected = level.vet(_proposal_for(cluster, app, bad))
+        assert rejected.tolist() == [app]
+    mask = level.feedback(state)
+    assert mask is not None and mask[app, bad]
+    assert level.counters()["escalated"] == 1
+    assert level.feedback(state) is None  # escalates once per app
+
+
+# -- shard_skew scenario end-to-end ------------------------------------------
+
+
+def test_shard_skew_scenario_runs_three_level_stack():
+    from repro.sim import get_scenario, run_pair
+
+    sc = get_scenario("shard_skew", num_apps=96, ticks=12, seed=0)
+    assert sc.levels == ("region", "host", "shard")
+    out = run_pair(sc)
+    balanced = out["balanced"].summary()
+    assert balanced["levels"] == ["region", "host", "shard"]
+    assert "shard_misplaced_app_ticks" in balanced
+    cmp = out["compare"]["shard_misplaced_app_ticks"]
+    assert set(cmp) == {"baseline", "balanced", "ratio"}
+    # the controller must not worsen co-location while rebalancing
+    assert cmp["balanced"] <= cmp["baseline"]
+
+
+def test_shard_skew_event_spikes_the_anchored_region():
+    from repro.sim import ShardSkew, build_fleet, get_scenario
+
+    sc = get_scenario("shard_skew", num_apps=96, ticks=12, seed=0)
+    fleet = build_fleet(sc)
+    flash_before = np.asarray(fleet.wl.flash).copy()
+    ShardSkew(at=0, region=2, magnitude=5.0).apply(fleet)
+    flash_after = np.asarray(fleet.wl.flash)
+    hit = flash_after > flash_before + 1e-6
+    assert hit.any()
+    assert (fleet.cluster.app_region[hit] == 2).all()
+    # surprises never declare advisories
+    assert ShardSkew(at=0, region=2).declare() is None
