@@ -86,6 +86,40 @@ CHECKS = (
         0.05,
         0.10,
     ),
+    # PR 6 chaos family: the degraded-mode control plane's acceptance.
+    # Containment is absolute — one unsafe move committed on faulted
+    # telemetry is a bug, not drift to tolerate — and the controller must
+    # come back to NORMAL once the fault window closes.
+    Check(SIM_SMOKE, ("*", "chaos", "unsafe_moves"), "not_above", 0),
+    Check(SIM_SMOKE, ("*", "chaos", "budget_overruns"), "not_above", 0),
+    Check(SIM_SMOKE, ("*", "chaos", "recovered"), "stays_true"),
+    # A chaos run that never left NORMAL proved nothing: residency in
+    # degraded modes must stay in the baseline's ballpark.
+    Check(SIM_SMOKE, ("*", "chaos", "degraded_ticks"), "not_below", 1, 0.5),
+    # The price of flying blind, bounded per scenario (named checks so a
+    # baseline regeneration that *dropped* a chaos scenario — which the
+    # wildcards would silently forgive — fails the gate).
+    Check(
+        SIM_SMOKE,
+        ("telemetry_blackout", "chaos", "degraded_vs_oracle", "ratio"),
+        "not_above",
+        0.5,
+        0.25,
+    ),
+    Check(
+        SIM_SMOKE,
+        ("solver_brownout", "chaos", "degraded_vs_oracle", "ratio"),
+        "not_above",
+        0.5,
+        0.25,
+    ),
+    Check(
+        SIM_SMOKE,
+        ("cascading_outage", "chaos", "degraded_vs_oracle", "ratio"),
+        "not_above",
+        0.5,
+        0.25,
+    ),
     # --- solver smoke: counts/objectives tight, wall-clock generous ------
     Check(SOLVER_SMOKE, ("local_search", "*", "batch16", "moves_per_s"), "not_below", 0, 3.0),
     Check(SOLVER_SMOKE, ("local_search", "*", "batch1", "moves_per_s"), "not_below", 0, 3.0),

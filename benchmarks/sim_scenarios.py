@@ -11,6 +11,12 @@ ratios are the PR 3/4 acceptance numbers (tier_drain must stay <= 0.15
 with movement inside the budget; region_outage must not regress), and
 ``benchmarks/check_regression.py`` gates them in CI.
 
+Chaos scenarios (``Scenario.chaos``) run the degraded/oracle/static triple
+via ``run_chaos_pair`` instead: their records carry the ``chaos``
+scorecard (unsafe moves, mode residency and transitions, recovery,
+degraded-vs-oracle violation ratio) that the regression gate pins — see
+docs/degraded_modes.md.
+
 Emits CSV rows like every other benchmark AND writes ``BENCH_sim.json`` at
 the repo root so the trajectory scorecard is tracked PR-over-PR
 (regenerate with ``PYTHONPATH=src python -m benchmarks.sim_scenarios``;
@@ -24,13 +30,55 @@ import os
 import time
 
 from benchmarks.common import comment, emit
-from repro.sim import get_scenario, list_scenarios, run_pair
+from repro.sim import get_scenario, list_scenarios, run_chaos_pair, run_pair
 
 RESULTS: dict = {}
 
 
+def bench_chaos_scenario(sc, num_apps: int, ticks: int):
+    """Chaos scenarios run the degraded/oracle/static triple instead of the
+    plain pair: the record keys the gate pins are the ``chaos`` scorecard
+    (zero unsafe moves, recovery to NORMAL, bounded degraded-vs-oracle
+    ratio) plus the usual ``compare`` of degraded against static."""
+    t0 = time.perf_counter()
+    out = run_chaos_pair(sc)
+    wall = time.perf_counter() - t0
+    c = out["chaos"]
+    rec = {
+        "num_apps": num_apps,
+        "pool": sc.max_apps,
+        "ticks": ticks,
+        "wall_s": wall,
+        "baseline": out["baseline"].summary(),
+        "degraded": out["degraded"].summary(),
+        "oracle": out["oracle"].summary(),
+        "compare": out["compare"],
+        "chaos": c,
+        "series": {"degraded": out["degraded"].series(),
+                   "oracle": out["oracle"].series()},
+    }
+    dvo = c["degraded_vs_oracle"]
+    emit(f"sim_scenarios/{sc.name}/N{num_apps}x{ticks}", wall * 1e6,
+         f"viol_degraded={dvo['degraded']};viol_oracle={dvo['oracle']};"
+         f"chaos_ratio={dvo['ratio']:.3f};unsafe_moves={c['unsafe_moves']};"
+         f"degraded_ticks={c['degraded_ticks']};"
+         f"modes={'+'.join(c['modes_entered'])};"
+         f"breaker_trips={c['breaker_trips']};"
+         f"quarantined={c['telemetry_quarantined']};"
+         f"budget_overruns={c['budget_overruns']};"
+         f"recovered={c['recovered']}")
+    comment(f"{sc.name} (chaos): violation ticks degraded {dvo['degraded']} "
+            f"vs oracle {dvo['oracle']} ({dvo['ratio']:.2f}x), "
+            f"{c['unsafe_moves']} unsafe moves, modes entered "
+            f"{c['modes_entered']}, recovered={c['recovered']}")
+    RESULTS[sc.name] = rec
+    return rec
+
+
 def bench_scenario(name: str, num_apps: int, ticks: int, seed: int = 0):
     sc = get_scenario(name, num_apps=num_apps, ticks=ticks, seed=seed)
+    if sc.chaos:
+        return bench_chaos_scenario(sc, num_apps, ticks)
     t0 = time.perf_counter()
     out = run_pair(sc)
     wall = time.perf_counter() - t0

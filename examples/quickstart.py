@@ -22,7 +22,8 @@ def main():
     # --- 1+2: SPTLB balancing (paper Figs 1-3) -----------------------------
     cluster = generate_cluster(num_apps=800, seed=0)
     sptlb = Sptlb(cluster)
-    balanced = sptlb.balance("local", timeout_s=30, variant="no_cnst")
+    balanced = sptlb.balance("local", timeout_s=30,
+                             config=CoopConfig(variant="no_cnst"))
     uf0, _ = utilization_fraction(cluster.problem, cluster.problem.assignment0)
     print("== SPTLB multi-objective balancing ==")
     print(f"initial  cpu util per tier: {np.asarray(uf0)[:, 0].round(2)}")

@@ -27,7 +27,7 @@ import argparse
 
 
 from repro.core import CoopConfig, Hierarchy, Sptlb, generate_cluster
-from repro.distributed.fault import CapacityEvent, rebalance_after
+from repro.distributed.fault import CapacityEvent, rebalance
 
 
 def main():
@@ -67,7 +67,7 @@ def main():
 
     print("\n-- host failure: tier 3 loses 25% capacity --")
     event = CapacityEvent("host_failure", tier=2, fraction=0.25)
-    rebalanced, decision = rebalance_after(cluster, event)
+    rebalanced, decision = rebalance(cluster, event)
     print(f"re-balance moved {decision.projected.num_moved} apps "
           f"(bounded by {decision.violations.move_budget}), "
           f"d2b {decision.difference_to_balance:.3f}, "

@@ -19,7 +19,11 @@ from repro.core.metrics import (difference_to_balance, network_p99_ms,
 from repro.core.planner import (Advisory, MaintenancePlanner, PlannerConfig,
                                 PlanOutlook, move_costs, movement_cost_of)
 from repro.core.sptlb import BalanceDecision, Sptlb, engine_fn
-from repro.core.controller import BalanceController, ControllerConfig
+from repro.core.health import (BreakerBoard, BreakerConfig, CircuitBreaker,
+                               HealthConfig, TelemetryHealth,
+                               TelemetryMonitor)
+from repro.core.controller import (BalanceController, ControllerConfig,
+                                   FaultToleranceConfig, Mode)
 
 __all__ = [
     "Advisory", "MaintenancePlanner", "PlannerConfig", "PlanOutlook",
@@ -36,5 +40,7 @@ __all__ = [
     "shard_affinity_of",
     "difference_to_balance", "network_p99_ms", "projected_metrics",
     "BalanceDecision", "Sptlb", "engine_fn",
-    "BalanceController", "ControllerConfig",
+    "BreakerBoard", "BreakerConfig", "CircuitBreaker", "HealthConfig",
+    "TelemetryHealth", "TelemetryMonitor",
+    "BalanceController", "ControllerConfig", "FaultToleranceConfig", "Mode",
 ]

@@ -39,6 +39,7 @@ up without rebuilding the controller or losing cooldown/audit state.
 from __future__ import annotations
 
 import dataclasses
+import enum
 import time
 from typing import Optional
 
@@ -46,12 +47,68 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import metrics as M
+from repro.core.health import (BreakerBoard, BreakerConfig, HealthConfig,
+                               TelemetryHealth, TelemetryMonitor)
 from repro.core.levels import CoopConfig
 from repro.core.planner import (MaintenancePlanner, PlannerConfig, PlanOutlook,
                                 move_costs)
 from repro.core.problem import utilization_fraction
 from repro.core.sptlb import Sptlb
 from repro.core.telemetry import ClusterState
+
+
+class Mode(str, enum.Enum):
+    """Controller operating modes, ordered by how degraded the control
+    plane believes itself to be.  A ``str`` enum so audit records and
+    BENCH JSON serialize the mode name directly.
+
+    * NORMAL       — full trigger policy, full movement budget.
+    * CONSERVATIVE — strand-fixing moves only (apps whose home tier is
+      SLO-ineligible or over hard capacity), per-tick movement budget
+      halved.  Entered when the composite health score degrades.
+    * SAFE         — no moves at all except evacuating failing tiers; the
+      balance trigger itself requires evacuation candidates.  Entered when
+      the control plane is effectively blind or the solver/levels are
+      failing.
+    """
+
+    NORMAL = "normal"
+    CONSERVATIVE = "conservative"
+    SAFE = "safe"
+
+
+_MODE_RANK = {Mode.NORMAL: 0, Mode.CONSERVATIVE: 1, Mode.SAFE: 2}
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultToleranceConfig:
+    """Arms the degraded-mode control plane (``ControllerConfig.fault``).
+
+    The composite health score in [0, 1] is the product of three factors:
+    telemetry health (``core.health.TelemetryMonitor``), the breaker
+    board's open-level factor, and ``1 - solver_distress`` (an EWMA over
+    the cooperation ``accepted`` flag — a solver that keeps timing out or
+    failing drags the score down without consulting any wall clock, so
+    mode decisions stay deterministic).  Transitions *down* (toward SAFE)
+    are immediate; transitions *up* require the score to clear the current
+    mode's floor threshold plus ``recover_margin`` for ``recover_ticks``
+    consecutive ticks, one mode step per tick — the hysteresis that keeps
+    modes from flapping.
+    """
+
+    health: HealthConfig = dataclasses.field(default_factory=HealthConfig)
+    breakers: BreakerConfig = dataclasses.field(default_factory=BreakerConfig)
+    conservative_below: float = 0.7
+    safe_below: float = 0.35
+    recover_margin: float = 0.1
+    recover_ticks: int = 3
+    # CONSERVATIVE halves what the remaining trajectory budget allows a
+    # single tick to spend.
+    budget_factor_conservative: float = 0.5
+    # Solver-distress EWMA: weight of the newest accepted/failed sample,
+    # and the per-tick decay applied when no solve ran.
+    solver_distress_weight: float = 0.5
+    solver_distress_decay: float = 0.5
 
 
 @dataclasses.dataclass(eq=False)
@@ -85,6 +142,10 @@ class ControllerConfig:
     # controller fills the per-tick dynamic fields (plan / move_cost /
     # cost_budget) itself via dataclasses.replace.
     coop: Optional[CoopConfig] = None
+    # Degraded-mode control plane: None (default) disables telemetry
+    # health, circuit breakers, and operating modes entirely — the
+    # controller behaves bit-identically to the pre-fault code path.
+    fault: Optional[FaultToleranceConfig] = None
 
     def __post_init__(self):
         if self.coop is None:
@@ -125,6 +186,10 @@ class ControllerEvent:
     budget_limited: bool = False
     # Declared advisories inside the planning horizon this round.
     plan_pending: int = 0
+    # Degraded-mode state at this tick (NORMAL/1.0 when fault tolerance is
+    # disabled — the fields exist either way so audits stay uniform).
+    mode: str = Mode.NORMAL.value
+    health_score: float = 1.0
 
 
 class BalanceController:
@@ -145,6 +210,21 @@ class BalanceController:
         self.now = 0                      # external tick of the last tick()
         self.cost_spent = 0.0             # applied movement cost, lifetime
         self.budget_overruns = 0          # rounds the budget bound movement
+        # Degraded-mode control plane (all inert when config.fault is None).
+        fault = config.fault
+        self.monitor = (TelemetryMonitor(fault.health)
+                        if fault is not None else None)
+        self.board = (BreakerBoard(fault.breakers)
+                      if fault is not None else None)
+        self.mode = Mode.NORMAL
+        self.mode_transitions: list[dict] = []
+        self.health: Optional[TelemetryHealth] = None
+        self._recover_streak = 0
+        self._solver_distress = 0.0
+        # Test/chaos hook: an explicit Hierarchy the balance pass should use
+        # instead of the config's level names (the sim's LevelFault event
+        # swaps in a faulty wrapper here).
+        self.hierarchy_override = None
 
     def set_advisories(self, advisories, *,
                        horizon: Optional[int] = None) -> None:
@@ -202,16 +282,103 @@ class BalanceController:
         self.cluster = cluster
         self._sptlb.cluster = cluster
 
+    # -- degraded-mode machinery (inert when config.fault is None) -----------
+    def _evacuation_mask(self, p) -> np.ndarray:
+        """bool[N]: live apps whose *home* placement is already failing —
+        SLO-ineligible tier, or a tier over hard capacity.  These are the
+        only apps SAFE mode will move (and the strand-fixers CONSERVATIVE
+        mode restricts itself to)."""
+        x0 = np.asarray(p.assignment0)
+        live = np.asarray(p.valid, bool)
+        slo_ok = np.asarray(p.slo_allowed)[x0, np.asarray(p.slo)]
+        uf, _ = utilization_fraction(p, p.assignment0)
+        over_cap = np.asarray(uf).max(axis=-1) > 1.0 + 1e-6   # [T]
+        return live & (~slo_ok | over_cap[x0])
+
+    @staticmethod
+    def _mode_avoid(p, movable: np.ndarray) -> np.ndarray:
+        """[N, T] avoid mask holding every non-``movable`` app on its home
+        tier (home column open — staying put is always legal)."""
+        hold = np.ones((p.num_apps, p.num_tiers), bool)
+        hold[movable] = False
+        hold[np.arange(p.num_apps), np.asarray(p.assignment0)] = False
+        return hold
+
+    def _composite_score(self) -> float:
+        telemetry = self.health.score if self.health is not None else 1.0
+        board = self.board.health_factor() if self.board is not None else 1.0
+        return float(telemetry * board * (1.0 - self._solver_distress))
+
+    def _transition(self, to: Mode, score: float) -> None:
+        self.mode_transitions.append({
+            "tick": self.now, "round": self.round,
+            "from": self.mode.value, "to": to.value,
+            "score": round(score, 4)})
+        self.mode = to
+
+    def _update_mode(self, score: float) -> None:
+        """Hysteretic mode machine: degrade immediately (straight to SAFE
+        when warranted), recover one step per tick and only after the score
+        has cleared the current mode's floor plus ``recover_margin`` for
+        ``recover_ticks`` consecutive ticks."""
+        f = self.config.fault
+        target = (Mode.SAFE if score < f.safe_below
+                  else Mode.CONSERVATIVE if score < f.conservative_below
+                  else Mode.NORMAL)
+        if _MODE_RANK[target] > _MODE_RANK[self.mode]:
+            self._transition(target, score)
+            self._recover_streak = 0
+            return
+        if _MODE_RANK[target] < _MODE_RANK[self.mode]:
+            floor = (f.safe_below if self.mode is Mode.SAFE
+                     else f.conservative_below)
+            if score >= floor + f.recover_margin:
+                self._recover_streak += 1
+            else:
+                self._recover_streak = 0
+            if self._recover_streak >= f.recover_ticks:
+                up = (Mode.CONSERVATIVE if self.mode is Mode.SAFE
+                      else Mode.NORMAL)
+                self._transition(up, score)
+                self._recover_streak = 0
+            return
+        self._recover_streak = 0
+
+    def _note_solve(self, accepted: bool) -> None:
+        w = self.config.fault.solver_distress_weight
+        self._solver_distress = ((1.0 - w) * self._solver_distress
+                                 + w * (0.0 if accepted else 1.0))
+
     # -- one control round ----------------------------------------------------
     def tick(self, cluster: Optional[ClusterState] = None,
-             now: Optional[int] = None) -> ControllerEvent:
+             now: Optional[int] = None,
+             collected_at: Optional[int] = None) -> ControllerEvent:
         """One control round.  ``now`` is the external clock the advisory
         schedule is declared against (the sim harness passes its tick);
-        callers without one get the controller's own 0-based round count."""
+        callers without one get the controller's own 0-based round count.
+        ``collected_at`` stamps when the observed telemetry was actually
+        collected (defaults to the cluster's own ``collected_at``); with
+        fault tolerance armed, ``now - collected_at`` is the staleness the
+        telemetry monitor scores."""
         if cluster is not None:
             self.observe(cluster)
         self.round += 1
         self.now = (self.round - 1) if now is None else int(now)
+        fault = self.config.fault
+        if fault is not None:
+            # Sanitize first: quarantined/implausible readings are replaced
+            # by last-known-good values (inflated with staleness), and every
+            # downstream decision this tick plans against the sanitized view.
+            # A cluster nobody ever stamped (collected_at at its default 0)
+            # reads as fresh — staleness only engages for producers that
+            # participate in the stamping protocol.
+            if collected_at is None:
+                collected_at = (self.cluster.collected_at
+                                if self.cluster.collected_at else self.now)
+            sanitized, self.health = self.monitor.ingest(
+                self.cluster, self.now, collected_at)
+            self.observe(sanitized)
+            self._update_mode(self._composite_score())
         # Callers may also swap ``self.cluster`` directly between ticks; the
         # reused balancer must follow it either way.
         self._sptlb.cluster = self.cluster
@@ -220,11 +387,35 @@ class BalanceController:
                    if self.planner is not None else None)
         d2b_before = M.difference_to_balance(p, p.assignment0)
         triggered, reason = self.should_rebalance(d2b_before, outlook)
-        ev = ControllerEvent(self.round, triggered, reason, False, d2b_before)
+        evac = None
+        if fault is not None and self.mode is not Mode.NORMAL:
+            evac = self._evacuation_mask(p)
+            n_evac = int(evac.sum())
+            if self.mode is Mode.SAFE:
+                # SAFE: the only acceptable reason to move is evacuation.
+                if triggered and n_evac == 0:
+                    triggered = False
+                    reason = f"safe-mode hold ({reason})"
+                elif triggered:
+                    reason = f"safe-mode evacuation of {n_evac} apps ({reason})"
+            elif triggered and n_evac == 0:
+                # CONSERVATIVE with nothing stranded: every move would be a
+                # balance optimization on suspect data — hold.
+                triggered = False
+                reason = f"conservative hold ({reason})"
+            elif triggered:
+                reason = f"conservative strand-fix of {n_evac} apps ({reason})"
+        ev = ControllerEvent(self.round, triggered, reason, False, d2b_before,
+                             mode=self.mode.value,
+                             health_score=round(self._composite_score(), 4)
+                             if fault is not None else 1.0)
         if outlook is not None:
             ev.plan_pending = outlook.pending
         budget = self.config.movement_cost_budget
         remaining = float("inf") if budget is None else budget - self.cost_spent
+        if (fault is not None and self.mode is Mode.CONSERVATIVE
+                and remaining != float("inf")):
+            remaining = remaining * fault.budget_factor_conservative
         if triggered and remaining <= 1e-9:
             # The downtime budget is spent: movement is off the table, no
             # matter what the metrics say.  Observable, never silent.
@@ -236,9 +427,34 @@ class BalanceController:
             coop_cfg = dataclasses.replace(
                 self.config.coop, plan=outlook, move_cost=move_costs(p),
                 cost_budget=remaining)
+            balance_cluster = self.cluster
+            if fault is not None:
+                coop_cfg = dataclasses.replace(coop_cfg, breakers=self.board)
+                if self.mode is not Mode.NORMAL:
+                    # Mode-restricted movement: everyone outside the
+                    # evacuation set is held home by a standing avoid mask
+                    # (the solver literally cannot propose other moves).
+                    balance_cluster = dataclasses.replace(
+                        self.cluster, problem=p.with_avoid(
+                            jnp.asarray(self._mode_avoid(p, evac))))
+            self._sptlb.cluster = balance_cluster
             decision = self._sptlb.balance(
                 self.config.engine, timeout_s=self.config.timeout_s,
-                config=coop_cfg)
+                config=coop_cfg, hierarchy=self.hierarchy_override)
+            self._sptlb.cluster = self.cluster
+            if fault is not None:
+                coop = decision.cooperation
+                # Solver distress means the solver *couldn't answer*, not
+                # that the answer was hard: an unaccepted pass that still
+                # had rounds left exited on wall-clock (a brownout), and an
+                # unconverged zero-iteration result is the bus's dead-solver
+                # fallback.  A pass that merely exhausted its round budget
+                # on a contentious workload is healthy.
+                timed_out = (coop is not None and not coop.accepted
+                             and coop.timings.rounds <= coop_cfg.max_rounds)
+                dead = (decision.solve.iterations == 0
+                        and not decision.solve.converged)
+                self._note_solve(not (timed_out or dead))
             ev.time_s = time.perf_counter() - t0
             ev.d2b_after = decision.difference_to_balance
             ev.moved = decision.projected.num_moved
@@ -261,13 +477,17 @@ class BalanceController:
                 self.last_applied_round = self.round
                 ev.applied = True
                 self.cost_spent += decision.movement_cost
+        if fault is not None and not triggered:
+            # No solve this tick: solver distress decays toward healthy
+            # (the breaker board and telemetry keep their own state).
+            self._solver_distress *= fault.solver_distress_decay
         self.history.append(ev)
         return ev
 
     def audit(self) -> dict:
         """Summary of the decision trail (§3.3's emitted metrics)."""
         applied = [e for e in self.history if e.applied]
-        return {
+        out = {
             "rounds": self.round,
             "rebalances": len(applied),
             "total_moved": sum(e.moved for e in applied),
@@ -278,3 +498,11 @@ class BalanceController:
             "movement_cost_budget": self.config.movement_cost_budget,
             "budget_overruns": self.budget_overruns,
         }
+        if self.config.fault is not None:
+            out["mode"] = self.mode.value
+            out["mode_transitions"] = list(self.mode_transitions)
+            out["health_score"] = round(self._composite_score(), 4)
+            out["breaker_trips"] = self.board.trips
+            out["telemetry_quarantined"] = (self.health.quarantined
+                                            if self.health is not None else 0)
+        return out

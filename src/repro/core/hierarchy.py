@@ -72,10 +72,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.goals import objective as _objective
+from repro.core.health import OPEN
 from repro.core.levels import (BusState, CoopConfig, CoopTimings,
                                DEFAULT_LEVELS, Hierarchy, Proposal,
-                               SchedulerLevel, Variant, register_level,
-                               warn_deprecated_kwarg)
+                               SchedulerLevel, register_level)
 from repro.core.planner import movement_cost_of
 from repro.core.problem import Problem, bucket_size
 from repro.core.solver_local import SolveResult
@@ -488,7 +488,109 @@ def _collect_level_counters(timings: CoopTimings, levels) -> None:
             sub["level_s"] = max(0.0, sub["level_s"] - dev)
 
 
-def _vet_timed(level, proposal: Proposal, timings: CoopTimings) -> np.ndarray:
+class _BreakerPass:
+    """Per-pass mediator between the bus and a ``core.health.BreakerBoard``.
+
+    ``board=None`` (the default stack) keeps every hook on the exact
+    pre-breaker code path — no try/except, no extra accounting — so the
+    fault machinery costs nothing until a board is configured
+    (tests/test_coop_parity.py pins the bit-identity).  With a board:
+
+      * OPEN levels are *bypassed*: out of the vet/feedback/revert loops,
+        but their conservative fallback premask (last successfully
+        computed, cached on the board) still constrains the solver.
+      * A level hook that raises fails *closed*: the vet rejects every
+        candidate it was asked about (stay-home is always safe), the
+        failure is recorded, and the pass continues without the answer.
+      * ``end_pass`` (via ``finish``) runs each breaker's trip/probe
+        bookkeeping and snapshots the board into ``timings.breakers``.
+    """
+
+    def __init__(self, board, levels):
+        self.board = board
+        self.bypassed: set[str] = set()
+        if board is not None:
+            for lv in levels:
+                if board.breaker(lv.name).begin_pass() == OPEN:
+                    self.bypassed.add(lv.name)
+
+    def active(self, levels) -> list:
+        if self.board is None:
+            return list(levels)
+        return [lv for lv in levels if lv.name not in self.bypassed]
+
+    def vet(self, level, proposal: Proposal,
+            timings: CoopTimings) -> np.ndarray:
+        brk = self.board.breaker(level.name)
+        t = time.perf_counter()
+        try:
+            rej = np.asarray(level.vet(proposal), np.int64)
+        except Exception:
+            brk.note_failure()
+            rej = np.asarray(proposal.candidates, np.int64)  # fail closed
+        elapsed = time.perf_counter() - t
+        timings.add_level_time(level.name, elapsed)
+        limit = self.board.config.level_timeout_s
+        if limit is not None and elapsed > limit:
+            brk.note_failure()
+        brk.note_vet(int(np.asarray(proposal.candidates).size), int(rej.size))
+        return rej
+
+    def premask(self, level, problem):
+        """Live premask, cached on success; the cached fallback when the
+        level raises or its breaker is open."""
+        if self.board is None:
+            return level.premask(problem)
+        if level.name in self.bypassed:
+            pre = self.board.cached_premask(level.name)
+            if pre is not None:
+                return pre
+            try:  # never premasked while healthy: one guarded live attempt
+                return level.premask(problem)
+            except Exception:
+                return None
+        try:
+            pre = level.premask(problem)
+            self.board.cache_premask(level.name, pre)
+            return pre
+        except Exception:
+            self.board.breaker(level.name).note_failure()
+            return self.board.cached_premask(level.name)
+
+    def feedback(self, level, state: BusState):
+        if self.board is None:
+            return level.feedback(state)
+        try:
+            return level.feedback(state)
+        except Exception:
+            self.board.breaker(level.name).note_failure()
+            return None
+
+    def relax(self, level, plan, cluster) -> None:
+        if self.board is None:
+            level.relax(plan, cluster)
+            return
+        try:
+            level.relax(plan, cluster)
+        except Exception:
+            self.board.breaker(level.name).note_failure()
+
+    def finish(self, timings: CoopTimings) -> None:
+        if self.board is None:
+            return
+        for brk in self.board.breakers.values():
+            brk.end_pass()
+        timings.breakers = {
+            "bypassed": sorted(self.bypassed),
+            "trips": self.board.trips,
+            "levels": self.board.snapshot(),
+        }
+
+
+def _vet_timed(level, proposal: Proposal, timings: CoopTimings,
+               breakers: Optional[_BreakerPass] = None) -> np.ndarray:
+    if breakers is not None and breakers.board is not None:
+        return breakers.vet(level, proposal, timings)
     t = time.perf_counter()
     rej = np.asarray(level.vet(proposal), np.int64)
     timings.add_level_time(level.name, time.perf_counter() - t)
@@ -497,7 +599,8 @@ def _vet_timed(level, proposal: Proposal, timings: CoopTimings) -> np.ndarray:
 
 def _revert_fixpoint(levels, x_np: np.ndarray, x0_np: np.ndarray,
                      timings: CoopTimings,
-                     seed_returners: np.ndarray | None = None) -> np.ndarray:
+                     seed_returners: np.ndarray | None = None,
+                     breakers: Optional[_BreakerPass] = None) -> np.ndarray:
     """Drop unvetted moves (stay-home is safe — the original placement was
     accepted by every level) and re-vet the stack to a fixpoint.
 
@@ -523,7 +626,7 @@ def _revert_fixpoint(levels, x_np: np.ndarray, x0_np: np.ndarray,
                 continue
             rej = _vet_timed(lv, Proposal(x_np, x0_np, movers,
                                           returners=returners, final=True),
-                             timings)
+                             timings, breakers)
             pending[lv.name] = empty
             # Defensive protocol clamp: only movers can be rejected (the
             # incumbent placement is every revert's fallback).  A plugin
@@ -543,7 +646,8 @@ def _revert_fixpoint(levels, x_np: np.ndarray, x0_np: np.ndarray,
 
 def enforce_cost_budget(cluster: ClusterState, res: SolveResult,
                         x0_np: np.ndarray, move_cost, cost_budget: float,
-                        levels, timings) -> SolveResult:
+                        levels, timings,
+                        breakers: Optional[_BreakerPass] = None) -> SolveResult:
     """Price the final mapping and trim it to the round's movement budget.
 
     Movement is the §3.2.1 goal-8 downtime the paper prices; Madsen et al.
@@ -589,7 +693,7 @@ def enforce_cost_budget(cluster: ClusterState, res: SolveResult,
                                  + int(reverted.size))
     if levels and reverted.size:
         x_np = _revert_fixpoint(levels, x_np, x0_np, timings,
-                                seed_returners=reverted)
+                                seed_returners=reverted, breakers=breakers)
     x_final = jnp.asarray(x_np)
     timings["movement_cost"] = movement_cost_of(x_np, x0_np, move_cost)
     return dataclasses.replace(
@@ -601,7 +705,8 @@ def enforce_cost_budget(cluster: ClusterState, res: SolveResult,
 def _restart_phase(cluster: ClusterState, problem: Problem, res: SolveResult,
                    timed_solve, levels, timings: CoopTimings,
                    restart_rounds: int, deadline: float,
-                   x0_np: np.ndarray) -> SolveResult:
+                   x0_np: np.ndarray,
+                   breakers: Optional[_BreakerPass] = None) -> SolveResult:
     """Perturbation restarts after an accepted fixed point (ROADMAP knob).
 
     The unmasked feedback loop gets diversification for free: every
@@ -630,7 +735,7 @@ def _restart_phase(cluster: ClusterState, problem: Problem, res: SolveResult,
         r = timed_solve(problem, init_assignment=jnp.asarray(
             x_pert.astype(np.int32)))
         x_r = _revert_fixpoint(levels, np.asarray(r.assignment), x0_np,
-                               timings)
+                               timings, breakers=breakers)
         obj_r = float(_objective(cluster.problem, jnp.asarray(x_r)))
         if obj_r < obj_best - 1e-9:
             obj_best, x_best = obj_r, x_r
@@ -644,46 +749,23 @@ def _restart_phase(cluster: ClusterState, problem: Problem, res: SolveResult,
     return res
 
 
-def _resolve_config(variant, config, kwargs) -> CoopConfig:
-    """Fold the deprecated ``cooperate`` kwargs into a CoopConfig."""
-    cfg = config if config is not None else CoopConfig()
-    if variant is not None:
-        cfg = dataclasses.replace(cfg, variant=variant)
-    renames = {"max_rounds": "max_rounds", "timeout_s": "timeout_s",
-               "premask_region": "premask", "restart_rounds": "restart_rounds",
-               "move_cost": "move_cost", "cost_budget": "cost_budget"}
-    for kwarg, field in renames.items():
-        value = kwargs.get(kwarg)
-        if value is not None:
-            warn_deprecated_kwarg("cooperate", kwarg, field)
-            cfg = dataclasses.replace(cfg, **{field: value})
-    return cfg
-
-
 def cooperate(
     cluster: ClusterState,
     solve_fn: Callable[[Problem], SolveResult],
-    variant: Optional[Variant] = None,
     *,
     config: Optional[CoopConfig] = None,
     hierarchy: Optional[Hierarchy] = None,
-    max_rounds: Optional[int] = None,
-    timeout_s: Optional[float] = None,
-    region_budget_ms=None,
-    premask_region: Optional[bool] = None,
-    restart_rounds: Optional[int] = None,
-    move_cost: Optional[np.ndarray] = None,
-    cost_budget: Optional[float] = None,
 ) -> CooperationResult:
     """Run one SPTLB balancing pass: the generic cooperation bus.
 
-    ``config`` (a ``core.levels.CoopConfig``) carries every knob; the bare
-    keyword arguments are the historical API kept as deprecated shims (they
-    warn and override the config).  ``hierarchy`` overrides the scheduler
-    stack (default: ``config.levels`` names, else region+host).  The
-    ``manual_cnst`` variant drives the stack through premask -> solve ->
-    vet -> feedback rounds exactly as the module docstring describes;
-    ``no_cnst`` / ``w_cnst`` never consult the stack.
+    ``config`` (a ``core.levels.CoopConfig``) carries every knob — the
+    PR-5 deprecated kwarg shims (variant / max_rounds / premask_region /
+    restart_rounds / region_budget_ms / ...) have been removed.
+    ``hierarchy`` overrides the scheduler stack (default: ``config.levels``
+    names, else region+host).  The ``manual_cnst`` variant drives the stack
+    through premask -> solve -> vet -> feedback rounds exactly as the
+    module docstring describes; ``no_cnst`` / ``w_cnst`` never consult the
+    stack.
 
     ``config.premask`` folds every level's feasibility into the avoid mask
     before the first solve — the solver stops proposing level-infeasible
@@ -694,19 +776,14 @@ def cooperate(
     after an accepted fixed point.  ``config.move_cost`` /
     ``config.cost_budget`` price movement and trim the final mapping to
     budget (``enforce_cost_budget``).  ``config.plan`` reaches each level's
-    ``relax`` hook (maintenance placement mode).
+    ``relax`` hook (maintenance placement mode).  ``config.breakers`` (a
+    ``core.health.BreakerBoard``) arms per-level circuit breakers: OPEN
+    levels are bypassed behind their cached fallback premask, raising hooks
+    fail closed, a raising solver falls back to its warm start (or the
+    identity mapping), and the board's trip/probe state lands in
+    ``timings.breakers``; ``None`` keeps the exact pre-breaker code path.
     """
-    cfg = _resolve_config(variant, config, dict(
-        max_rounds=max_rounds, timeout_s=timeout_s,
-        premask_region=premask_region, restart_rounds=restart_rounds,
-        move_cost=move_cost, cost_budget=cost_budget))
-    if region_budget_ms is not None and hierarchy is None:
-        warn_deprecated_kwarg("cooperate", "region_budget_ms",
-                              "levels (bind a RegionScheduler with the "
-                              "budget via a custom Hierarchy)")
-        hierarchy = Hierarchy((
-            lambda c: RegionScheduler(c, latency_budget_ms=region_budget_ms),
-            HostScheduler))
+    cfg = config if config is not None else CoopConfig()
     wallclock = cfg.timeout_s if cfg.timeout_s is not None else float("inf")
 
     t0 = time.perf_counter()
@@ -738,31 +815,55 @@ def cooperate(
 
     assert use_variant == "manual_cnst", use_variant
     levels = cfg.hierarchy(hierarchy).bind(cluster)
+    bp = _BreakerPass(cfg.breakers, levels)
+    active = bp.active(levels)
     timings = CoopTimings.for_levels(
         [lv.name for lv in levels],
         premask=bool(cfg.premask), round_costs=[])
     if cfg.plan is not None:
-        for lv in levels:
-            lv.relax(cfg.plan, cluster)
-
-    def timed_solve(p, **kw):
-        t = time.perf_counter()
-        r = solve_fn(p, **kw)
-        timings.solve_s += time.perf_counter() - t
-        return r
+        for lv in active:
+            bp.relax(lv, cfg.plan, cluster)
 
     x0_np = np.asarray(problem.assignment0)
     x0_dev = problem.assignment0
+
+    def timed_solve(p, **kw):
+        t = time.perf_counter()
+        try:
+            r = solve_fn(p, **kw)
+        except Exception:
+            if bp.board is None:
+                raise
+            # Solver fault under an armed board: fall back to the best
+            # mapping already in hand — the warm start when one was passed,
+            # else the identity mapping (stay-home was vetted by every
+            # level when it was committed).  The never-worse revert
+            # fixpoint downstream treats it like any other proposal.
+            init = kw.get("init_assignment")
+            x_fb = jnp.asarray(init) if init is not None else x0_dev
+            r = SolveResult(
+                assignment=x_fb, iterations=0, converged=False,
+                objective=float(_objective(cluster.problem, x_fb)),
+                num_moved=int(np.sum(np.asarray(x_fb) != x0_np)),
+                solve_time_s=0.0)
+        timings.solve_s += time.perf_counter() - t
+        return r
+
     home_open = np.arange(problem.num_apps)
-    if cfg.premask:
+    if cfg.premask or bp.bypassed:
         # Commit every level's feasibility into the solver's mask so those
         # rejection classes never reach the feedback loop.  The home column
         # stays open — the current placement was already accepted by the
         # stack, so "stay" must remain legal even for apps whose data
-        # source has since drifted out of budget.
+        # source has since drifted out of budget.  A bypassed (OPEN) level
+        # folds its conservative fallback premask here even with
+        # ``cfg.premask`` off: its interactive vet is out of the loop, so
+        # the premask is the only constraint it still exerts.
         for lv in levels:
+            if not cfg.premask and lv.name not in bp.bypassed:
+                continue
             t = time.perf_counter()
-            pre = lv.premask(problem)
+            pre = bp.premask(lv, problem)
             if pre is not None:
                 pre = np.asarray(pre, bool).copy()
                 pre[home_open, x0_np] = False
@@ -790,8 +891,9 @@ def cooperate(
         # on, the upper vets are no-op passes and packing decides).
         candidates = moved
         round_rej: dict[str, np.ndarray] = {}
-        for lv in levels:
-            rej = _vet_timed(lv, Proposal(x_np, x0_np, candidates), timings)
+        for lv in active:
+            rej = _vet_timed(lv, Proposal(x_np, x0_np, candidates), timings,
+                             bp)
             if rej.size:
                 # Defensive protocol clamp: a level may only reject its own
                 # candidates.  An id outside the candidate set (a plugin
@@ -811,12 +913,15 @@ def cooperate(
                     or (x_prev is not None and np.array_equal(x_np, x_prev))):
                 if cfg.restart_rounds > 0:
                     res = _restart_phase(
-                        cluster, problem, res, timed_solve, levels,
-                        timings, cfg.restart_rounds, t0 + wallclock, x0_np)
+                        cluster, problem, res, timed_solve, active,
+                        timings, cfg.restart_rounds, t0 + wallclock, x0_np,
+                        breakers=bp)
                 res = enforce_cost_budget(cluster, res, x0_np, cfg.move_cost,
-                                          cfg.cost_budget, levels, timings)
+                                          cfg.cost_budget, active, timings,
+                                          breakers=bp)
                 total = time.perf_counter() - t0
                 timings.rounds = rounds
+                bp.finish(timings)
                 _collect_level_counters(timings, levels)
                 res.extra["coop_timings"] = _finish_timings(timings, total)
                 return CooperationResult(res, use_variant, rounds,
@@ -862,8 +967,8 @@ def cooperate(
         # extra *standing* avoid rows (beyond the per-(app, dest) scatter).
         state = BusState(round=rounds, x=x_np, x0=x0_np, rejections=round_rej)
         extra_masks = []
-        for lv in levels:
-            extra = lv.feedback(state)
+        for lv in active:
+            extra = bp.feedback(lv, state)
             if extra is not None:
                 extra = np.asarray(extra, bool).copy()
                 extra[home_open, x0_np] = False  # staying home stays legal
@@ -883,8 +988,8 @@ def cooperate(
     # _revert_fixpoint; the batched pack already re-vetted tiers whose
     # returners arrived alongside surviving newcomers, this closes the
     # no-movers-left gap).
-    x_np = _revert_fixpoint(levels, np.asarray(res.assignment), x0_np,
-                            timings)
+    x_np = _revert_fixpoint(active, np.asarray(res.assignment), x0_np,
+                            timings, breakers=bp)
     x_final = jnp.asarray(x_np)
     # Reverting moves changes the mapping, so the solver's reported
     # objective is stale — recompute it against the *original* problem
@@ -894,9 +999,10 @@ def cooperate(
         num_moved=int(np.sum(x_np != x0_np)),
         objective=float(_objective(cluster.problem, x_final)))
     res = enforce_cost_budget(cluster, res, x0_np, cfg.move_cost,
-                              cfg.cost_budget, levels, timings)
+                              cfg.cost_budget, active, timings, breakers=bp)
     total = time.perf_counter() - t0
     timings.rounds = rounds
+    bp.finish(timings)
     _collect_level_counters(timings, levels)
     res.extra["coop_timings"] = _finish_timings(timings, total)
     return CooperationResult(res, use_variant, rounds, total_rejections,

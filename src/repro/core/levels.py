@@ -39,8 +39,9 @@ integration contract first-class:
     registry so a plugin level is one ``register_level`` call away.
 
   * ``CoopConfig`` — the consolidated knob record accepted by
-    ``cooperate()``, ``Sptlb.balance()``, and ``ControllerConfig`` (the
-    old keyword arguments survive as deprecated shims for one release).
+    ``cooperate()``, ``Sptlb.balance()``, and ``ControllerConfig``.  The
+    PR-5 deprecated kwarg shims are gone: the config record is the only
+    knob surface.
 
   * ``CoopTimings`` — the typed replacement for the cooperation timings
     dict: per-level sub-dicts keyed by level name, with mapping-style
@@ -63,7 +64,6 @@ derived from.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Callable, Literal, Optional
 
 import numpy as np
@@ -207,14 +207,18 @@ class CoopConfig:
     ``cooperate(..., config=...)`` replace the historical kwarg sprawl
     (variant / max_feedback_rounds / batch_moves / bucket_apps /
     premask_region / restart_rounds / plan / move_cost / cost_budget);
-    the old keywords still work as deprecated shims for one release.
+    the PR-5 shims for those keywords have been removed.
 
     ``timeout_s`` is the cooperation pass's wall-clock budget; None lets
     ``Sptlb.balance`` derive its historical ``3 x engine timeout``.
     ``levels`` names the scheduler stack (registry order matters); None is
     the default region+host stack.  ``plan`` / ``move_cost`` /
     ``cost_budget`` are the per-call dynamic inputs (the controller
-    replaces them every tick via ``dataclasses.replace``).
+    replaces them every tick via ``dataclasses.replace``).  ``breakers``
+    is an optional ``core.health.BreakerBoard``: when set, the bus runs
+    per-level circuit breakers (bypass + fallback premask for OPEN levels,
+    fail-closed vets, half-open probes); None keeps the fault machinery
+    completely out of the code path (bit-identical to PR-5 behaviour).
     """
 
     variant: Variant = "manual_cnst"
@@ -228,6 +232,7 @@ class CoopConfig:
     plan: object = None  # core.planner.PlanOutlook | None
     move_cost: Optional[np.ndarray] = None  # f32[N] per-app move pricing
     cost_budget: float = float("inf")
+    breakers: object = None  # core.health.BreakerBoard | None
 
     def hierarchy(self, override: Optional[Hierarchy] = None) -> Hierarchy:
         if override is not None:
@@ -235,15 +240,6 @@ class CoopConfig:
         if self.levels is None:
             return Hierarchy.default()
         return Hierarchy.from_names(self.levels)
-
-
-def warn_deprecated_kwarg(func: str, kwarg: str, instead: str) -> None:
-    warnings.warn(
-        f"{func}({kwarg}=...) is deprecated; pass CoopConfig({instead}=...) "
-        f"via the config= parameter instead (kept as a shim for one release)",
-        DeprecationWarning,
-        stacklevel=3,
-    )
 
 
 # -- typed timings with mapping back-compat ----------------------------------
@@ -284,6 +280,9 @@ class CoopTimings:
     round_costs: list = dataclasses.field(default_factory=list)
     premask: bool = False
     levels: dict = dataclasses.field(default_factory=dict)
+    # Circuit-breaker observability: {} unless CoopConfig.breakers is set,
+    # else per-level state/trip/probe snapshots plus this pass's bypasses.
+    breakers: dict = dataclasses.field(default_factory=dict)
 
     # -- construction helpers used by the bus --------------------------------
     @classmethod
@@ -316,6 +315,7 @@ class CoopTimings:
         "round_costs",
         "premask",
         "levels",
+        "breakers",
     )
 
     def _level_key(self, key: str):
@@ -370,6 +370,10 @@ class CoopTimings:
         pack counters, and the structured ``levels`` record itself."""
         out = list(self._FIELDS)
         out.remove("levels")
+        # Keep the flat record stable for fault-free passes: the breakers
+        # key only appears once a BreakerBoard actually ran.
+        if not self.breakers:
+            out.remove("breakers")
         for name in self.levels:
             out += [f"{name}_s", f"{name}_rejections"]
         out += list(_PACK_KEYS)

@@ -31,9 +31,9 @@ import numpy as np
 
 from repro.core import constraints, metrics
 from repro.core.greedy import GreedyConfig, solve_greedy
-from repro.core.hierarchy import (CooperationResult, Variant, cooperate,
+from repro.core.hierarchy import (CooperationResult, cooperate,
                                   enforce_cost_budget)
-from repro.core.levels import CoopConfig, Hierarchy, warn_deprecated_kwarg
+from repro.core.levels import CoopConfig, Hierarchy
 from repro.core.planner import PlanOutlook, movement_cost_of
 from repro.core.problem import Problem, bucket_size, pad_problem
 from repro.core.solver_local import LocalSearchConfig, SolveResult, solve_local
@@ -140,12 +140,6 @@ class Sptlb:
     def __init__(self, cluster: ClusterState):
         self.cluster = cluster
 
-    _LEGACY_BALANCE_KWARGS = {
-        "variant": "variant", "max_feedback_rounds": "max_rounds",
-        "batch_moves": "batch_moves", "bucket_apps": "bucket_apps",
-        "premask_region": "premask", "restart_rounds": "restart_rounds",
-    }
-
     def balance(
         self,
         engine: Engine = "local",
@@ -157,12 +151,6 @@ class Sptlb:
         plan: Optional[PlanOutlook] = None,
         move_cost: Optional[np.ndarray] = None,
         cost_budget: Optional[float] = None,
-        variant: Optional[Variant] = None,
-        max_feedback_rounds: Optional[int] = None,
-        batch_moves: Optional[int] = None,
-        bucket_apps: Optional[bool] = None,
-        premask_region: Optional[bool] = None,
-        restart_rounds: Optional[int] = None,
     ) -> BalanceDecision:
         """One balancing pass.
 
@@ -171,10 +159,10 @@ class Sptlb:
         scheduler-level stack (``config.levels`` names or an explicit
         ``hierarchy``), and the movement pricing; ``plan`` / ``move_cost``
         / ``cost_budget`` stay accepted per call because the controller
-        derives them every tick.  The historical keyword knobs (variant,
-        max_feedback_rounds, batch_moves, bucket_apps, premask_region,
-        restart_rounds) remain as deprecated shims for one release: they
-        warn and override the config.
+        derives them every tick.  The PR-5 deprecated keyword shims
+        (variant, max_feedback_rounds, batch_moves, bucket_apps,
+        premask_region, restart_rounds) have been removed — pass a
+        ``CoopConfig``.
 
         ``config.plan`` (a ``core.planner.PlanOutlook``) makes the pass
         proactive: the *solver* balances against the planning problem
@@ -187,16 +175,7 @@ class Sptlb:
         level's ``relax`` hook sees the plan (maintenance placement mode).
         """
         cfg = config if config is not None else CoopConfig()
-        legacy = dict(variant=variant, max_feedback_rounds=max_feedback_rounds,
-                      batch_moves=batch_moves, bucket_apps=bucket_apps,
-                      premask_region=premask_region,
-                      restart_rounds=restart_rounds)
-        for kwarg, field in self._LEGACY_BALANCE_KWARGS.items():
-            if legacy[kwarg] is not None:
-                warn_deprecated_kwarg("Sptlb.balance", kwarg, field)
-                cfg = dataclasses.replace(cfg, **{field: legacy[kwarg]})
-        # Per-call dynamic inputs (documented, not deprecated): the
-        # controller re-derives them every tick.
+        # Per-call dynamic inputs: the controller re-derives them every tick.
         if plan is not None:
             cfg = dataclasses.replace(cfg, plan=plan)
         if move_cost is not None:

@@ -56,6 +56,11 @@ class ClusterState:
     # locality scheduler level and the SLO scorecard).  None derives the
     # matrix from geometry via ``shard_affinity_of``.
     shard_affinity: np.ndarray | None = None
+    # External tick at which this telemetry was collected (the health
+    # monitor scores ``now - collected_at`` as staleness; producers that
+    # never re-stamp it simply read as always-fresh at the default 0 when
+    # ``now`` is also left at its default).
+    collected_at: int = 0
     # Memoized hierarchy precomputes (region worst-latency matrix, overlap
     # avoid, ...) keyed by the deriving function — see core/hierarchy.py.
     # ``init=False`` so every ``dataclasses.replace`` (capacity events,

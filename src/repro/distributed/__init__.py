@@ -2,7 +2,9 @@ from repro.distributed import sharding
 from repro.distributed.checkpoint import CheckpointManager
 from repro.distributed.compress import GradCompressor
 from repro.distributed.fault import (CapacityEvent, FaultInjector, Recovery,
-                                     apply_event, rebalance_after)
+                                     apply_event, degrade, rebalance,
+                                     rebalance_after)
 
-__all__ = ["sharding", "CheckpointManager", "GradCompressor", "CapacityEvent", "FaultInjector",
-           "Recovery", "apply_event", "rebalance_after"]
+__all__ = ["sharding", "CheckpointManager", "GradCompressor", "CapacityEvent",
+           "FaultInjector", "Recovery", "apply_event", "degrade", "rebalance",
+           "rebalance_after"]

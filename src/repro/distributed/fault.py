@@ -17,13 +17,28 @@ slots).  Failures and stragglers are *capacity events*:
                          again bounded by the movement budget, so scale-up
                          does not thrash placements.
 
+Capacity events are **one representation away from the simulator**: every
+``CapacityEvent`` converts (``to_timed``) into a ``sim.events.CapacityScale``,
+and all cluster rewrites go through the sim's knob/refresh contract
+(``sim.events.FleetState.refresh``) — one code path whether a tier degrades
+inside a fleet trajectory or under the training loop's one-shot recovery.
+Announced events (planned scale-ups, telemetry-detected stragglers) also
+publish ``core.planner.Advisory`` records, so a ``BalanceController`` fed by
+``FaultInjector.schedule`` anticipates them exactly like declared
+maintenance; hard host failures stay surprises.
+
 ``FaultInjector`` drives simulated events for tests/examples; ``Recovery``
 implements the restart path: restore latest checkpoint -> rebuild mesh over
 the surviving devices -> re-route streams via SPTLB.
+
+The pre-unification entry points ``apply_event`` and ``rebalance_after``
+(which rewrote tier capacity privately, bypassing the advisory channel) are
+deprecated shims over ``degrade`` / ``rebalance``.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, Optional
 
 import jax.numpy as jnp
@@ -31,6 +46,7 @@ import numpy as np
 
 from repro.core import ClusterState, CoopConfig, Sptlb
 from repro.core.solver_local import SolveResult
+from repro.sim.events import CapacityScale, FleetState, TimedEvent
 
 
 @dataclasses.dataclass
@@ -39,6 +55,29 @@ class CapacityEvent:
     tier: int
     fraction: float            # capacity delta as a fraction of the tier
     step: int = 0
+
+    @property
+    def factor(self) -> float:
+        """Multiplicative capacity factor this event applies to its tier."""
+        if self.kind == "scale_up":
+            return 1.0 + self.fraction
+        return 1.0 - self.fraction
+
+    def to_timed(self, *, base_scale: float = 1.0) -> CapacityScale:
+        """The ``sim.events.CapacityScale`` equivalent of this event.
+
+        ``CapacityScale.scale`` is absolute relative to as-built, so stacked
+        events on one tier must compose: pass the tier's standing scale as
+        ``base_scale`` (``FaultInjector.schedule`` does this bookkeeping).
+
+        Scale-ups are planned elasticity and stragglers are detected from
+        step-time telemetry before any re-solve runs, so both are
+        ``announced`` (they declare a ``core.planner.Advisory``); a hard
+        host failure is a surprise and declares nothing.
+        """
+        return CapacityScale(at=self.step, tier=self.tier,
+                             scale=float(base_scale) * self.factor,
+                             announced=self.kind != "host_failure")
 
 
 class FaultInjector:
@@ -63,43 +102,95 @@ class FaultInjector:
                 fraction=float(self.rng.uniform(0.05, 0.15)), step=step))
         return events
 
+    def schedule(self, steps: int) -> tuple[tuple[CapacityScale, ...], tuple]:
+        """Sample ``steps`` ticks and emit the unified representation:
+        ``(timed_events, advisories)``.
+
+        ``timed_events`` are ``sim.events.CapacityScale`` with per-tier
+        scales composed cumulatively (two 20% failures on one tier leave it
+        at 0.64x as-built), ready for a ``sim.Scenario``'s event list.
+        ``advisories`` are the announced subset's ``core.planner.Advisory``
+        records, ready for ``BalanceController.set_advisories`` — the same
+        channel declared maintenance rides (the PR-4 anticipation path).
+        """
+        scale = np.ones(self.num_tiers)
+        timed: list[CapacityScale] = []
+        for step in range(steps):
+            for ev in self.sample(step):
+                t = ev.to_timed(base_scale=float(scale[ev.tier]))
+                scale[ev.tier] = t.scale
+                timed.append(t)
+        advisories = tuple(
+            a for a in (t.declare() for t in timed) if a is not None)
+        return tuple(timed), advisories
+
+
+def _control_fleet(cluster: ClusterState) -> FleetState:
+    """A workload-less ``FleetState`` over a standalone cluster: just enough
+    world for the sim knob/refresh contract to rewrite capacity with."""
+    problem = cluster.problem
+    return FleetState(
+        cluster=cluster, wl=None, wl_cfg=None,
+        base_capacity=np.asarray(problem.capacity).copy(),
+        base_task_limit=np.asarray(problem.task_limit).copy(),
+        base_hosts=cluster.hosts_per_tier.copy(),
+        base_slo_allowed=np.asarray(problem.slo_allowed).copy(),
+        base_latency=cluster.region_latency.copy(),
+        tier_scale=np.ones(problem.num_tiers, np.float32))
+
+
+def degrade(cluster: ClusterState, *events: TimedEvent) -> ClusterState:
+    """Apply cluster-plane timed events (``CapacityScale``, ``RegionOutage``,
+    ``RegionRestore``) to a standalone cluster through the sim's
+    knob/refresh contract.  Workload-plane events (flash crowds, churn)
+    need a real fleet — the ``wl=None`` sentinel makes them fail fast."""
+    fleet = _control_fleet(cluster)
+    for ev in sorted(events, key=lambda e: e.at):
+        ev.apply(fleet)
+    return fleet.cluster
+
+
+def rebalance(cluster: ClusterState, *events,
+              engine: str = "local",
+              config: Optional[CoopConfig] = None,
+              ) -> tuple[ClusterState, SolveResult]:
+    """The paper's loop, triggered by infrastructure: capacity change ->
+    SPTLB re-solve (movement-bounded) -> new app->tier mapping.
+
+    Accepts ``CapacityEvent``s (converted via ``to_timed``) and/or timed
+    sim events directly; the degraded cluster is produced by ``degrade``,
+    so this is the same rewrite the fleet simulator performs.
+    """
+    timed = tuple(e.to_timed() if isinstance(e, CapacityEvent) else e
+                  for e in events)
+    degraded = degrade(cluster, *timed)
+    decision = Sptlb(degraded).balance(engine, config=config or CoopConfig())
+    new_problem = degraded.problem.with_assignment0(
+        jnp.asarray(decision.assignment))
+    rebalanced = dataclasses.replace(degraded, problem=new_problem)
+    return rebalanced, decision
+
 
 def apply_event(cluster: ClusterState, event: CapacityEvent) -> ClusterState:
-    """Shrink/extend tier capacity (and host count for hard failures)."""
-    problem = cluster.problem
-    cap = np.asarray(problem.capacity).copy()
-    klim = np.asarray(problem.task_limit).copy()
-    hosts = cluster.hosts_per_tier.copy()
-    t = event.tier
-    if event.kind in ("host_failure", "straggler"):
-        scale = 1.0 - event.fraction
-    else:                                           # scale_up
-        scale = 1.0 + event.fraction
-    cap[t] *= scale
-    klim[t] *= scale
-    if event.kind in ("host_failure", "scale_up"):
-        hosts[t] = max(1, int(round(hosts[t] * scale)))
-
-    new_problem = dataclasses.replace(
-        problem,
-        capacity=jnp.asarray(cap),
-        task_limit=jnp.asarray(klim))
-    return dataclasses.replace(cluster, problem=new_problem,
-                               hosts_per_tier=hosts)
+    """Deprecated: use ``degrade(cluster, event.to_timed())``."""
+    warnings.warn(
+        "distributed.fault.apply_event is deprecated: convert the event "
+        "with CapacityEvent.to_timed() and apply it with degrade(), which "
+        "routes through the sim event contract (sim.events.FleetState).",
+        DeprecationWarning, stacklevel=2)
+    return degrade(cluster, event.to_timed())
 
 
 def rebalance_after(cluster: ClusterState, event: CapacityEvent,
                     *, engine: str = "local",
                     variant: str = "manual_cnst") -> tuple[ClusterState, SolveResult]:
-    """The paper's loop, triggered by infrastructure: capacity change ->
-    SPTLB re-solve (movement-bounded) -> new app->tier mapping."""
-    degraded = apply_event(cluster, event)
-    decision = Sptlb(degraded).balance(
-        engine, config=CoopConfig(variant=variant))
-    new_problem = degraded.problem.with_assignment0(
-        jnp.asarray(decision.assignment))
-    rebalanced = dataclasses.replace(degraded, problem=new_problem)
-    return rebalanced, decision
+    """Deprecated: use ``rebalance(cluster, event, ...)``."""
+    warnings.warn(
+        "distributed.fault.rebalance_after is deprecated: use rebalance(), "
+        "which takes timed sim events and a CoopConfig.",
+        DeprecationWarning, stacklevel=2)
+    return rebalance(cluster, event, engine=engine,
+                     config=CoopConfig(variant=variant))
 
 
 @dataclasses.dataclass

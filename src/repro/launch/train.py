@@ -28,7 +28,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.distributed.checkpoint import CheckpointManager
-from repro.distributed.fault import CapacityEvent, rebalance_after
+from repro.distributed.fault import CapacityEvent, rebalance
 from repro.launch.mesh import make_host_mesh
 from repro.models import build_model, reduce_for_smoke
 from repro.streams import (PodSlice, StreamConfig, StreamRouter, TokenStream,
@@ -121,7 +121,7 @@ def main(argv=None):
                 print(f"[fault] host failure injected at step {step}")
                 event = CapacityEvent("host_failure", tier=2, fraction=0.2,
                                       step=step)
-                new_cluster, dec = rebalance_after(cluster, event)
+                new_cluster, dec = rebalance(cluster, event)
                 router.cluster = new_cluster
                 router.assignment = np.asarray(dec.assignment)
                 print(f"[sptlb] rebalanced: moved {dec.projected.num_moved} "

@@ -6,26 +6,34 @@ reconfiguration cost under live load shifts) that a one-shot solve cannot
 provide.  See ``sim.scenario`` for the registry and
 ``examples/simulate_fleet.py`` for the how-to.
 """
-from repro.sim.events import (CapacityScale, ChurnRate, FlashCrowd,
-                              FleetState, RegionOutage, RegionRestore,
-                              ShardSkew, TimedEvent)
-from repro.sim.harness import (SIM_CONTROLLER, build_fleet, place_arrivals,
-                               run_pair, run_scenario)
+from repro.sim.events import (CapacityScale, ChurnRate, ControlPlaneFault,
+                              FaultyLevel, FlashCrowd, FleetState,
+                              LevelFault, RegionOutage, RegionRestore,
+                              ShardSkew, SolverBrownout, TelemetryBlackout,
+                              TelemetryCorruption, TimedEvent,
+                              faulty_hierarchy)
+from repro.sim.harness import (CHAOS_CONTROLLER, SIM_CONTROLLER, build_fleet,
+                               place_arrivals, run_chaos_pair, run_pair,
+                               run_scenario, strip_chaos)
 from repro.sim.scenario import (Scenario, get_scenario, list_scenarios,
                                 scenario)
-from repro.sim.slo import SimReport, SloAccountant, TickStats, compare
+from repro.sim.slo import (SimReport, SloAccountant, TickStats, chaos_compare,
+                           compare, count_unsafe_moves)
 from repro.sim.workload import (WorkloadConfig, WorkloadState,
                                 inject_flash_crowd, make_workload_state,
                                 set_churn_rates, workload_step,
                                 workload_trace_count)
 
 __all__ = [
-    "CapacityScale", "ChurnRate", "FlashCrowd", "FleetState", "RegionOutage",
-    "RegionRestore", "ShardSkew", "TimedEvent",
-    "SIM_CONTROLLER", "build_fleet", "place_arrivals", "run_pair",
-    "run_scenario",
+    "CapacityScale", "ChurnRate", "ControlPlaneFault", "FaultyLevel",
+    "FlashCrowd", "FleetState", "LevelFault", "RegionOutage",
+    "RegionRestore", "ShardSkew", "SolverBrownout", "TelemetryBlackout",
+    "TelemetryCorruption", "TimedEvent", "faulty_hierarchy",
+    "CHAOS_CONTROLLER", "SIM_CONTROLLER", "build_fleet", "place_arrivals",
+    "run_chaos_pair", "run_pair", "run_scenario", "strip_chaos",
     "Scenario", "get_scenario", "list_scenarios", "scenario",
-    "SimReport", "SloAccountant", "TickStats", "compare",
+    "SimReport", "SloAccountant", "TickStats", "chaos_compare", "compare",
+    "count_unsafe_moves",
     "WorkloadConfig", "WorkloadState", "inject_flash_crowd",
     "make_workload_state", "set_churn_rates", "workload_step",
     "workload_trace_count",

@@ -12,6 +12,16 @@ contract), and workload changes go through the traced-state helpers in
 recomputed from the base (as-built) arrays plus the standing knobs
 (per-tier capacity scale, down regions).  Events only edit knobs and call
 ``refresh`` — so stacked events compose and restores are exact.
+
+Chaos events (``ControlPlaneFault`` subclasses) are different in kind:
+they fault the *control plane* — the telemetry channel, the solver's
+wall-clock, a scheduler level — never the cluster itself.  They set the
+fleet's chaos-window knobs, which the harness reads every tick to shape
+what the controller *observes* (frozen or corrupted telemetry) and how it
+*solves* (zeroed solver budget, a faulty level wrapper).  The true
+cluster, scored by the SLO accountant, is untouched; and a fault in your
+own control plane does not announce itself, so none of them declare an
+advisory.
 """
 from __future__ import annotations
 
@@ -55,6 +65,23 @@ class FleetState:
     declared_events: tuple = ()
     rng: np.random.Generator = dataclasses.field(
         default_factory=lambda: np.random.default_rng(0))
+    # Chaos windows (``ControlPlaneFault`` events set these; the harness
+    # reads them each tick).  ``*_until`` are exclusive end ticks: the
+    # fault is active while ``tick < until``.
+    blackout_until: int = 0        # observed telemetry frozen
+    corrupt_until: int = 0         # observed demand rows corrupted
+    corrupt_frac: float = 0.0
+    corrupt_magnitude: float = 0.0
+    brownout_until: int = 0        # controller solver wall-clock zeroed
+    level_fault_until: int = 0     # a scheduler level wrapped faulty
+    level_fault_level: str = ""
+    level_fault_mode: str = "raise"
+    # Corruption draws its own generator: the main ``rng`` feeds workload
+    # events (flash-crowd target choice) that must stay identical between
+    # the chaos run and its fault-free oracle twin, so chaos must never
+    # advance it.
+    chaos_rng: np.random.Generator = dataclasses.field(
+        default_factory=lambda: np.random.default_rng(1))
 
     def refresh(self) -> None:
         """Recompute the effective cluster from base arrays + knobs."""
@@ -216,6 +243,140 @@ class ChurnRate(TimedEvent):
         fleet.wl = W.set_churn_rates(
             fleet.wl, arrival_rate=self.arrival_rate,
             retire_rate=self.retire_rate)
+
+
+# ---------------------------------------------------------------------------
+# control-plane chaos events
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ControlPlaneFault(TimedEvent):
+    """Base for chaos events: a fault window over the *control plane*.
+
+    Sets fleet chaos knobs for ``ticks`` ticks starting at ``at``; the true
+    cluster is never touched and no advisory is ever declared (``declare``
+    stays None — surprises by construction).
+    """
+
+    ticks: int = 4
+
+    @property
+    def until(self) -> int:
+        return self.at + self.ticks
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetryBlackout(ControlPlaneFault):
+    """The collection pipeline stops: the controller keeps re-reading the
+    last snapshot it got (with its original ``collected_at`` stamp), so
+    observed staleness grows tick by tick while the true fleet drifts."""
+
+    def apply(self, fleet: FleetState) -> None:
+        fleet.blackout_until = max(fleet.blackout_until, self.until)
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetryCorruption(ControlPlaneFault):
+    """A ``frac`` of live apps report garbage demand (``magnitude``x their
+    real reading) each tick of the window — fresh-but-implausible
+    telemetry, the case the monitor's quarantine exists for."""
+
+    frac: float = 0.15
+    magnitude: float = 50.0
+
+    def apply(self, fleet: FleetState) -> None:
+        fleet.corrupt_until = max(fleet.corrupt_until, self.until)
+        fleet.corrupt_frac = self.frac
+        fleet.corrupt_magnitude = self.magnitude
+
+
+@dataclasses.dataclass(frozen=True)
+class SolverBrownout(ControlPlaneFault):
+    """The solver fleet loses its compute budget: the controller's
+    wall-clock allowance drops to zero, so cooperation passes exit on
+    timeout with whatever the first (minimal) solve produced."""
+
+    def apply(self, fleet: FleetState) -> None:
+        fleet.brownout_until = max(fleet.brownout_until, self.until)
+
+
+@dataclasses.dataclass(frozen=True)
+class LevelFault(ControlPlaneFault):
+    """A scheduler level goes bad: every hook raises (``mode='raise'``) or
+    its vet rejects every candidate (``mode='reject_all'``) — the two
+    deterministic failure shapes the per-level circuit breakers trip on.
+    Wall-clock hangs are deliberately not simulated (the sim must stay
+    machine-independent); ``BreakerConfig.level_timeout_s`` covers those
+    in production."""
+
+    level: str = "host"
+    mode: str = "raise"            # "raise" | "reject_all"
+
+    def apply(self, fleet: FleetState) -> None:
+        fleet.level_fault_until = max(fleet.level_fault_until, self.until)
+        fleet.level_fault_level = self.level
+        fleet.level_fault_mode = self.mode
+
+
+class FaultyLevel:
+    """Wraps a real ``SchedulerLevel`` in a deterministic failure mode.
+
+    ``raise``: premask/vet/feedback raise (the bus's breaker mediator
+    fails the pass closed — all candidates rejected, fallback premask).
+    ``reject_all``: the level answers politely but vetoes every candidate
+    (what ``BreakerConfig.reject_all_threshold`` exists for).
+    """
+
+    def __init__(self, inner, mode: str = "raise"):
+        assert mode in ("raise", "reject_all"), mode
+        self.inner = inner
+        self.name = inner.name
+        self.mode = mode
+
+    def _fault(self, hook: str):
+        raise RuntimeError(f"chaos: level {self.name!r} {hook} fault")
+
+    def premask(self, problem):
+        if self.mode == "raise":
+            self._fault("premask")
+        return self.inner.premask(problem)
+
+    def vet(self, proposal):
+        if self.mode == "raise":
+            self._fault("vet")
+        return np.asarray(proposal.candidates, np.int64)
+
+    def feedback(self, state):
+        if self.mode == "raise":
+            self._fault("feedback")
+        return None
+
+    def relax(self, plan, cluster) -> None:
+        self.inner.relax(plan, cluster)
+
+    def counters(self) -> dict:
+        return self.inner.counters()
+
+    def device_time_s(self) -> float:
+        return self.inner.device_time_s()
+
+
+def faulty_hierarchy(level_names, fault_level: str, mode: str = "raise"):
+    """A ``core.levels.Hierarchy`` with ``fault_level`` wrapped in
+    ``FaultyLevel`` — what the harness swaps into the controller's
+    ``hierarchy_override`` for the duration of a ``LevelFault`` window."""
+    from repro.core.levels import DEFAULT_LEVELS, Hierarchy, level_factory
+
+    names = tuple(level_names) if level_names else DEFAULT_LEVELS
+
+    def wrap(name):
+        factory = level_factory(name)
+        if name != fault_level:
+            return factory
+        return lambda cluster: FaultyLevel(factory(cluster), mode)
+
+    return Hierarchy(tuple(wrap(n) for n in names))
 
 
 def events_at(events, tick: int):

@@ -26,14 +26,17 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.controller import BalanceController, ControllerConfig
+from repro.core.controller import (BalanceController, ControllerConfig,
+                                   FaultToleranceConfig)
 from repro.core.hierarchy import RegionScheduler
 from repro.core.levels import DEFAULT_LEVELS
 from repro.core.solver_local import local_search_trace_count
-from repro.core.telemetry import FIG3_INITIAL_UTIL, generate_cluster
-from repro.sim.events import FleetState, events_at
+from repro.core.telemetry import FIG3_INITIAL_UTIL, ClusterState, generate_cluster
+from repro.sim.events import (ControlPlaneFault, FleetState, events_at,
+                              faulty_hierarchy)
 from repro.sim.scenario import Scenario
-from repro.sim.slo import SimReport, SloAccountant, compare
+from repro.sim.slo import (SimReport, SloAccountant, chaos_compare, compare,
+                           count_unsafe_moves)
 from repro.sim.workload import (make_workload_state, workload_step,
                                 workload_trace_count)
 
@@ -41,6 +44,13 @@ from repro.sim.workload import (make_workload_state, workload_step,
 # (the controller runs hundreds of times per trajectory), quick cooldown.
 SIM_CONTROLLER = ControllerConfig(trigger_d2b=0.15, trigger_over_ideal=0.05,
                                   cooldown_rounds=2, timeout_s=4)
+
+# Chaos scenarios default to the degraded-mode control plane armed: the
+# whole point is watching the telemetry monitor / breakers / mode machine
+# absorb the faults.  Callers may still pass a fault=None config to watch
+# an unprotected controller get hurt.
+CHAOS_CONTROLLER = dataclasses.replace(SIM_CONTROLLER,
+                                       fault=FaultToleranceConfig())
 
 
 def build_fleet(sc: Scenario) -> FleetState:
@@ -140,6 +150,65 @@ def place_arrivals(fleet: FleetState, arrivals: np.ndarray) -> np.ndarray:
     return x
 
 
+# -- chaos machinery: what the controller observes vs what is true ----------
+
+def _corrupt_telemetry(obs: ClusterState, fleet: FleetState) -> ClusterState:
+    """Garble a fraction of live apps' demand readings (observed channel
+    only).  Draws on ``fleet.chaos_rng`` — never ``fleet.rng``, which must
+    stay bit-synchronized with the fault-free oracle run."""
+    p = obs.problem
+    demand = np.asarray(p.demand, np.float32).copy()
+    live = np.where(np.asarray(p.valid))[0]
+    k = max(1, int(round(fleet.corrupt_frac * live.size)))
+    ids = fleet.chaos_rng.choice(live, size=min(k, live.size), replace=False)
+    demand[ids] *= fleet.corrupt_magnitude
+    return dataclasses.replace(
+        obs, problem=dataclasses.replace(p, demand=jnp.asarray(demand)))
+
+
+def _observe(fleet: FleetState, observed: ClusterState | None,
+             tick: int) -> ClusterState:
+    """The controller's telemetry channel for this tick.
+
+    Normal operation: the true cluster, stamped ``collected_at=tick``
+    (and corrupted when a ``TelemetryCorruption`` window is active —
+    corruption is a plausibility fault, not a staleness one, so the stamp
+    stays fresh).  During a ``TelemetryBlackout`` window the previous
+    snapshot is re-served with its original stamp, growing staleness; only
+    ``assignment0`` is carried forward from the truth, because placement
+    is the controller's *own action record*, not telemetry.  A blackout
+    declared at tick 0 has no snapshot to freeze and passes tick 0
+    through fresh.
+    """
+    if tick < fleet.blackout_until and observed is not None:
+        return dataclasses.replace(
+            observed, problem=observed.problem.with_assignment0(
+                fleet.cluster.problem.assignment0))
+    obs = dataclasses.replace(fleet.cluster, collected_at=tick)
+    if tick < fleet.corrupt_until:
+        obs = _corrupt_telemetry(obs, fleet)
+    return obs
+
+
+def _apply_fault_windows(ctl: BalanceController, fleet: FleetState,
+                         tick: int, base_cfg: ControllerConfig) -> None:
+    """Arm/disarm the solver-side fault windows for this tick: a brownout
+    zeroes the controller's solver wall-clock budget, a level fault swaps
+    a ``FaultyLevel``-wrapped hierarchy into ``hierarchy_override``."""
+    if tick < fleet.brownout_until:
+        if ctl.config.timeout_s != 0:
+            ctl.config = dataclasses.replace(base_cfg, timeout_s=0)
+    elif ctl.config is not base_cfg:
+        ctl.config = base_cfg
+    if tick < fleet.level_fault_until:
+        if ctl.hierarchy_override is None:
+            ctl.hierarchy_override = faulty_hierarchy(
+                base_cfg.coop.levels, fleet.level_fault_level,
+                fleet.level_fault_mode)
+    else:
+        ctl.hierarchy_override = None
+
+
 def run_scenario(sc: Scenario, *, policy: str = "balanced",
                  config: ControllerConfig | None = None,
                  anticipation: bool = True,
@@ -153,10 +222,12 @@ def run_scenario(sc: Scenario, *, policy: str = "balanced",
     — so the proactive evacuation is judged against what it spends.
     """
     assert policy in ("balanced", "static"), policy
+    has_chaos = sc.chaos or any(isinstance(e, ControlPlaneFault)
+                                for e in sc.events)
     fleet = build_fleet(sc)
     ctl = None
     if policy == "balanced":
-        cfg = config or SIM_CONTROLLER
+        cfg = config or (CHAOS_CONTROLLER if has_chaos else SIM_CONTROLLER)
         if sc.move_budget is not None and cfg.movement_cost_budget is None:
             cfg = dataclasses.replace(cfg, movement_cost_budget=sc.move_budget)
         if sc.levels is not None and cfg.coop.levels is None:
@@ -171,6 +242,8 @@ def run_scenario(sc: Scenario, *, policy: str = "balanced",
     acct = SloAccountant()
     solver_traces0 = local_search_trace_count()
     wl_traces0 = workload_trace_count()
+    observed: ClusterState | None = None   # chaos telemetry channel
+    base_cfg = ctl.config if ctl is not None else None
 
     for tick in range(sc.ticks):
         # 1. Advance demand on device (one compiled step for the whole run).
@@ -196,7 +269,34 @@ def run_scenario(sc: Scenario, *, policy: str = "balanced",
                     jnp.asarray(x0)))
 
         # 4. Controller decides; the applied mapping becomes assignment0.
-        if ctl is not None:
+        if ctl is not None and has_chaos:
+            # Chaos: the controller plans on the *observed* channel (frozen
+            # or corrupted telemetry) while the accountant scores the true
+            # cluster.  Committed moves transplant back onto the truth —
+            # placement is an action, not a reading — and every applied
+            # move is checked for true-world safety.
+            observed = _observe(fleet, observed, tick)
+            _apply_fault_windows(ctl, fleet, tick, base_cfg)
+            x_before = np.asarray(fleet.cluster.problem.assignment0)
+            evr = ctl.tick(observed, now=tick,
+                           collected_at=observed.collected_at)
+            unsafe = 0
+            if evr.applied:
+                committed = np.asarray(ctl.cluster.problem.assignment0)
+                unsafe = count_unsafe_moves(fleet.cluster.problem,
+                                            x_before, committed)
+                fleet.cluster = dataclasses.replace(
+                    fleet.cluster,
+                    problem=fleet.cluster.problem.with_assignment0(
+                        jnp.asarray(committed)))
+            stat = acct.observe(
+                fleet.cluster, moved=evr.moved if evr.applied else 0,
+                applied=evr.applied, triggered=evr.triggered,
+                solve_s=evr.time_s,
+                movement_cost=evr.movement_cost if evr.applied else 0.0,
+                budget_limited=evr.budget_limited, unsafe_moves=unsafe,
+                mode=evr.mode, health_score=evr.health_score)
+        elif ctl is not None:
             evr = ctl.tick(fleet.cluster, now=tick)
             fleet.cluster = ctl.cluster
             stat = acct.observe(
@@ -204,13 +304,15 @@ def run_scenario(sc: Scenario, *, policy: str = "balanced",
                 applied=evr.applied, triggered=evr.triggered,
                 solve_s=evr.time_s,
                 movement_cost=evr.movement_cost if evr.applied else 0.0,
-                budget_limited=evr.budget_limited)
+                budget_limited=evr.budget_limited,
+                mode=evr.mode, health_score=evr.health_score)
         else:
             stat = acct.observe(fleet.cluster)
         if verbose:
+            mode = f" [{stat.mode}]" if stat.mode != "normal" else ""
             print(f"  t={tick:4d} live={stat.live_apps:5d} "
                   f"d2b={stat.d2b:.3f} slo_viol={stat.slo_violating_apps:4d} "
-                  f"over_ideal={stat.over_ideal_tiers} "
+                  f"over_ideal={stat.over_ideal_tiers}{mode} "
                   f"{'MOVED ' + str(stat.moved) if stat.applied else ''}")
 
     report = acct.report(sc.name, policy)
@@ -241,4 +343,37 @@ def run_pair(sc: Scenario, *, config: ControllerConfig | None = None,
         "baseline": baseline,
         "balanced": balanced,
         "compare": compare(baseline, balanced),
+    }
+
+
+def strip_chaos(sc: Scenario) -> Scenario:
+    """The fault-free oracle twin of a chaos scenario: same seed, same
+    workload process, same cluster events — only the control-plane faults
+    removed.  Both runs draw flash-crowd targets from the same ``rng``
+    stream (chaos consumes ``chaos_rng``, never ``rng``), so the
+    trajectories are bit-identical up to the controller's decisions."""
+    events = tuple(e for e in sc.events
+                   if not isinstance(e, ControlPlaneFault))
+    return dataclasses.replace(sc, events=events, chaos=False)
+
+
+def run_chaos_pair(sc: Scenario, *, config: ControllerConfig | None = None,
+                   verbose: bool = False) -> dict:
+    """A chaos scenario three ways: degraded (faults live), oracle (faults
+    stripped, same trajectory), and the static baseline.  The ``chaos``
+    record is the degraded-vs-oracle scorecard the regression gate pins
+    (zero unsafe moves, bounded violation ratio, recovery to NORMAL)."""
+    cfg = config or CHAOS_CONTROLLER
+    oracle_sc = strip_chaos(sc)
+    degraded = run_scenario(sc, policy="balanced", config=cfg,
+                            verbose=verbose)
+    oracle = run_scenario(oracle_sc, policy="balanced", config=cfg,
+                          verbose=verbose)
+    baseline = run_scenario(oracle_sc, policy="static", verbose=verbose)
+    return {
+        "degraded": degraded,
+        "oracle": oracle,
+        "baseline": baseline,
+        "chaos": chaos_compare(degraded, oracle),
+        "compare": compare(baseline, degraded),
     }

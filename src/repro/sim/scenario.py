@@ -38,7 +38,7 @@ from typing import Callable
 
 from repro.sim.events import (CapacityScale, ChurnRate, FlashCrowd,
                               RegionOutage, RegionRestore, ShardSkew,
-                              TimedEvent)
+                              SolverBrownout, TelemetryBlackout, TimedEvent)
 from repro.sim.workload import WorkloadConfig
 
 
@@ -69,6 +69,11 @@ class Scenario:
     # balanced state under ideal through normal swings — violation ticks
     # then measure imbalance, not global overload.
     util_scale: float = 0.75
+    # Chaos scenario: contains control-plane fault windows (the harness
+    # defaults the controller to the fault-tolerant CHAOS_CONTROLLER and
+    # routes telemetry through the observed channel).  ``strip_chaos``
+    # clears this on the oracle twin.
+    chaos: bool = False
     seed: int = 0
 
     @property
@@ -196,6 +201,88 @@ def _shard_skew(num_apps: int, ticks: int, seed: int) -> Scenario:
                                 flash_decay=0.88),
         events=(ShardSkew(at=ticks // 4, region=2, magnitude=5.0),
                 ShardSkew(at=(5 * ticks) // 8, region=4, magnitude=6.0)))
+
+
+# ---------------------------------------------------------------------------
+# chaos family: control-plane fault windows (PR 6 degraded-mode acceptance)
+# ---------------------------------------------------------------------------
+
+def _chaos_window(ticks: int) -> tuple[int, int]:
+    """(start, duration) for a fault window: late enough that the
+    controller has settled, long enough that telemetry staleness crosses
+    the blind threshold (HealthConfig.blind_after=5), early enough that
+    the post-fault tail covers the hysteretic recovery to NORMAL
+    (~recover_ticks per mode step)."""
+    return max(2, ticks // 4), max(5, ticks // 5)
+
+
+@scenario("telemetry_blackout", "collection stops mid-run while a surprise "
+                                "flash crowd hits: the controller must "
+                                "degrade to SAFE instead of balancing blind")
+def _telemetry_blackout(num_apps: int, ticks: int, seed: int) -> Scenario:
+    t0, dur = _chaos_window(ticks)
+    return Scenario(
+        name="telemetry_blackout", description="", ticks=ticks,
+        num_apps=num_apps, seed=seed, chaos=True,
+        workload=WorkloadConfig(period=max(16, ticks // 2),
+                                diurnal_amp=0.20, burst_sigma=0.12,
+                                flash_decay=0.88),
+        events=(
+            # A visible crowd before the lights go out...
+            FlashCrowd(at=max(0, t0 - 2), frac=0.06, magnitude=5.0),
+            TelemetryBlackout(at=t0, ticks=dur),
+            # ...and an invisible one while they are out: the truth drifts
+            # away from the frozen snapshot the controller keeps re-reading.
+            FlashCrowd(at=t0 + 2, frac=0.06, magnitude=6.0),
+        ))
+
+
+@scenario("solver_brownout", "the solver fleet loses its compute budget "
+                             "during a flash crowd: cooperation passes time "
+                             "out and solver distress drives the mode down")
+def _solver_brownout(num_apps: int, ticks: int, seed: int) -> Scenario:
+    t0, dur = _chaos_window(ticks)
+    return Scenario(
+        name="solver_brownout", description="", ticks=ticks,
+        num_apps=num_apps, seed=seed, chaos=True,
+        workload=WorkloadConfig(period=max(16, ticks // 2),
+                                diurnal_amp=0.20, burst_sigma=0.12,
+                                flash_decay=0.90),
+        events=(
+            # The crowd lands just before the brownout so the controller
+            # keeps being *asked* to solve while it cannot.
+            FlashCrowd(at=max(0, t0 - 1), frac=0.10, magnitude=7.0),
+            SolverBrownout(at=t0, ticks=dur),
+            FlashCrowd(at=t0 + dur // 2, frac=0.05, magnitude=6.0),
+        ))
+
+
+@scenario("cascading_outage", "blackout, then a region dies unseen, then a "
+                              "flash crowd on recovery: the worst day the "
+                              "degraded-mode control plane is designed for")
+def _cascading_outage(num_apps: int, ticks: int, seed: int) -> Scenario:
+    t0, dur = _chaos_window(ticks)
+    return Scenario(
+        name="cascading_outage", description="", ticks=ticks,
+        num_apps=num_apps, seed=seed, chaos=True,
+        workload=WorkloadConfig(period=max(16, ticks // 2),
+                                diurnal_amp=0.15, burst_sigma=0.10,
+                                flash_decay=0.88),
+        events=(
+            TelemetryBlackout(at=t0, ticks=dur),
+            # The outage strikes while the controller is blind (and, by
+            # then, in SAFE holding still — the frozen snapshot shows no
+            # strands, so it must not guess).  Unannounced: a surprise has
+            # no advisory.
+            RegionOutage(at=t0 + dur // 2, region=0, announced=False),
+            # Telemetry returns at t0+dur: the controller finally sees the
+            # stranded apps and evacuates them under SAFE/CONSERVATIVE
+            # movement restrictions while its health score recovers...
+            FlashCrowd(at=t0 + dur + 2, frac=0.05, magnitude=6.0),
+            # ...and the region comes back late in the run.
+            RegionRestore(at=max(t0 + dur + 3, (3 * ticks) // 4),
+                          announced=False),
+        ))
 
 
 @scenario("churn_heavy", "app arrivals/retirements over a standby pool "

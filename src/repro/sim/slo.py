@@ -68,6 +68,14 @@ class TickStats:
     # level's minimum of their data-shard mass (every window/join reads
     # remote state) — what the shard_skew scenario's third level protects.
     shard_misplaced_apps: int = 0
+    # Degraded-mode accounting (chaos scenarios): moves the controller
+    # committed this tick whose *true* destination was SLO-ineligible or
+    # over hard capacity (the controller planned them on faulted
+    # telemetry), plus the operating mode / composite health score the
+    # controller reported.
+    unsafe_moves: int = 0
+    mode: str = "normal"
+    health_score: float = 1.0
 
 
 def score_cluster(problem: Problem) -> dict:
@@ -95,6 +103,31 @@ def score_cluster(problem: Problem) -> dict:
     }
 
 
+def count_unsafe_moves(problem: Problem, x_before, x_after) -> int:
+    """Moves from ``x_before`` to ``x_after`` whose destination is unsafe
+    *in this problem's (true) world*: an SLO-ineligible tier, or a tier
+    over hard capacity under the true demand after the moves land.
+
+    A controller planning on healthy telemetry cannot commit these (the
+    solver enforces both as hard constraints on the view it sees); under a
+    telemetry fault the view and the world diverge, and this is the metric
+    that prices the divergence.  The degraded-mode machinery exists to
+    keep it at zero — the chaos gates pin it there.
+    """
+    x0 = np.asarray(x_before, np.int64)
+    x1 = np.asarray(x_after, np.int64)
+    valid = np.asarray(problem.valid, bool)
+    moved = np.where((x0 != x1) & valid)[0]
+    if moved.size == 0:
+        return 0
+    slo_ok = np.asarray(problem.slo_allowed)[
+        x1[moved], np.asarray(problem.slo)[moved]]
+    uf, tf = utilization_fraction(problem, x1)
+    over_cap = (np.max(np.asarray(uf), axis=-1) > 1.0 + EPS) | (
+        np.asarray(tf) > 1.0 + EPS)
+    return int(np.sum(~slo_ok | over_cap[x1[moved]]))
+
+
 class SloAccountant:
     """Accumulates per-tick stats; ``report`` freezes them into a SimReport."""
 
@@ -104,7 +137,9 @@ class SloAccountant:
     def observe(self, cluster: ClusterState, *, moved: int = 0,
                 applied: bool = False, triggered: bool = False,
                 solve_s: float = 0.0, movement_cost: float = 0.0,
-                budget_limited: bool = False) -> TickStats:
+                budget_limited: bool = False, unsafe_moves: int = 0,
+                mode: str = "normal",
+                health_score: float = 1.0) -> TickStats:
         s = score_cluster(cluster.problem)
         p = cluster.problem
         worst = RegionScheduler(cluster)._worst_ms   # memoized on the cluster
@@ -123,7 +158,8 @@ class SloAccountant:
                          budget_limited=budget_limited,
                          region_breach_apps=int(np.sum(breach & valid)),
                          shard_misplaced_apps=int(np.sum(misplaced & valid)),
-                         **s)
+                         unsafe_moves=unsafe_moves, mode=mode,
+                         health_score=health_score, **s)
         self.ticks.append(stat)
         return stat
 
@@ -171,6 +207,12 @@ class SimReport:
                 t.shard_misplaced_apps for t in ts),
             "rebalances": sum(1 for t in ts if t.applied),
             "triggers": sum(1 for t in ts if t.triggered),
+            # Degraded-mode accounting: unsafe moves committed on faulted
+            # telemetry, and ticks spent per operating mode (a fault-free
+            # run reads {"normal": ticks}).
+            "unsafe_moves": sum(t.unsafe_moves for t in ts),
+            "mode_ticks": {m: sum(1 for t in ts if t.mode == m)
+                           for m in dict.fromkeys(t.mode for t in ts)},
             "mean_d2b": float(d2b.mean()),
             "peak_d2b": float(d2b.max()),
             "final_d2b": float(d2b[-1]),
@@ -188,6 +230,8 @@ class SimReport:
             "moved": [t.moved if t.applied else 0 for t in self.ticks],
             "movement_cost": [round(t.movement_cost, 3) if t.applied else 0.0
                               for t in self.ticks],
+            "mode": [t.mode for t in self.ticks],
+            "health_score": [round(t.health_score, 3) for t in self.ticks],
         }
 
 
@@ -242,4 +286,44 @@ def compare(baseline: SimReport, balanced: SimReport) -> dict:
             "baseline": b["shard_misplaced_app_ticks"],
             "balanced": c["shard_misplaced_app_ticks"],
             "ratio": ratio("shard_misplaced_app_ticks")},
+    }
+
+
+def chaos_compare(degraded: SimReport, oracle: SimReport) -> dict:
+    """Degraded-vs-oracle scorecard for a chaos scenario.
+
+    ``degraded`` ran the scenario with its control-plane faults;
+    ``oracle`` ran the *same trajectory* with the faults stripped (same
+    seed, same workload, same cluster events — perfect telemetry and a
+    healthy solver).  The gap is the price of flying blind; the gate
+    asserts the degraded controller pays it in *held balance*, never in
+    unsafe moves.
+    """
+    d, o = degraded.summary(), oracle.summary()
+    audit = d.get("audit", {})
+    transitions = audit.get("mode_transitions", [])
+    degraded_ticks = sum(n for m, n in d["mode_ticks"].items()
+                         if m != "normal")
+    return {
+        "unsafe_moves": d["unsafe_moves"],
+        # Violation integral, degraded / oracle: how much SLO ground the
+        # faults cost.  The max(1, ...) floor keeps a perfect oracle from
+        # reading as an infinite ratio.
+        "degraded_vs_oracle": {
+            "degraded": d["slo_violation_ticks"],
+            "oracle": o["slo_violation_ticks"],
+            "ratio": d["slo_violation_ticks"]
+            / max(1, o["slo_violation_ticks"])},
+        "mode_ticks": d["mode_ticks"],
+        "degraded_ticks": degraded_ticks,
+        "mode_transitions": transitions,
+        "modes_entered": sorted({t["to"] for t in transitions}),
+        # Did the controller come back?  Final mode NORMAL after having
+        # actually degraded (a run that never left NORMAL never proved
+        # anything — the chaos tests assert degraded_ticks > 0 separately).
+        "recovered": audit.get("mode", "normal") == "normal",
+        "breaker_trips": audit.get("breaker_trips", 0),
+        "telemetry_quarantined": audit.get("telemetry_quarantined", 0),
+        "budget_overruns": d["budget_overruns"],
+        "moves": {"degraded": d["total_moves"], "oracle": o["total_moves"]},
     }

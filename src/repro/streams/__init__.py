@@ -1,6 +1,8 @@
 from repro.streams.app import StreamApp, demo_apps
-from repro.streams.pipeline import Prefetcher, StreamConfig, TokenStream
+from repro.streams.pipeline import (BackpressureError, Prefetcher,
+                                    PrefetchStats, StreamConfig, TokenStream)
 from repro.streams.router import PodSlice, StreamRouter, build_cluster
 
-__all__ = ["StreamApp", "demo_apps", "Prefetcher", "StreamConfig",
-           "TokenStream", "PodSlice", "StreamRouter", "build_cluster"]
+__all__ = ["StreamApp", "demo_apps", "BackpressureError", "Prefetcher",
+           "PrefetchStats", "StreamConfig", "TokenStream", "PodSlice",
+           "StreamRouter", "build_cluster"]

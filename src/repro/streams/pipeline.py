@@ -31,6 +31,35 @@ class StreamConfig:
     num_partitions: int = 16
     seed: int = 0
     prefetch: int = 2
+    # Backpressure policy: a ``put`` that cannot place a batch within
+    # ``stall_timeout_s`` is one stall; ``max_stalls`` *consecutive* stalls
+    # mean the consumer is wedged, not slow, and the prefetcher fails loudly
+    # (``BackpressureError``) instead of spinning forever.  0 disables.
+    stall_timeout_s: float = 1.0
+    max_stalls: int = 600
+
+
+class BackpressureError(RuntimeError):
+    """The prefetch consumer stopped draining: ``StreamConfig.max_stalls``
+    consecutive put timeouts elapsed with the queue still full."""
+
+
+@dataclasses.dataclass
+class PrefetchStats:
+    """Counters the prefetcher surfaces instead of silently spinning.
+
+    ``stalls`` are put timeouts (backpressure ticks — the batch is *kept*
+    and retried, never recomputed); ``dropped`` are batches produced but
+    never consumed (counted when ``close`` drains the queue);
+    ``join_timeouts`` are closes where the worker failed to exit in time.
+    """
+
+    produced: int = 0
+    consumed: int = 0
+    stalls: int = 0
+    max_stall_run: int = 0
+    dropped: int = 0
+    join_timeouts: int = 0
 
 
 class TokenStream:
@@ -72,33 +101,67 @@ class TokenStream:
 
 
 class Prefetcher:
-    """Bounded background prefetch queue over a TokenStream."""
+    """Bounded background prefetch queue over a TokenStream.
+
+    Backpressure is accounted, not swallowed: a full queue keeps the
+    pending batch (no recompute), counts a stall, and after
+    ``StreamConfig.max_stalls`` consecutive stalls the worker parks a
+    ``BackpressureError`` that the next ``__next__`` raises to the
+    consumer.  ``stats`` carries the counters either way.
+    """
 
     def __init__(self, stream: TokenStream, start_step: int = 0):
         self.stream = stream
         self.q: queue.Queue = queue.Queue(maxsize=stream.cfg.prefetch)
         self.step = start_step
+        self.stats = PrefetchStats()
+        self._error: Optional[BackpressureError] = None
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._run, daemon=True)
         self._thread.start()
 
     def _run(self):
+        cfg = self.stream.cfg
         step = self.step
+        pending: Optional[dict] = None
+        stall_run = 0
         while not self._stop.is_set():
-            batch = self.stream.batch(step)
-            batch["_step"] = step
+            if pending is None:
+                pending = self.stream.batch(step)
+                pending["_step"] = step
             try:
-                self.q.put(batch, timeout=1.0)
-                step += 1
+                self.q.put(pending, timeout=cfg.stall_timeout_s)
             except queue.Full:
+                self.stats.stalls += 1
+                stall_run += 1
+                self.stats.max_stall_run = max(self.stats.max_stall_run,
+                                               stall_run)
+                if cfg.max_stalls and stall_run >= cfg.max_stalls:
+                    self._error = BackpressureError(
+                        f"prefetch consumer wedged: {stall_run} consecutive "
+                        f"stalls of {cfg.stall_timeout_s}s with the queue "
+                        f"full at step {step}")
+                    return
                 continue
+            self.stats.produced += 1
+            pending = None
+            stall_run = 0
+            step += 1
 
     def __iter__(self) -> Iterator[dict]:
         return self
 
     def __next__(self) -> dict:
-        return self.q.get()
+        if self._error is not None:
+            raise self._error
+        batch = self.q.get()
+        self.stats.consumed += 1
+        return batch
 
     def close(self):
         self._stop.set()
         self._thread.join(timeout=2.0)
+        if self._thread.is_alive():
+            self.stats.join_timeouts += 1
+        # Whatever is still queued was produced but will never be consumed.
+        self.stats.dropped += self.q.qsize()

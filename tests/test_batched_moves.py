@@ -7,9 +7,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (LocalSearchConfig, RegionScheduler, HostScheduler,
-                        Sptlb, generate_cluster, objective, pad_problem,
-                        solve_local, validate)
+from repro.core import (CoopConfig, LocalSearchConfig, RegionScheduler,
+                        HostScheduler, Sptlb, generate_cluster, objective,
+                        pad_problem, solve_local, validate)
 from repro.core.constraints import move_mask, moves_remaining
 from repro.core.delta import move_delta_cost
 from repro.core.problem import bucket_size, tier_loads
@@ -151,7 +151,8 @@ def test_sptlb_bucketing_reuses_compiled_executable():
     for i, n in enumerate((290, 300, 310)):
         cluster = generate_cluster(num_apps=n, seed=20 + i)
         before = local_search_trace_count()
-        d = Sptlb(cluster).balance("local", timeout_s=4, variant="no_cnst")
+        d = Sptlb(cluster).balance("local", timeout_s=4,
+                                   config=CoopConfig(variant="no_cnst"))
         counts.append(local_search_trace_count() - before)
         decisions.append(d)
         assert d.solve.extra["bucket"] == 512
@@ -226,8 +227,7 @@ def test_host_scheduler_prefix_ffd_matches_reference(cluster300, seed, count):
 
 def test_cooperate_reports_phase_timings(cluster300):
     d = Sptlb(cluster300).balance("local", timeout_s=4,
-                                  variant="manual_cnst",
-                                  max_feedback_rounds=6)
+                                  config=CoopConfig(max_rounds=6))
     tm = d.cooperation.timings
     for key in ("solve_s", "region_s", "host_s", "feedback_s",
                 "total_s", "host_side_frac"):

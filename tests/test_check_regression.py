@@ -113,12 +113,73 @@ def test_gate_fails_on_retrace_creep(tmp_path, capsys):
     baseline, current = _stage(tmp_path, SIM_SMOKE)
 
     def creep(record):
-        scenario = sorted(record)[0]
+        # Chaos records carry degraded/oracle instead of balanced.
+        scenario = sorted(n for n, r in record.items() if "balanced" in r)[0]
         record[scenario]["balanced"]["solver_retraces"] += 5
 
     _rewrite(current, SIM_SMOKE, creep)
     assert _run(baseline, current) == 1
     assert "solver_retraces" in capsys.readouterr().out
+
+
+def _chaos_scenarios(directory):
+    record = json.loads((directory / SIM_SMOKE).read_text())
+    return sorted(n for n, r in record.items() if "chaos" in r)
+
+
+def test_gate_fails_on_unsafe_move(tmp_path, capsys):
+    baseline, current = _stage(tmp_path, SIM_SMOKE)
+    names = _chaos_scenarios(baseline)
+    assert names, "the chaos family must be in the committed smoke record"
+
+    def violate(record):
+        record[names[0]]["chaos"]["unsafe_moves"] = 1
+
+    _rewrite(current, SIM_SMOKE, violate)
+    assert _run(baseline, current) == 1
+    assert "unsafe_moves" in capsys.readouterr().out
+
+
+def test_gate_fails_when_recovery_is_lost(tmp_path, capsys):
+    baseline, current = _stage(tmp_path, SIM_SMOKE)
+    names = _chaos_scenarios(baseline)
+
+    def stuck(record):
+        record[names[0]]["chaos"]["recovered"] = False
+
+    _rewrite(current, SIM_SMOKE, stuck)
+    assert _run(baseline, current) == 1
+    assert "recovered" in capsys.readouterr().out
+
+
+def test_gate_fails_on_degraded_vs_oracle_blowup(tmp_path, capsys):
+    baseline, current = _stage(tmp_path, SIM_SMOKE)
+    names = _chaos_scenarios(baseline)
+
+    def blowup(record):
+        block = record[names[0]]["chaos"]["degraded_vs_oracle"]
+        block["ratio"] = block["ratio"] * 2.0 + 1.0
+
+    _rewrite(current, SIM_SMOKE, blowup)
+    assert _run(baseline, current) == 1
+    assert "degraded_vs_oracle" in capsys.readouterr().out
+
+
+def test_gate_fails_when_chaos_scenario_dropped(tmp_path, capsys):
+    # The named per-scenario ratio checks exist exactly for this: a
+    # baseline regeneration that silently dropped a chaos scenario would
+    # sail through every wildcard.
+    baseline, current = _stage(tmp_path, SIM_SMOKE)
+    names = _chaos_scenarios(baseline)
+
+    def drop(record):
+        for name in names:
+            del record[name]
+
+    _rewrite(baseline, SIM_SMOKE, drop)
+    _rewrite(current, SIM_SMOKE, drop)
+    assert _run(baseline, current) == 1
+    assert "matched no baseline metrics" in capsys.readouterr().out
 
 
 def test_gate_fails_on_missing_metric(tmp_path, capsys):

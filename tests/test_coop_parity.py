@@ -7,9 +7,10 @@ was captured at the pre-refactor commit (seed 3, local engine, timeout 4,
 rejection counts at N in {64, 1000} for all three variants plus the
 premask-off / restart / cost-budget knob paths.
 
-Also covered here: the deprecated kwarg shims warn and produce identical
-results to the ``CoopConfig`` API, and a no-op custom level appended to
-the stack never changes results (property test over seeded clusters).
+Also covered here: a no-op custom level appended to the stack never
+changes results (property test over seeded clusters), and the PR-6 fault
+machinery is invisible when idle — a healthy ``BreakerBoard`` and a fresh
+``TelemetryMonitor`` leave results bit-identical to the goldens.
 """
 
 import dataclasses
@@ -91,39 +92,51 @@ def test_explicit_hierarchy_matches_default():
         assert _record(cluster, d) == base
 
 
-def test_legacy_kwargs_warn_and_match_config_api():
-    """The deprecated shims (variant / max_feedback_rounds / premask_region /
-    restart_rounds / batch_moves / bucket_apps) warn but produce bit-identical
-    results to the CoopConfig path."""
-    cluster = generate_cluster(num_apps=150, seed=5)
-    via_config = _record(
-        cluster,
-        _decide(cluster, CoopConfig(max_rounds=6, premask=False, restart_rounds=1)),
-    )
-    with pytest.warns(DeprecationWarning):
-        legacy = Sptlb(cluster).balance(
-            "local",
-            timeout_s=4,
-            variant="manual_cnst",
-            max_feedback_rounds=6,
-            premask_region=False,
-            restart_rounds=1,
-        )
-    assert _record(cluster, legacy) == via_config
-
-
-def test_each_legacy_kwarg_warns():
+def test_legacy_kwarg_shims_are_gone():
+    """PR-5 said the shims last one release; PR-6 is that release."""
     cluster = generate_cluster(num_apps=64, seed=5)
-    for kw in (
-        {"variant": "no_cnst"},
-        {"max_feedback_rounds": 4},
-        {"premask_region": True},
-        {"restart_rounds": 0},
-        {"batch_moves": 8},
-        {"bucket_apps": True},
-    ):
-        with pytest.warns(DeprecationWarning):
-            Sptlb(cluster).balance("local", timeout_s=4, **kw)
+    with pytest.raises(TypeError):
+        Sptlb(cluster).balance("local", timeout_s=4, variant="no_cnst")
+    with pytest.raises(TypeError):
+        Sptlb(cluster).balance("local", timeout_s=4, max_feedback_rounds=4)
+
+
+@pytest.mark.parametrize("name", ["N64/manual_cnst", "N64/manual_cnst/budget",
+                                  "N1000/manual_cnst"])
+def test_healthy_breaker_board_matches_golden(name):
+    """A BreakerBoard with every breaker closed changes nothing: same
+    assignment hash / objective / rounds / rejections as the PR-5 goldens,
+    with the board's (all-closed) snapshot surfaced in the timings."""
+    from repro.core.health import BreakerBoard
+
+    num_apps, kw = CASES[name]
+    cluster = generate_cluster(num_apps=num_apps, seed=3)
+    kw = dict(kw)
+    if kw.get("move_cost") == "derive":
+        kw["move_cost"] = move_costs(cluster.problem)
+    board = BreakerBoard()
+    d = _decide(cluster, CoopConfig(max_rounds=8, breakers=board, **kw))
+    got = _record(cluster, d)
+    assert got == GOLDEN[name], {
+        k: (GOLDEN[name][k], got[k]) for k in GOLDEN[name]
+        if got[k] != GOLDEN[name][k]}
+    snap = d.cooperation.timings.breakers
+    assert snap["bypassed"] == [] and snap["trips"] == 0
+    assert all(b["state"] == "closed" for b in snap["levels"].values())
+
+
+def test_fresh_telemetry_monitor_is_identity():
+    """Fresh, plausible telemetry passes through the monitor unchanged —
+    the same ClusterState object, so downstream decisions are untouched."""
+    from repro.core.health import TelemetryMonitor
+
+    cluster = generate_cluster(num_apps=150, seed=5)
+    monitor = TelemetryMonitor()
+    for now in range(3):
+        sanitized, health = monitor.ingest(cluster, now, collected_at=now)
+        assert sanitized is cluster
+        assert health.score == 1.0
+        assert health.quarantined == 0
 
 
 class NoopLevel(SchedulerLevel):

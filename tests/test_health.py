@@ -1,0 +1,222 @@
+"""Telemetry health + circuit breaker unit tests (degraded-mode sensing).
+
+The sim chaos suite (test_chaos.py) proves these end-to-end; here each
+state machine is pinned in isolation: staleness scoring, quarantine and
+last-known-good hygiene, uncertainty inflation, breaker trip/probe/backoff.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import generate_cluster
+from repro.core.health import (CLOSED, HALF_OPEN, OPEN, BreakerBoard,
+                               BreakerConfig, CircuitBreaker, HealthConfig,
+                               TelemetryMonitor)
+
+
+@pytest.fixture()
+def cluster():
+    return generate_cluster(num_apps=16, seed=0)
+
+
+def with_demand(cluster, demand):
+    return dataclasses.replace(
+        cluster, problem=dataclasses.replace(
+            cluster.problem, demand=jnp.asarray(demand, jnp.float32)))
+
+
+# ---------------------------------------------------------------------------
+# telemetry monitor
+# ---------------------------------------------------------------------------
+
+def test_fresh_plausible_is_identity(cluster):
+    mon = TelemetryMonitor()
+    sanitized, health = mon.ingest(cluster, now=0, collected_at=0)
+    assert sanitized is cluster          # parity-pinned: zero-cost when healthy
+    assert health.score == 1.0
+    assert health.quarantined == 0
+
+
+def test_staleness_score_ladder(cluster):
+    # stale_after=1, blind_after=5: scores 1, 1, .75, .5, .25, 0 at age 0..5.
+    expected = {0: 1.0, 1: 1.0, 2: 0.75, 3: 0.5, 4: 0.25, 5: 0.0, 7: 0.0}
+    for age, want in expected.items():
+        mon = TelemetryMonitor()
+        _, health = mon.ingest(cluster, now=age, collected_at=0)
+        assert health.score == pytest.approx(want), f"staleness {age}"
+        assert health.staleness == age
+
+
+def test_stale_telemetry_inflates_demand(cluster):
+    mon = TelemetryMonitor()
+    sanitized, _ = mon.ingest(cluster, now=3, collected_at=0)
+    assert sanitized is not cluster
+    inflation = min(1.5, 1.05 ** 3)
+    np.testing.assert_allclose(
+        np.asarray(sanitized.problem.demand),
+        np.asarray(cluster.problem.demand) * inflation, rtol=1e-5)
+
+
+def test_quarantine_replaces_with_last_known_good(cluster):
+    mon = TelemetryMonitor()
+    mon.ingest(cluster, now=0, collected_at=0)        # establish LKG
+    demand = np.asarray(cluster.problem.demand).copy()
+    good_row = demand[3].copy()
+    demand[3] = 1e6                                    # absurd jump
+    sanitized, health = mon.ingest(with_demand(cluster, demand),
+                                   now=1, collected_at=1)
+    assert health.signals["demand"].quarantined == 1
+    np.testing.assert_allclose(
+        np.asarray(sanitized.problem.demand)[3], good_row, rtol=1e-6)
+    # 1 of 16 live quarantined, blind at 25%: 1 - (1/16)/0.25 = 0.75.
+    assert health.score == pytest.approx(0.75)
+
+
+def test_lkg_never_absorbs_corrupted_values(cluster):
+    mon = TelemetryMonitor()
+    mon.ingest(cluster, now=0, collected_at=0)
+    demand = np.asarray(cluster.problem.demand).copy()
+    demand[3] = 1e6
+    corrupt = with_demand(cluster, demand)
+    mon.ingest(corrupt, now=1, collected_at=1)
+    # Re-ingesting the same corruption must still quarantine it: the LKG
+    # advanced with the *sanitized* row, not the laundered 1e6.
+    _, health = mon.ingest(corrupt, now=2, collected_at=2)
+    assert health.signals["demand"].quarantined == 1
+
+
+def test_nonfinite_quarantined_without_history(cluster):
+    mon = TelemetryMonitor()                           # no LKG yet
+    demand = np.asarray(cluster.problem.demand).copy()
+    demand[0] = np.nan
+    demand[1] = -4.0
+    sanitized, health = mon.ingest(with_demand(cluster, demand),
+                                   now=0, collected_at=0)
+    assert health.signals["demand"].quarantined == 2
+    got = np.asarray(sanitized.problem.demand)
+    np.testing.assert_array_equal(got[0], 0.0)         # zeroed: conservative
+    np.testing.assert_array_equal(got[1], 0.0)
+    assert np.isfinite(got).all()
+
+
+def test_blackout_reingest_does_not_launder_staleness(cluster):
+    mon = TelemetryMonitor()
+    mon.ingest(cluster, now=0, collected_at=0)
+    lkg_before = mon._lkg_demand.copy()
+    # A frozen snapshot re-served during a blackout keeps its old stamp;
+    # LKG must not advance from it.
+    mon.ingest(cluster, now=4, collected_at=0)
+    np.testing.assert_array_equal(mon._lkg_demand, lkg_before)
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker state machine
+# ---------------------------------------------------------------------------
+
+def run_pass(b, *, fail=False, candidates=0, rejected=0):
+    state = b.begin_pass()
+    if state != OPEN:
+        if fail:
+            b.note_failure()
+        if candidates:
+            b.note_vet(candidates, rejected)
+    b.end_pass()
+    return state
+
+
+def test_breaker_trips_on_consecutive_failures():
+    b = CircuitBreaker("host")
+    for _ in range(2):
+        run_pass(b, fail=True)
+        assert b.state == CLOSED
+    run_pass(b, fail=True)                             # third strike
+    assert b.state == OPEN
+    assert b.trips == 1
+    assert b.cooldown == 2
+
+
+def test_failure_streak_resets_on_clean_pass():
+    b = CircuitBreaker("host")
+    run_pass(b, fail=True)
+    run_pass(b, fail=True)
+    run_pass(b, candidates=4, rejected=1)              # clean: streak resets
+    run_pass(b, fail=True)
+    run_pass(b, fail=True)
+    assert b.state == CLOSED
+
+
+def test_breaker_trips_on_reject_all_streak():
+    b = CircuitBreaker("host")
+    for _ in range(3):
+        run_pass(b, candidates=5, rejected=5)
+    assert b.state == OPEN
+    # A level that answers politely but vetoes everything has failed.
+
+
+def test_passes_without_candidates_do_not_advance_reject_streak():
+    b = CircuitBreaker("host")
+    run_pass(b, candidates=5, rejected=5)
+    run_pass(b)                                        # nothing to vet
+    run_pass(b, candidates=5, rejected=5)
+    run_pass(b, candidates=5, rejected=5)
+    assert b.state == OPEN                             # 3 vetted passes total
+
+
+def test_half_open_probe_clean_closes():
+    b = CircuitBreaker("host")
+    for _ in range(3):
+        run_pass(b, fail=True)
+    assert b.state == OPEN
+    assert run_pass(b) == OPEN                         # cooldown 2 -> 1
+    state = run_pass(b, candidates=3, rejected=0)      # probe pass
+    assert state == HALF_OPEN
+    assert b.state == CLOSED
+    assert b.probes == 1
+    assert b.cooldown == 0                             # backoff reset
+
+
+def test_half_open_probe_failure_doubles_cooldown():
+    b = CircuitBreaker("host")
+    for _ in range(3):
+        run_pass(b, fail=True)
+    run_pass(b)                                        # cooldown 2 -> 1
+    run_pass(b, fail=True)                             # failing probe
+    assert b.state == OPEN
+    assert b.trips == 2
+    assert b.cooldown == 4                             # 2 * backoff_factor
+
+
+def test_backoff_caps_at_max_cooldown():
+    cfg = BreakerConfig(fail_threshold=1, cooldown_passes=2, max_cooldown=5)
+    b = CircuitBreaker("host", cfg)
+    run_pass(b, fail=True)                             # trip: cooldown 2
+    for want in (4, 5, 5):
+        while b.state == OPEN and b.cooldown_left > 1:
+            b.begin_pass()                             # burn cooldown passes
+            b.end_pass()
+        run_pass(b, fail=True)                         # failing probe
+        assert b.cooldown == want
+
+
+def test_board_health_factor_and_premask_cache():
+    board = BreakerBoard()
+    assert board.health_factor() == 1.0                # no breakers yet
+    a, b = board.breaker("region"), board.breaker("host")
+    assert board.breaker("region") is a                # stable identity
+    assert board.health_factor() == 1.0
+    for _ in range(3):
+        run_pass(b, fail=True)
+    assert board.open_levels == ["host"]
+    assert board.health_factor() == pytest.approx(0.75)
+    for _ in range(3):
+        run_pass(a, fail=True)
+    assert board.health_factor() == pytest.approx(0.5)
+    board.cache_premask("host", np.array([True, False]))
+    np.testing.assert_array_equal(board.cached_premask("host"),
+                                  [True, False])
+    assert board.cached_premask("region") is None
+    snap = board.snapshot()
+    assert snap["host"]["state"] == OPEN
+    assert board.trips == 2

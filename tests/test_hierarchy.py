@@ -3,7 +3,8 @@ convergence, and the Fig. 4/5 qualitative trade-offs."""
 import numpy as np
 import pytest
 
-from repro.core import HostScheduler, RegionScheduler, Sptlb, generate_cluster
+from repro.core import (CoopConfig, HostScheduler, RegionScheduler, Sptlb,
+                        generate_cluster)
 from repro.core.hierarchy import region_overlap_avoid
 
 
@@ -15,8 +16,8 @@ def cluster():
 @pytest.fixture(scope="module")
 def decisions(cluster):
     s = Sptlb(cluster)
-    return {v: s.balance("local", timeout_s=30, variant=v,
-                         max_feedback_rounds=20)
+    return {v: s.balance("local", timeout_s=30,
+                         config=CoopConfig(variant=v, max_rounds=20))
             for v in ("no_cnst", "w_cnst", "manual_cnst")}
 
 
@@ -51,7 +52,7 @@ def test_manual_beats_wcnst_on_balance(decisions):
 def test_manual_rejections_respected(cluster):
     """Every accepted move in the final mapping passes the region check."""
     s = Sptlb(cluster)
-    d = s.balance("local", variant="manual_cnst", max_feedback_rounds=20)
+    d = s.balance("local", config=CoopConfig(max_rounds=20))
     region = RegionScheduler(cluster)
     x = np.asarray(d.assignment)
     x0 = np.asarray(cluster.problem.assignment0)
@@ -86,10 +87,9 @@ def test_restart_rounds_never_worse_and_vetted(cluster):
     Candidates are re-vetted, and only adopted on objective improvement —
     so the knob can spend solves but never quality or feasibility."""
     s = Sptlb(cluster)
-    d0 = s.balance("local", timeout_s=30, variant="manual_cnst",
-                   max_feedback_rounds=20)
-    d1 = s.balance("local", timeout_s=30, variant="manual_cnst",
-                   max_feedback_rounds=20, restart_rounds=3)
+    d0 = s.balance("local", timeout_s=30, config=CoopConfig(max_rounds=20))
+    d1 = s.balance("local", timeout_s=30,
+                   config=CoopConfig(max_rounds=20, restart_rounds=3))
     assert d1.solve.objective <= d0.solve.objective + 1e-5
     assert d1.violations.ok
     tm = d1.cooperation.timings

@@ -6,7 +6,7 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (HostScheduler, RegionScheduler, Sptlb,
+from repro.core import (CoopConfig, HostScheduler, RegionScheduler, Sptlb,
                         generate_cluster)
 from repro.core.controller import BalanceController, ControllerConfig
 from repro.core.hierarchy import region_overlap_avoid
@@ -164,10 +164,8 @@ def test_premask_region_cooperation_contract(cluster300):
     # Default round cap: the comparison the knob is designed for (with a
     # much larger cap the unmasked path's rejection rounds double as extra
     # search restarts and the two paths' budgets diverge).
-    d_on = s.balance("local", timeout_s=30, variant="manual_cnst",
-                     premask_region=True)
-    d_off = s.balance("local", timeout_s=30, variant="manual_cnst",
-                      premask_region=False)
+    d_on = s.balance("local", timeout_s=30, config=CoopConfig(premask=True))
+    d_off = s.balance("local", timeout_s=30, config=CoopConfig(premask=False))
     tm_on, tm_off = d_on.cooperation.timings, d_off.cooperation.timings
     assert tm_on["premask"] and tm_on["region_rejections"] == 0
     assert not tm_off["premask"] and tm_off["region_rejections"] > 0

@@ -1,8 +1,12 @@
-"""Streaming substrate: determinism, seekability, routing."""
-import numpy as np
+"""Streaming substrate: determinism, seekability, routing, backpressure."""
+import time
 
-from repro.streams import (Prefetcher, StreamConfig, StreamRouter,
-                           TokenStream, build_cluster, demo_apps)
+import numpy as np
+import pytest
+
+from repro.streams import (BackpressureError, Prefetcher, StreamConfig,
+                           StreamRouter, TokenStream, build_cluster,
+                           demo_apps)
 from repro.launch.train import default_slices
 
 
@@ -41,6 +45,42 @@ def test_prefetcher_produces_sequential_steps():
     steps = [next(pf)["_step"] for _ in range(4)]
     pf.close()
     assert steps == [0, 1, 2, 3]
+    assert pf.stats.consumed == 4
+    assert pf.stats.produced >= 4
+
+
+def test_prefetcher_counts_stalls_and_keeps_pending_batch():
+    # Tiny queue, fast stall clock, generous max_stalls: the worker must
+    # stall (consumer drains nothing for a while), keep the pending batch,
+    # and deliver every step exactly once when draining resumes.
+    cfg = StreamConfig(vocab_size=64, seq_len=4, global_batch=2, prefetch=1,
+                       stall_timeout_s=0.02, max_stalls=10_000)
+    pf = Prefetcher(TokenStream(cfg), start_step=0)
+    deadline = time.monotonic() + 5.0
+    while pf.stats.stalls < 3 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert pf.stats.stalls >= 3
+    steps = [next(pf)["_step"] for _ in range(5)]
+    pf.close()
+    assert steps == [0, 1, 2, 3, 4]          # no step skipped or repeated
+    assert pf.stats.max_stall_run >= 3
+    assert pf.stats.dropped == pf.stats.produced - pf.stats.consumed
+
+
+def test_prefetcher_raises_on_wedged_consumer():
+    cfg = StreamConfig(vocab_size=64, seq_len=4, global_batch=2, prefetch=1,
+                       stall_timeout_s=0.01, max_stalls=3)
+    pf = Prefetcher(TokenStream(cfg), start_step=0)
+    try:
+        # Never consume: the worker trips max_stalls and parks the error.
+        deadline = time.monotonic() + 5.0
+        while pf._error is None and time.monotonic() < deadline:
+            time.sleep(0.01)
+        with pytest.raises(BackpressureError):
+            next(pf)
+        assert pf.stats.max_stall_run >= 3
+    finally:
+        pf.close()
 
 
 def test_router_routes_apps_to_slices():

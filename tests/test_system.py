@@ -2,7 +2,7 @@
 checkpoint/restart + failure rebalance) and the paper's orchestration."""
 import numpy as np
 
-from repro.core import Sptlb, generate_cluster
+from repro.core import CoopConfig, Sptlb, generate_cluster
 from repro.launch.train import main as train_main
 
 
@@ -33,8 +33,8 @@ def test_train_driver_resume(tmp_path):
 def test_sptlb_full_pipeline_stages():
     """Fig. 1 stages produce a coherent decision record."""
     cluster = generate_cluster(num_apps=200, seed=3)
-    decision = Sptlb(cluster).balance("local", variant="manual_cnst",
-                                      max_feedback_rounds=15)
+    decision = Sptlb(cluster).balance("local",
+                                      config=CoopConfig(max_rounds=15))
     pm = decision.projected
     assert pm.util_frac.shape == (5, 2)
     assert pm.num_moved == len(pm.moved_apps)
