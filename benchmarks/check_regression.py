@@ -120,6 +120,56 @@ CHECKS = (
         0.5,
         0.25,
     ),
+    # PR 7 overload family: the overload-resilient control plane's
+    # acceptance.  Admission feasibility is absolute — one admitted app
+    # that did not fit its priced tier is a bug, not drift — and the
+    # utility-armed run must keep beating the binary baseline on delivered
+    # utility (named per-scenario checks so a baseline regeneration that
+    # dropped an overload scenario fails the gate).
+    Check(SIM_SMOKE, ("*", "overload", "infeasible_admissions"), "not_above", 0),
+    Check(SIM_SMOKE, ("*", "overload", "within_budget", "utility"), "stays_true"),
+    Check(SIM_SMOKE, ("*", "overload", "within_budget", "binary"), "stays_true"),
+    Check(SIM_SMOKE, ("*", "utility", "budget_overruns"), "not_above", 0),
+    # Hysteresis is judged on churn: cap transitions must stay in the
+    # baseline's ballpark, not flap per tick.
+    Check(SIM_SMOKE, ("*", "overload", "shed_churn_events"), "not_above", 4, 0.5),
+    Check(
+        SIM_SMOKE,
+        ("overload_surge", "overload", "delivered_utility_ratio", "improvement"),
+        "not_below",
+        0.02,
+        0.05,
+    ),
+    Check(
+        SIM_SMOKE,
+        ("overload_flash", "overload", "delivered_utility_ratio", "improvement"),
+        "not_below",
+        0.05,
+        0.10,
+    ),
+    Check(
+        SIM_SMOKE,
+        ("overload_capacity_loss", "overload", "delivered_utility_ratio", "improvement"),
+        "not_below",
+        0.05,
+        0.10,
+    ),
+    # Graceful degradation must also be *strictly better than 1* on the
+    # two pure-overload scenarios — not merely unchanged vs baseline.
+    Check(
+        SIM_SMOKE,
+        ("overload_surge", "overload", "delivered_utility_ratio", "utility"),
+        "not_below",
+        0.02,
+        0.03,
+    ),
+    Check(
+        SIM_SMOKE,
+        ("overload_flash", "overload", "delivered_utility_ratio", "utility"),
+        "not_below",
+        0.02,
+        0.03,
+    ),
     # --- solver smoke: counts/objectives tight, wall-clock generous ------
     Check(SOLVER_SMOKE, ("local_search", "*", "batch16", "moves_per_s"), "not_below", 0, 3.0),
     Check(SOLVER_SMOKE, ("local_search", "*", "batch1", "moves_per_s"), "not_below", 0, 3.0),

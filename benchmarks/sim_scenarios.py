@@ -17,6 +17,12 @@ scorecard (unsafe moves, mode residency and transitions, recovery,
 degraded-vs-oracle violation ratio) that the regression gate pins — see
 docs/degraded_modes.md.
 
+Overload scenarios (``Scenario.overload``) run the binary-baseline vs
+utility-armed pair via ``run_overload_pair``: their records carry the
+``overload`` scorecard (delivered-utility improvement, admission/shedding
+counters, the zero-infeasible-admissions invariant) — see
+docs/overload_and_admission.md.
+
 Emits CSV rows like every other benchmark AND writes ``BENCH_sim.json`` at
 the repo root so the trajectory scorecard is tracked PR-over-PR
 (regenerate with ``PYTHONPATH=src python -m benchmarks.sim_scenarios``;
@@ -30,9 +36,51 @@ import os
 import time
 
 from benchmarks.common import comment, emit
-from repro.sim import get_scenario, list_scenarios, run_chaos_pair, run_pair
+from repro.sim import (get_scenario, list_scenarios, run_chaos_pair,
+                       run_overload_pair, run_pair)
 
 RESULTS: dict = {}
+
+
+def bench_overload_scenario(sc, num_apps: int, ticks: int):
+    """Overload scenarios run the binary-baseline/utility-armed pair: the
+    record keys the gate pins are the ``overload`` scorecard (delivered-
+    utility improvement > 1 on the same trajectory and the same curves,
+    zero infeasible admissions, bounded shed churn, budgets held)."""
+    t0 = time.perf_counter()
+    out = run_overload_pair(sc)
+    wall = time.perf_counter() - t0
+    o = out["overload"]
+    rec = {
+        "num_apps": num_apps,
+        "pool": sc.max_apps,
+        "ticks": ticks,
+        "wall_s": wall,
+        "binary": out["binary"].summary(),
+        "utility": out["utility"].summary(),
+        "overload": o,
+        "series": {"binary": out["binary"].series(),
+                   "utility": out["utility"].series()},
+    }
+    r = o["delivered_utility_ratio"]
+    adm = o["admission"]
+    emit(f"sim_scenarios/{sc.name}/N{num_apps}x{ticks}", wall * 1e6,
+         f"util_binary={r['binary']:.3f};util_utility={r['utility']:.3f};"
+         f"util_improvement={r['improvement']:.3f};"
+         f"deferred={o['deferred_app_ticks']};"
+         f"shed_capped={o['shed_capped_app_ticks']};"
+         f"shed_churn={o['shed_churn_events']};"
+         f"infeasible_admissions={o['infeasible_admissions']};"
+         f"admit={adm.get('admit', 0)};defer={adm.get('defer', 0)};"
+         f"reject={adm.get('reject', 0)};"
+         f"within_budget={o['within_budget']['utility']}")
+    comment(f"{sc.name} (overload): delivered utility {r['binary']:.3f} -> "
+            f"{r['utility']:.3f} of oracle ({r['improvement']:.2f}x), "
+            f"{o['deferred_app_ticks']} deferred app-ticks, "
+            f"{o['shed_capped_app_ticks']} shed-capped app-ticks, "
+            f"{o['infeasible_admissions']} infeasible admissions")
+    RESULTS[sc.name] = rec
+    return rec
 
 
 def bench_chaos_scenario(sc, num_apps: int, ticks: int):
@@ -77,6 +125,11 @@ def bench_chaos_scenario(sc, num_apps: int, ticks: int):
 
 def bench_scenario(name: str, num_apps: int, ticks: int, seed: int = 0):
     sc = get_scenario(name, num_apps=num_apps, ticks=ticks, seed=seed)
+    if sc.overload:
+        # Overload routing wins over chaos: overload_capacity_loss composes
+        # both, and its acceptance story is the utility scorecard (the
+        # chaos machinery still runs inside the utility-armed controller).
+        return bench_overload_scenario(sc, num_apps, ticks)
     if sc.chaos:
         return bench_chaos_scenario(sc, num_apps, ticks)
     t0 = time.perf_counter()

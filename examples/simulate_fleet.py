@@ -83,6 +83,22 @@ for the runbook interpretation of each figure:
 
   PYTHONPATH=src python examples/simulate_fleet.py --chaos --verbose
 
+Overload
+--------
+``--overload`` runs the demand-side failure family (overload_surge,
+overload_flash, overload_capacity_loss — or one of them via
+``--scenario``) through ``sim.run_overload_pair``: the *utility* run arms
+the full overload control plane (Henge-style utility curves, the admission
+gate, the load shedder), the *binary* twin rides the identical trajectory
+with none of it, and the scorecard reports what graceful degradation
+bought: delivered-utility ratio vs the fractional-knapsack oracle for both
+policies, deferred/shed-capped app-ticks, cap-churn against the movement
+budget, and the two hard invariants (infeasible admissions and budget
+overruns, both must be 0).  See docs/overload_and_admission.md for the
+runbook interpretation:
+
+  PYTHONPATH=src python examples/simulate_fleet.py --overload --verbose
+
 Metrics (see ``repro/sim/slo.py``): ``slo_violation_ticks`` integrates
 app-ticks on SLO-ineligible tiers plus tier-ticks over the ideal line;
 ``over_ideal_excess_integral`` weights the latter by severity;
@@ -97,7 +113,7 @@ import argparse
 from repro.core.controller import ControllerConfig
 from repro.core.levels import CoopConfig
 from repro.sim import (get_scenario, list_scenarios, run_chaos_pair,
-                       run_pair, run_scenario)
+                       run_overload_pair, run_pair, run_scenario)
 
 
 def run_chaos(names, args):
@@ -133,6 +149,45 @@ def run_chaos(names, args):
         print(f"   recovered          {c['recovered']}")
 
 
+def run_overload(names, args):
+    """--overload: utility-vs-binary scorecard per overload scenario."""
+    if args.scenario == "all":
+        names = [n for n in sorted(list_scenarios())
+                 if get_scenario(n, num_apps=8, ticks=8, seed=0).overload]
+    for name in names:
+        sc = get_scenario(name, num_apps=args.apps, ticks=args.ticks,
+                          seed=args.seed)
+        if not sc.overload:
+            print(f"{name}: not an overload scenario (demand never outgrows "
+                  f"the fleet) — skipping")
+            continue
+        print(f"-- {name}: {sc.description}")
+        out = run_overload_pair(sc, verbose=args.verbose)
+        o = out["overload"]
+        r = o["delivered_utility_ratio"]
+        print(f"   delivered utility  binary {r['binary']:.3f} vs "
+              f"utility {r['utility']:.3f} of oracle "
+              f"(improvement {r['improvement']:.2f}x)")
+        adm = o["admission"]
+        if adm:
+            print(f"   admission          {adm.get('admit', 0)} admit, "
+                  f"{adm.get('admit_degraded', 0)} degraded, "
+                  f"{adm.get('defer', 0)} defer, {adm.get('reject', 0)} "
+                  f"reject ({adm.get('backlog', 0)} backlogged)")
+        print(f"   deferred           {o['deferred_app_ticks']} app-ticks")
+        print(f"   shed-capped        {o['shed_capped_app_ticks']} app-ticks "
+              f"({o['shed_events']} shed, {o['readmit_events']} readmitted, "
+              f"{o['shed_churn_events']} churn events)")
+        print(f"   moves              binary {o['moves']['binary']} vs "
+              f"utility {o['moves']['utility']}")
+        wb = o["within_budget"]
+        print(f"   within budget      binary {wb['binary']} / "
+              f"utility {wb['utility']} "
+              f"({o['budget_overruns']['utility']} overruns)")
+        print(f"   infeasible adm.    {o['infeasible_admissions']} "
+              f"(must be 0)")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--scenario", default="all",
@@ -159,6 +214,10 @@ def main():
                     help="run the control-plane chaos family through "
                          "run_chaos_pair and print the degraded-vs-oracle "
                          "scorecard (see docs/degraded_modes.md)")
+    ap.add_argument("--overload", action="store_true",
+                    help="run the overload family through run_overload_pair "
+                         "and print the utility-vs-binary scorecard (see "
+                         "docs/overload_and_admission.md)")
     ap.add_argument("--verbose", action="store_true",
                     help="per-tick trace")
     args = ap.parse_args()
@@ -167,6 +226,9 @@ def main():
              else [args.scenario])
     if args.chaos:
         run_chaos(names, args)
+        return
+    if args.overload:
+        run_overload(names, args)
         return
     levels = (tuple(n for n in args.levels.split(",") if n.strip())
               if args.levels else None)

@@ -18,7 +18,11 @@ from repro.core.metrics import (difference_to_balance, network_p99_ms,
                                 projected_metrics)
 from repro.core.planner import (Advisory, MaintenancePlanner, PlannerConfig,
                                 PlanOutlook, move_costs, movement_cost_of)
+from repro.core.shedding import LoadShedder, ShedConfig, ShedPlan
 from repro.core.sptlb import BalanceDecision, Sptlb, engine_fn
+from repro.core.utility import (attach_curves, default_curves,
+                                delivered_fractions, fleet_utility,
+                                oracle_utility, step_curves, utility_of)
 from repro.core.health import (BreakerBoard, BreakerConfig, CircuitBreaker,
                                HealthConfig, TelemetryHealth,
                                TelemetryMonitor)
@@ -39,7 +43,10 @@ __all__ = [
     "ClusterState", "ResourceMonitor", "generate_cluster",
     "shard_affinity_of",
     "difference_to_balance", "network_p99_ms", "projected_metrics",
+    "LoadShedder", "ShedConfig", "ShedPlan",
     "BalanceDecision", "Sptlb", "engine_fn",
+    "attach_curves", "default_curves", "delivered_fractions",
+    "fleet_utility", "oracle_utility", "step_curves", "utility_of",
     "BreakerBoard", "BreakerConfig", "CircuitBreaker", "HealthConfig",
     "TelemetryHealth", "TelemetryMonitor",
     "BalanceController", "ControllerConfig", "FaultToleranceConfig", "Mode",

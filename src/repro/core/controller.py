@@ -53,6 +53,7 @@ from repro.core.levels import CoopConfig
 from repro.core.planner import (MaintenancePlanner, PlannerConfig, PlanOutlook,
                                 move_costs)
 from repro.core.problem import utilization_fraction
+from repro.core.shedding import LoadShedder, ShedConfig
 from repro.core.sptlb import Sptlb
 from repro.core.telemetry import ClusterState
 
@@ -146,6 +147,13 @@ class ControllerConfig:
     # health, circuit breakers, and operating modes entirely — the
     # controller behaves bit-identically to the pre-fault code path.
     fault: Optional[FaultToleranceConfig] = None
+    # Overload shedding (core.shedding): None (default) disables.  A
+    # ShedConfig arms a LoadShedder that computes utility-optimal delivery
+    # caps each tick; it requires utility curves on the problem
+    # (``Problem.has_utility``) and is a no-op without them.  Cap
+    # transitions are priced against ``movement_cost_budget`` and published
+    # as SHED advisories.
+    shed: Optional[ShedConfig] = None
 
     def __post_init__(self):
         if self.coop is None:
@@ -186,6 +194,12 @@ class ControllerEvent:
     budget_limited: bool = False
     # Declared advisories inside the planning horizon this round.
     plan_pending: int = 0
+    # Overload shedding this round: apps capped after the plan, cap
+    # transitions executed, and their priced reconfiguration cost (charged
+    # to the movement budget on top of ``movement_cost``).
+    shed_active: int = 0
+    shed_churn: int = 0
+    shed_cost: float = 0.0
     # Degraded-mode state at this tick (NORMAL/1.0 when fault tolerance is
     # disabled — the fields exist either way so audits stay uniform).
     mode: str = Mode.NORMAL.value
@@ -221,6 +235,17 @@ class BalanceController:
         self.health: Optional[TelemetryHealth] = None
         self._recover_streak = 0
         self._solver_distress = 0.0
+        # Overload shedding (inert when config.shed is None): the shedder
+        # holds the per-app delivery caps across ticks; every cap transition
+        # is appended to ``shed_advisories`` (SHED-kind records).
+        self.shedder = (LoadShedder(config.shed)
+                        if config.shed is not None else None)
+        self.shed_advisories: list = []
+        # Admission gate: owners attach a streams.admission
+        # AdmissionController here (duck-typed — core stays free of a
+        # streams import); ``admit`` then prices arrivals in the current
+        # operating mode.
+        self.admission = None
         # Test/chaos hook: an explicit Hierarchy the balance pass should use
         # instead of the config's level names (the sim's LevelFault event
         # swaps in a faulty wrapper here).
@@ -241,6 +266,31 @@ class BalanceController:
                 horizon=(self.config.anticipation_horizon
                          if horizon is None else horizon),
                 drain_threshold=self.config.drain_avoid_threshold))
+
+    # -- admission gate (requires an attached streams.admission controller) --
+    def admit(self, *, demand, tasks, slo, criticality, key,
+              app_id: Optional[int] = None):
+        """Price one arriving app in the current operating mode.
+
+        Delegates to the attached ``AdmissionController`` (``admission``):
+        CONSERVATIVE tightens the headroom margin and disables degraded
+        admissions, SAFE rejects non-critical arrivals outright.  When the
+        arrival occupies a known pool row (``app_id``) and the decision is
+        admit-degraded, its delivery cap is registered with the shedder so
+        it lifts through the same hysteretic re-admission.
+        """
+        if self.admission is None:
+            raise RuntimeError("no AdmissionController attached "
+                               "(set controller.admission)")
+        decision = self.admission.decide(
+            self.cluster.problem, demand=demand, tasks=tasks, slo=slo,
+            criticality=criticality, key=key, mode=self.mode.value,
+            now=self.now)
+        if (app_id is not None and self.shedder is not None
+                and decision.state.value == "admit_degraded"):
+            self.shedder._ensure(self.cluster.problem.num_apps)
+            self.shedder.set_cap(app_id, decision.cap)
+        return decision
 
     # -- trigger policy -----------------------------------------------------
     def should_rebalance(self, d2b: Optional[float] = None,
@@ -383,10 +433,30 @@ class BalanceController:
         # reused balancer must follow it either way.
         self._sptlb.cluster = self.cluster
         p = self.cluster.problem
+        # Overload shedding runs first (in every mode — capping demand needs
+        # no movement and only reduces risk): the plan's caps are the
+        # actuated throttles this tick's balance and evaluation run under.
+        shed_plan = None
+        if self.shedder is not None and p.has_utility:
+            budget = self.config.movement_cost_budget
+            shed_remaining = (float("inf") if budget is None
+                              else max(0.0, budget - self.cost_spent))
+            shed_plan = self.shedder.plan(
+                p, move_cost=np.asarray(move_costs(p)),
+                budget=shed_remaining, now=self.now)
+            if shed_plan.churned:
+                self.cost_spent += shed_plan.churn_cost
+                self.shed_advisories.extend(shed_plan.advisories)
         outlook = (self.planner.outlook(self.now, self.cluster)
                    if self.planner is not None else None)
         d2b_before = M.difference_to_balance(p, p.assignment0)
         triggered, reason = self.should_rebalance(d2b_before, outlook)
+        if shed_plan is not None and shed_plan.churned and not triggered:
+            # Cap transitions change what the fleet serves this tick —
+            # rebalance promptly (overrides cooldown, like declared events).
+            triggered = True
+            reason = (f"overload-shed churn ({len(shed_plan.shed_ids)} shed, "
+                      f"{len(shed_plan.readmitted_ids)} readmitted; {reason})")
         evac = None
         if fault is not None and self.mode is not Mode.NORMAL:
             evac = self._evacuation_mask(p)
@@ -411,6 +481,10 @@ class BalanceController:
                              if fault is not None else 1.0)
         if outlook is not None:
             ev.plan_pending = outlook.pending
+        if shed_plan is not None:
+            ev.shed_active = int(np.sum(shed_plan.caps < 1.0))
+            ev.shed_churn = shed_plan.churned
+            ev.shed_cost = shed_plan.churn_cost
         budget = self.config.movement_cost_budget
         remaining = float("inf") if budget is None else budget - self.cost_spent
         if (fault is not None and self.mode is Mode.CONSERVATIVE
@@ -426,7 +500,7 @@ class BalanceController:
             t0 = time.perf_counter()
             coop_cfg = dataclasses.replace(
                 self.config.coop, plan=outlook, move_cost=move_costs(p),
-                cost_budget=remaining)
+                cost_budget=remaining, shed=shed_plan)
             balance_cluster = self.cluster
             if fault is not None:
                 coop_cfg = dataclasses.replace(coop_cfg, breakers=self.board)
@@ -498,6 +572,14 @@ class BalanceController:
             "movement_cost_budget": self.config.movement_cost_budget,
             "budget_overruns": self.budget_overruns,
         }
+        if self.admission is not None:
+            out["admission"] = self.admission.audit()
+        if self.shedder is not None:
+            out["shed_events"] = self.shedder.shed_events
+            out["readmit_events"] = self.shedder.readmit_events
+            out["shed_advisories"] = len(self.shed_advisories)
+            out["apps_capped"] = (int(np.sum(self.shedder.caps < 1.0))
+                                  if self.shedder.caps is not None else 0)
         if self.config.fault is not None:
             out["mode"] = self.mode.value
             out["mode_transitions"] = list(self.mode_transitions)

@@ -11,10 +11,34 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.problem import Problem, tier_loads
+from repro.core.utility import tier_delivery_factor, utility_of
+
+# Fleet-utility goal weight: between goal 5 (under_ideal, 1e4) and goal 6
+# (resource_balance, 1e3) in the decade hierarchy — under overload the
+# utility term decides *which* apps ride the saturated tiers, outranking
+# every balance/movement preference but never the under-ideal hinge that
+# drives the overload off in the first place.  The term only exists when
+# curves are attached (``Problem.util_*`` is not None); without curves the
+# objective is bit-identical to the pre-utility code.
+FLEET_UTILITY_WEIGHT = 5e3
+
+
+def _utility_shortfall(problem: Problem, delivered: jax.Array) -> jax.Array:
+    """Normalized fleet-utility loss in [0, 1] (lower is better).
+
+    ``delivered`` maps the per-tier fair-throttle factor onto apps: hard
+    assignments index it, the soft relaxation takes an expectation.
+    """
+    u = utility_of(delivered, problem.util_knee, problem.util_slope,
+                   problem.util_weight)
+    w = problem.valid.astype(u.dtype)
+    max_u = jnp.maximum(jnp.sum(problem.util_weight * w), 1e-9)
+    return (max_u - jnp.sum(u * w)) / max_u
 
 
 def goal_terms(problem: Problem, assignment: jax.Array) -> dict[str, jax.Array]:
-    """All five goal terms for an assignment.  Lower is better for each."""
+    """All five goal terms for an assignment (plus the fleet-utility
+    shortfall when curves are attached).  Lower is better for each."""
     util, tasks = tier_loads(problem, assignment)
     util_frac = util / problem.capacity                  # [T, R]
     task_frac = tasks / problem.task_limit               # [T]
@@ -46,24 +70,31 @@ def goal_terms(problem: Problem, assignment: jax.Array) -> dict[str, jax.Array]:
     total_crit = jnp.maximum(jnp.sum(problem.criticality), 1.0)
     criticality = jnp.sum(moved * problem.criticality) / total_crit
 
-    return {
+    terms = {
         "under_ideal": under_ideal,
         "resource_balance": resource_balance,
         "task_balance": task_balance,
         "movement_cost": movement_cost,
         "criticality": criticality,
     }
+    if problem.has_utility:
+        delivered = tier_delivery_factor(util_frac)[assignment]
+        terms["utility_shortfall"] = _utility_shortfall(problem, delivered)
+    return terms
 
 
 def objective(problem: Problem, assignment: jax.Array) -> jax.Array:
     """Scalarized multi-objective cost (lower is better)."""
     terms = goal_terms(problem, assignment)
     w = problem.weights
-    return (w.under_ideal * terms["under_ideal"]
-            + w.resource_balance * terms["resource_balance"]
-            + w.task_balance * terms["task_balance"]
-            + w.movement_cost * terms["movement_cost"]
-            + w.criticality * terms["criticality"])
+    obj = (w.under_ideal * terms["under_ideal"]
+           + w.resource_balance * terms["resource_balance"]
+           + w.task_balance * terms["task_balance"]
+           + w.movement_cost * terms["movement_cost"]
+           + w.criticality * terms["criticality"])
+    if problem.has_utility:
+        obj = obj + FLEET_UTILITY_WEIGHT * terms["utility_shortfall"]
+    return obj
 
 
 def soft_objective(problem: Problem, probs: jax.Array) -> jax.Array:
@@ -94,8 +125,14 @@ def soft_objective(problem: Problem, probs: jax.Array) -> jax.Array:
     criticality = jnp.sum(moved * problem.criticality) / total_crit
 
     w = problem.weights
-    return (w.under_ideal * under_ideal
-            + w.resource_balance * resource_balance
-            + w.task_balance * task_balance
-            + w.movement_cost * movement_cost
-            + w.criticality * criticality)
+    obj = (w.under_ideal * under_ideal
+           + w.resource_balance * resource_balance
+           + w.task_balance * task_balance
+           + w.movement_cost * movement_cost
+           + w.criticality * criticality)
+    if problem.has_utility:
+        # Expected delivered fraction: each app's categorical mixes the
+        # tiers' fair-throttle factors.
+        delivered = probs @ tier_delivery_factor(util_frac)
+        obj = obj + FLEET_UTILITY_WEIGHT * _utility_shortfall(problem, delivered)
+    return obj

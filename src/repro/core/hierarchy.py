@@ -819,7 +819,8 @@ def cooperate(
     active = bp.active(levels)
     timings = CoopTimings.for_levels(
         [lv.name for lv in levels],
-        premask=bool(cfg.premask), round_costs=[])
+        premask=any(cfg.premask_for(lv.name) for lv in levels),
+        round_costs=[])
     if cfg.plan is not None:
         for lv in active:
             bp.relax(lv, cfg.plan, cluster)
@@ -850,17 +851,18 @@ def cooperate(
         return r
 
     home_open = np.arange(problem.num_apps)
-    if cfg.premask or bp.bypassed:
+    if any(cfg.premask_for(lv.name) for lv in levels) or bp.bypassed:
         # Commit every level's feasibility into the solver's mask so those
         # rejection classes never reach the feedback loop.  The home column
         # stays open — the current placement was already accepted by the
         # stack, so "stay" must remain legal even for apps whose data
-        # source has since drifted out of budget.  A bypassed (OPEN) level
-        # folds its conservative fallback premask here even with
-        # ``cfg.premask`` off: its interactive vet is out of the loop, so
+        # source has since drifted out of budget.  ``cfg.premask`` is a
+        # global bool or a per-level mapping (``premask_for``).  A bypassed
+        # (OPEN) level folds its conservative fallback premask here even
+        # with its premask off: its interactive vet is out of the loop, so
         # the premask is the only constraint it still exerts.
         for lv in levels:
-            if not cfg.premask and lv.name not in bp.bypassed:
+            if not cfg.premask_for(lv.name) and lv.name not in bp.bypassed:
                 continue
             t = time.perf_counter()
             pre = bp.premask(lv, problem)

@@ -64,7 +64,7 @@ derived from.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Literal, Optional
+from typing import Callable, Literal, Mapping, Optional, Union
 
 import numpy as np
 
@@ -224,7 +224,12 @@ class CoopConfig:
     variant: Variant = "manual_cnst"
     max_rounds: int = 8
     timeout_s: Optional[float] = None
-    premask: bool = True
+    # Premask folding: a global bool (the historical knob), or a per-level
+    # mapping {level_name: bool} — levels absent from the mapping default to
+    # True, so {"shard": False} keeps region/host folded while leaving the
+    # shard level's feasibility to its interactive vet.  ``premask_for``
+    # resolves either form.
+    premask: Union[bool, Mapping[str, bool]] = True
     restart_rounds: int = 0
     batch_moves: Optional[int] = None  # engine: top-k commit batch override
     bucket_apps: bool = True  # engine: pow-2 app-bucket jit caching
@@ -233,6 +238,17 @@ class CoopConfig:
     move_cost: Optional[np.ndarray] = None  # f32[N] per-app move pricing
     cost_budget: float = float("inf")
     breakers: object = None  # core.health.BreakerBoard | None
+    # core.shedding.ShedPlan | None.  Unlike ``plan`` (which only steers the
+    # solver), an active shed plan is an *actuated* throttle: the bus scales
+    # the problem's demand by the delivery caps before the solver sees it
+    # AND before the decision is judged — the fleet really serves less.
+    shed: object = None
+
+    def premask_for(self, name: str) -> bool:
+        """Whether level ``name``'s feasibility is folded pre-solve."""
+        if isinstance(self.premask, bool):
+            return self.premask
+        return bool(self.premask.get(name, True))
 
     def hierarchy(self, override: Optional[Hierarchy] = None) -> Hierarchy:
         if override is not None:

@@ -42,6 +42,10 @@ from repro.core.problem import Problem
 CAPACITY = "capacity"
 OUTAGE = "outage"
 RESTORE = "restore"
+# A load-shed cap transition (core.shedding): ``scale`` is the app's new
+# delivery cap.  Published for audit/observability; the planner's capacity
+# and outage logic ignore it.
+SHED = "shed"
 
 # Fixed detach/attach overhead of one move, in units of the mean live app's
 # demand-proportional cost (the Madsen reconfiguration curve's intercept).

@@ -109,6 +109,23 @@ class Problem:
     move_frac: jax.Array     # f32[]      movement allowance as fraction of N (constraint 3)
     weights: GoalWeights
 
+    # --- utility curves (Henge-style, arXiv 1802.00082; all-or-none) ---
+    # Per-app monotone utility over *delivered* capacity fraction d in [0, 1]:
+    #   u(d) = util_weight * clip(1 - util_slope * max(0, util_knee - d), 0, 1)
+    # — flat at u_max above the knee (the SLO point), criticality-scaled
+    # linear loss below it; util_slope = +inf recovers the binary SLO table
+    # as an exact step curve.  ``None`` (the default) disables the fleet-
+    # utility goal term entirely: every objective number is bit-identical to
+    # a problem without curves.
+    util_knee: Optional[jax.Array] = None    # f32[N] delivered frac at the SLO point
+    util_slope: Optional[jax.Array] = None   # f32[N] loss rate below the knee
+    util_weight: Optional[jax.Array] = None  # f32[N] u_max per app
+
+    @property
+    def has_utility(self) -> bool:
+        """Static (trace-time) flag: utility curves attached to this problem."""
+        return self.util_knee is not None
+
     @property
     def num_apps(self) -> int:
         return self.demand.shape[0]
@@ -116,6 +133,10 @@ class Problem:
     @property
     def num_tiers(self) -> int:
         return self.capacity.shape[0]
+
+    @property
+    def num_resources(self) -> int:
+        return self.capacity.shape[1]
 
     @property
     def num_valid(self) -> jax.Array:
@@ -196,6 +217,9 @@ def make_problem(
     move_frac: float = 0.10,
     avoid: Optional[np.ndarray] = None,
     weights: Optional[GoalWeights] = None,
+    util_knee: Optional[np.ndarray] = None,
+    util_slope: Optional[np.ndarray] = None,
+    util_weight: Optional[np.ndarray] = None,
 ) -> Problem:
     """Construct a Problem from host arrays with paper-default knobs.
 
@@ -218,6 +242,13 @@ def make_problem(
         avoid = jnp.zeros((N, T), bool)
     else:
         avoid = jnp.asarray(avoid, bool)
+    curves = (util_knee, util_slope, util_weight)
+    if any(c is not None for c in curves):
+        if any(c is None for c in curves):
+            raise ValueError("utility curves need all of util_knee/util_slope/"
+                             "util_weight (or none of them)")
+        curves = tuple(jnp.asarray(c, jnp.float32) for c in curves)
+    util_knee, util_slope, util_weight = curves
     return Problem(
         demand=demand,
         tasks=jnp.asarray(tasks, jnp.float32),
@@ -233,6 +264,9 @@ def make_problem(
         avoid=avoid,
         move_frac=jnp.float32(move_frac),
         weights=weights or GoalWeights.default(),
+        util_knee=util_knee,
+        util_slope=util_slope,
+        util_weight=util_weight,
     )
 
 
@@ -273,6 +307,16 @@ def pad_problem(problem: Problem, bucket: Optional[int] = None) -> Problem:
         cfg = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
         return jnp.pad(x, cfg, constant_values=value)
 
+    extra = {}
+    if problem.has_utility:
+        # Inert rows carry zero u_max, so they contribute to neither the
+        # delivered- nor the achievable-utility sum; knee=1/slope=0 keeps the
+        # padded curves well-formed.
+        extra = dict(
+            util_knee=padn(problem.util_knee, 1.0),
+            util_slope=padn(problem.util_slope, 0.0),
+            util_weight=padn(problem.util_weight, 0.0),
+        )
     return dataclasses.replace(
         problem,
         demand=padn(problem.demand),
@@ -282,4 +326,5 @@ def pad_problem(problem: Problem, bucket: Optional[int] = None) -> Problem:
         assignment0=padn(problem.assignment0),
         valid=padn(problem.valid, False),
         avoid=padn(problem.avoid, False),
+        **extra,
     )

@@ -194,7 +194,16 @@ class Sptlb:
         solve_fn = engine_fn(engine, timeout_s, seed,
                              batch_moves=cfg.batch_moves,
                              bucket_apps=cfg.bucket_apps)
-        solve_cluster = self.cluster
+        # An active shed plan (core.shedding) is an actuated throttle: the
+        # fleet really serves ``cap x demand``, so BOTH the solver's problem
+        # and the decision's evaluation see the capped demand — unlike
+        # ``plan``, which only steers the solver.
+        base_cluster = self.cluster
+        shed = cfg.shed
+        if shed is not None and shed.active:
+            base_cluster = dataclasses.replace(
+                self.cluster, problem=shed.apply(self.cluster.problem))
+        solve_cluster = base_cluster
         plan = cfg.plan
         if plan is not None and plan.active:
             # dataclasses.replace starts a fresh precompute cache, which is
@@ -202,7 +211,7 @@ class Sptlb:
             # the real cluster's.  The level relax hooks (region latency,
             # shard co-location) fire inside ``cooperate`` via cfg.plan.
             solve_cluster = dataclasses.replace(
-                self.cluster, problem=plan.apply(self.cluster.problem))
+                base_cluster, problem=plan.apply(base_cluster.problem))
         t0 = time.perf_counter()
         greedy_timings = None
         if engine.startswith("greedy-"):
@@ -212,8 +221,8 @@ class Sptlb:
             # stack's packing contract).
             res = solve_fn(solve_cluster.problem)
             greedy_timings = {}
-            res = enforce_cost_budget(self.cluster, res,
-                                      np.asarray(self.cluster.problem.assignment0),
+            res = enforce_cost_budget(base_cluster, res,
+                                      np.asarray(base_cluster.problem.assignment0),
                                       cfg.move_cost, cfg.cost_budget, (),
                                       greedy_timings)
             coop = None
@@ -223,10 +232,12 @@ class Sptlb:
             res = coop.result
         t_solve = time.perf_counter()
 
-        # Decision evaluation is always against the *real* collected problem
-        # — a plan only steers the solver (tightened capacity would otherwise
-        # mis-score a perfectly good mapping as over-capacity).
-        problem: Problem = self.cluster.problem
+        # Decision evaluation is against the *served* problem (real collected
+        # demand, scaled by any actuated shed caps) — a plan only steers the
+        # solver (tightened capacity would otherwise mis-score a perfectly
+        # good mapping as over-capacity), but shed caps change what the fleet
+        # actually serves.
+        problem: Problem = base_cluster.problem
         if coop is not None:
             movement = coop.timings.get("movement_cost", 0.0)
             trimmed = int(coop.timings.get("budget_trimmed", 0))
@@ -243,6 +254,13 @@ class Sptlb:
                 "min_tier_factor": float(plan.tier_factor.min()),
                 "avoid_tiers": int(plan.avoid_tiers.sum()),
                 "relax_tiers": int(plan.relax_home_tiers.sum()),
+            }
+        if shed is not None and shed.active:
+            res.extra["shed"] = {
+                "capped": int(np.sum(shed.caps < 1.0)),
+                "churn": shed.churned,
+                "churn_cost": shed.churn_cost,
+                "overload_frac": shed.overload_frac,
             }
         decision = BalanceDecision(
             assignment=res.assignment,

@@ -1,0 +1,208 @@
+"""Per-app utility curves over delivered capacity (Henge, arXiv 1802.00082).
+
+The paper's binary SLO-class table can only *record* an overload (an app on
+an ineligible or saturated tier ticks a violation); it cannot trade one
+app's degradation against another's.  Henge's insight is to give every app
+a monotone utility curve over its **delivered capacity fraction** d — the
+share of its demanded capacity it actually receives — and let the
+controller maximize *fleet* utility.  Overload then resolves by shedding
+the cheapest utility first instead of stranding whoever happens to sit on
+the saturated tier.
+
+The curve family here is piecewise linear with a knee at the SLO point:
+
+    u(d) = u_max * clip(1 - slope * max(0, knee - d), 0, 1)
+
+* flat at ``u_max`` for d >= knee (meeting the SLO earns full utility;
+  over-delivery earns nothing — monotone, never decreasing),
+* linear loss below the knee with a **criticality-scaled slope** (critical
+  apps fall off a cliff, best-effort apps degrade gently),
+* ``slope = +inf`` is an exact **step curve**: u = u_max iff d >= knee,
+  which recovers the old binary table as a special case (parity-tested in
+  tests/test_overload.py).
+
+Curves ride on ``Problem`` as the optional ``util_knee / util_slope /
+util_weight`` arrays (``None`` = feature off, objective bit-identical) and
+are scored by the fleet-utility goal term in ``core.goals``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.problem import Problem
+
+# Default curve shape: knee at full demanded capacity (the SLO point of the
+# paper's table — an app is "meeting SLO" when fully served), base slope 2.0
+# (utility hits 0 at half delivery for a criticality-0 app) scaled up to 8.0
+# at criticality 1 (critical apps lose utility four times faster).
+DEFAULT_KNEE = 1.0
+BASE_SLOPE = 2.0
+CRIT_SLOPE_SCALE = 3.0
+# u_max floor so even zero-criticality apps carry utility worth serving.
+BASE_WEIGHT = 0.5
+
+
+def utility_of(delivered, knee, slope, weight):
+    """Evaluate the curve family; jnp-traceable, broadcasts elementwise.
+
+    ``slope = +inf`` yields the exact step curve (the deficit==0 branch is
+    selected before the inf can poison anything).
+    """
+    deficit = jnp.maximum(knee - delivered, 0.0)
+    loss = jnp.where(deficit > 0.0, slope * deficit, 0.0)
+    return weight * jnp.clip(1.0 - loss, 0.0, 1.0)
+
+
+def default_curves(
+    criticality,
+    *,
+    knee: float = DEFAULT_KNEE,
+    base_slope: float = BASE_SLOPE,
+    crit_scale: float = CRIT_SLOPE_SCALE,
+    base_weight: float = BASE_WEIGHT,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(knee, slope, weight) arrays from per-app criticality scores.
+
+    Slope and u_max both scale with criticality: critical apps are worth
+    more at full delivery *and* degrade faster below the knee, so the
+    utility-optimal shed order puts best-effort headroom first.
+    """
+    crit = np.asarray(criticality, np.float32)
+    knees = np.full(crit.shape, knee, np.float32)
+    slopes = (base_slope * (1.0 + crit_scale * crit)).astype(np.float32)
+    weights = (base_weight + crit).astype(np.float32)
+    return knees, slopes, weights
+
+
+def step_curves(
+    criticality, *, knee: float = DEFAULT_KNEE, base_weight: float = BASE_WEIGHT
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """The binary SLO table as a curve: full utility at the knee, none below."""
+    crit = np.asarray(criticality, np.float32)
+    knees = np.full(crit.shape, knee, np.float32)
+    slopes = np.full(crit.shape, np.inf, np.float32)
+    weights = (base_weight + crit).astype(np.float32)
+    return knees, slopes, weights
+
+
+def attach_curves(
+    problem: Problem, knee=None, slope=None, weight=None, *, step: bool = False
+) -> Problem:
+    """A copy of ``problem`` with utility curves attached.
+
+    With no explicit arrays, derives ``default_curves`` (or ``step_curves``
+    when ``step=True``) from the problem's own criticality scores.
+    """
+    if knee is None:
+        maker = step_curves if step else default_curves
+        knee, slope, weight = maker(np.asarray(problem.criticality))
+    return dataclasses.replace(
+        problem,
+        util_knee=jnp.asarray(knee, jnp.float32),
+        util_slope=jnp.asarray(slope, jnp.float32),
+        util_weight=jnp.asarray(weight, jnp.float32),
+    )
+
+
+def tier_delivery_factor(util_frac) -> jax.Array:
+    """f32[T] fair-throttle factor per tier from utilization fractions.
+
+    A tier loaded past capacity serves every resident the same fraction
+    ``capacity / load`` (fair queueing across apps); an under-loaded tier
+    serves in full.  The worst resource binds.
+    """
+    util_frac = jnp.asarray(util_frac)
+    factor = jnp.where(util_frac > 1.0, 1.0 / jnp.maximum(util_frac, 1e-9), 1.0)
+    return jnp.min(factor, axis=-1)
+
+
+def delivered_fractions(
+    problem: Problem, assignment, caps: Optional[jax.Array] = None
+) -> jax.Array:
+    """f32[N] delivered capacity fraction per app under an assignment.
+
+    ``caps`` (delivery caps in [0, 1], e.g. the LoadShedder's throttles)
+    scale each app's *served* demand at the source; the tier fair-throttle
+    then applies to what is actually offered to the tier.  An app's
+    delivered fraction is its own cap times its tier's throttle.
+    """
+    demand = problem.demand
+    if caps is not None:
+        demand = demand * jnp.asarray(caps, demand.dtype)[:, None]
+    w = problem.valid.astype(demand.dtype)
+    util = jax.ops.segment_sum(demand * w[:, None], assignment, num_segments=problem.num_tiers)
+    factor = tier_delivery_factor(util / problem.capacity)
+    delivered = factor[assignment]
+    if caps is not None:
+        delivered = delivered * jnp.asarray(caps, delivered.dtype)
+    return jnp.where(problem.valid, delivered, 0.0)
+
+
+def fleet_utility(
+    problem: Problem, assignment, caps: Optional[jax.Array] = None
+) -> tuple[jax.Array, jax.Array]:
+    """(delivered utility, max achievable utility) over valid apps.
+
+    Requires curves on the problem (``problem.has_utility``).
+    """
+    d = delivered_fractions(problem, assignment, caps)
+    u = utility_of(d, problem.util_knee, problem.util_slope, problem.util_weight)
+    w = problem.valid.astype(u.dtype)
+    return jnp.sum(u * w), jnp.sum(problem.util_weight * w)
+
+
+def oracle_utility(problem: Problem, caps: Optional[np.ndarray] = None) -> float:
+    """Placement-free upper bound on delivered fleet utility (host numpy).
+
+    Fractional-knapsack fill against *total* fleet capacity: apps are
+    served in descending marginal-utility-density order (utility per unit
+    demand), each up to its knee, until the scarcest resource runs out.
+    Ignores tier boundaries, SLO eligibility, and movement budgets — no
+    real controller can beat it, so delivered/oracle is a bounded score.
+    """
+    demand = np.asarray(problem.demand, np.float64)
+    valid = np.asarray(problem.valid, bool)
+    knee = np.asarray(problem.util_knee, np.float64)
+    weight = np.asarray(problem.util_weight, np.float64)
+    cap_total = np.asarray(problem.capacity, np.float64).sum(axis=0)
+    if caps is not None:
+        demand = demand * np.asarray(caps, np.float64)[:, None]
+    # Serving app i at its knee costs knee_i * demand_i and earns weight_i.
+    need = knee[:, None] * demand  # [N, R]
+    load = need.sum(axis=1)
+    density = weight / np.maximum(load, 1e-9)
+    order = np.argsort(-density)
+    remaining = cap_total.copy()
+    total = 0.0
+    slope = np.asarray(problem.util_slope, np.float64)
+    for i in order:
+        if not valid[i] or weight[i] <= 0.0:
+            continue
+        if load[i] <= 1e-12:
+            total += weight[i]  # free to serve fully
+            continue
+        ratio = np.divide(
+            remaining, need[i], out=np.full_like(remaining, np.inf), where=need[i] > 0
+        )
+        frac = min(1.0, float(np.min(ratio)))
+        if frac <= 0.0:
+            continue
+        d = frac * knee[i]
+        deficit = max(0.0, knee[i] - d)
+        loss = slope[i] * deficit if deficit > 0 else 0.0
+        earned = weight[i] * min(1.0, max(0.0, 1.0 - loss))
+        if earned <= 0.0:
+            # Partial service earns nothing (step curve / cliff slope):
+            # don't burn capacity on it.
+            continue
+        total += earned
+        remaining = remaining - frac * need[i]
+        if np.all(remaining <= 1e-12):
+            break
+    return float(total)

@@ -2,9 +2,7 @@ from repro.distributed import sharding
 from repro.distributed.checkpoint import CheckpointManager
 from repro.distributed.compress import GradCompressor
 from repro.distributed.fault import (CapacityEvent, FaultInjector, Recovery,
-                                     apply_event, degrade, rebalance,
-                                     rebalance_after)
+                                     degrade, rebalance)
 
 __all__ = ["sharding", "CheckpointManager", "GradCompressor", "CapacityEvent",
-           "FaultInjector", "Recovery", "apply_event", "degrade", "rebalance",
-           "rebalance_after"]
+           "FaultInjector", "Recovery", "degrade", "rebalance"]

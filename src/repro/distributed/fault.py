@@ -31,14 +31,10 @@ maintenance; hard host failures stay surprises.
 implements the restart path: restore latest checkpoint -> rebuild mesh over
 the surviving devices -> re-route streams via SPTLB.
 
-The pre-unification entry points ``apply_event`` and ``rebalance_after``
-(which rewrote tier capacity privately, bypassing the advisory channel) are
-deprecated shims over ``degrade`` / ``rebalance``.
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Callable, Optional
 
 import jax.numpy as jnp
@@ -170,27 +166,6 @@ def rebalance(cluster: ClusterState, *events,
     rebalanced = dataclasses.replace(degraded, problem=new_problem)
     return rebalanced, decision
 
-
-def apply_event(cluster: ClusterState, event: CapacityEvent) -> ClusterState:
-    """Deprecated: use ``degrade(cluster, event.to_timed())``."""
-    warnings.warn(
-        "distributed.fault.apply_event is deprecated: convert the event "
-        "with CapacityEvent.to_timed() and apply it with degrade(), which "
-        "routes through the sim event contract (sim.events.FleetState).",
-        DeprecationWarning, stacklevel=2)
-    return degrade(cluster, event.to_timed())
-
-
-def rebalance_after(cluster: ClusterState, event: CapacityEvent,
-                    *, engine: str = "local",
-                    variant: str = "manual_cnst") -> tuple[ClusterState, SolveResult]:
-    """Deprecated: use ``rebalance(cluster, event, ...)``."""
-    warnings.warn(
-        "distributed.fault.rebalance_after is deprecated: use rebalance(), "
-        "which takes timed sim events and a CoopConfig.",
-        DeprecationWarning, stacklevel=2)
-    return rebalance(cluster, event, engine=engine,
-                     config=CoopConfig(variant=variant))
 
 
 @dataclasses.dataclass

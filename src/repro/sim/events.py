@@ -202,13 +202,26 @@ class RegionRestore(TimedEvent):
 @dataclasses.dataclass(frozen=True)
 class FlashCrowd(TimedEvent):
     """Spike a random ``frac`` of the live apps to ``magnitude``x demand;
-    the workload step decays them back geometrically."""
+    the workload step decays them back geometrically.
+
+    ``crit_below`` restricts the crowd to apps under that criticality — the
+    utility-skewed overload case: the spike lands on low-utility demand, so
+    a utility-aware controller can shed its way out while the binary-SLO
+    baseline sees an undifferentiated overload.
+    """
 
     frac: float = 0.05
     magnitude: float = 6.0
+    crit_below: float | None = None
 
     def apply(self, fleet: FleetState) -> None:
-        live = np.where(np.asarray(fleet.wl.valid))[0]
+        live = np.asarray(fleet.wl.valid).copy()
+        if self.crit_below is not None:
+            crit = np.asarray(fleet.cluster.problem.criticality)
+            live &= crit < self.crit_below
+        live = np.where(live)[0]
+        if live.size == 0:
+            return
         k = max(1, int(round(self.frac * live.size)))
         ids = fleet.rng.choice(live, size=min(k, live.size), replace=False)
         fleet.wl = W.inject_flash_crowd(fleet.wl, ids, self.magnitude)

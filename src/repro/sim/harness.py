@@ -26,19 +26,24 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.constraints import FEAS_TOL
 from repro.core.controller import (BalanceController, ControllerConfig,
                                    FaultToleranceConfig)
 from repro.core.hierarchy import RegionScheduler
 from repro.core.levels import DEFAULT_LEVELS
+from repro.core.shedding import ShedConfig
 from repro.core.solver_local import local_search_trace_count
 from repro.core.telemetry import FIG3_INITIAL_UTIL, ClusterState, generate_cluster
+from repro.core.utility import attach_curves, default_curves
 from repro.sim.events import (ControlPlaneFault, FleetState, events_at,
                               faulty_hierarchy)
 from repro.sim.scenario import Scenario
 from repro.sim.slo import (SimReport, SloAccountant, chaos_compare, compare,
-                           count_unsafe_moves)
+                           count_unsafe_moves, overload_compare,
+                           utility_stats)
 from repro.sim.workload import (make_workload_state, workload_step,
                                 workload_trace_count)
+from repro.streams.admission import AdmissionController, AdmissionState
 
 # Sim-tuned controller defaults: short deterministic solver budget per tick
 # (the controller runs hundreds of times per trajectory), quick cooldown.
@@ -167,7 +172,7 @@ def _corrupt_telemetry(obs: ClusterState, fleet: FleetState) -> ClusterState:
 
 
 def _observe(fleet: FleetState, observed: ClusterState | None,
-             tick: int) -> ClusterState:
+             tick: int, view: ClusterState | None = None) -> ClusterState:
     """The controller's telemetry channel for this tick.
 
     Normal operation: the true cluster, stamped ``collected_at=tick``
@@ -179,12 +184,17 @@ def _observe(fleet: FleetState, observed: ClusterState | None,
     is the controller's *own action record*, not telemetry.  A blackout
     declared at tick 0 has no snapshot to freeze and passes tick 0
     through fresh.
+
+    ``view`` overrides what "the truth" looks like to the controller —
+    overload runs feed the *resident* cluster (admission-deferred apps
+    held out) rather than the raw offered one.
     """
+    truth = fleet.cluster if view is None else view
     if tick < fleet.blackout_until and observed is not None:
         return dataclasses.replace(
             observed, problem=observed.problem.with_assignment0(
-                fleet.cluster.problem.assignment0))
-    obs = dataclasses.replace(fleet.cluster, collected_at=tick)
+                truth.problem.assignment0))
+    obs = dataclasses.replace(truth, collected_at=tick)
     if tick < fleet.corrupt_until:
         obs = _corrupt_telemetry(obs, fleet)
     return obs
@@ -209,9 +219,118 @@ def _apply_fault_windows(ctl: BalanceController, fleet: FleetState,
         ctl.hierarchy_override = None
 
 
+# -- overload machinery: the admission gate in front of the trajectory ------
+
+def _resident_view(cluster: ClusterState,
+                   resident: np.ndarray) -> ClusterState:
+    """The cluster as the controller sees it: admission-held apps are not
+    resident — their rows go inert (the pad_problem convention) so tier
+    loads, balance totals and the shedder never count them."""
+    p = cluster.problem
+    return dataclasses.replace(cluster, problem=dataclasses.replace(
+        p, valid=jnp.asarray(resident),
+        demand=jnp.asarray(np.asarray(p.demand) * resident[:, None]),
+        tasks=jnp.asarray(np.asarray(p.tasks) * resident)))
+
+
+def _admit_arrivals(fleet: FleetState, ctl: BalanceController,
+                    pending: dict[int, int], arrivals: np.ndarray,
+                    tick: int, counters: dict) -> np.ndarray:
+    """Gate this tick's arrivals plus retry-eligible deferred apps through
+    the controller's admission gate.  Mutates ``pending`` (app id -> next
+    retry tick) and returns the new assignment0 with admitted apps placed
+    at their priced tier.
+
+    Each candidate is priced against the resident world *as of its own
+    decision* (earlier admissions in the same tick count), so a batch of
+    arrivals cannot collectively over-commit a tier the gate priced as
+    having room for one.  After every admission the destination tier is
+    re-checked against hard capacity at the admitted cap — the
+    ``infeasible_admissions`` counter the regression gate pins to zero.
+    """
+    problem = fleet.cluster.problem
+    dem = np.asarray(problem.demand, np.float64)
+    tasks = np.asarray(problem.tasks, np.float64)
+    slo = np.asarray(problem.slo)
+    crit = np.asarray(problem.criticality)
+    valid = np.asarray(problem.valid, bool)
+    x0 = np.asarray(problem.assignment0).copy()
+    cap_arr = np.asarray(problem.capacity, np.float64)
+    klim = np.asarray(problem.task_limit, np.float64)
+    pool = valid.size
+
+    # Retired-while-waiting apps leave the queue; fresh arrivals join it
+    # (retry "now", i.e. this tick).
+    for n in [n for n in pending if not valid[n]]:
+        del pending[n]
+    for n in arrivals:
+        pending.setdefault(int(n), tick)
+    candidates = sorted(n for n, t in pending.items() if t <= tick)
+    if not candidates:
+        return x0
+
+    caps = np.ones(pool, np.float64)
+    if ctl.shedder is not None and ctl.shedder.caps is not None:
+        c = np.asarray(ctl.shedder.caps, np.float64)
+        caps[:c.size] = c
+
+    pending_mask = np.zeros(pool, bool)
+    pending_mask[list(pending)] = True
+    r_valid = valid & ~pending_mask
+    # Resident tier loads at the *served* caps — the independent recount
+    # the post-admit feasibility check runs against.
+    util = np.zeros_like(cap_arr)
+    tsk = np.zeros(cap_arr.shape[0])
+    np.add.at(util, x0[r_valid], dem[r_valid] * caps[r_valid, None])
+    np.add.at(tsk, x0[r_valid], tasks[r_valid])
+
+    for n in candidates:
+        r_problem = dataclasses.replace(
+            problem, valid=jnp.asarray(r_valid),
+            demand=jnp.asarray(dem * r_valid[:, None]),
+            tasks=jnp.asarray(tasks * r_valid)).with_assignment0(
+                jnp.asarray(x0))
+        d = ctl.admission.decide(
+            r_problem, demand=dem[n], tasks=float(tasks[n]),
+            slo=int(slo[n]), criticality=float(crit[n]), key=f"app{n}",
+            mode=ctl.mode.value, now=tick)
+        if d.admitted:
+            del pending[n]
+            x0[n] = d.tier
+            r_valid[n] = True
+            if (d.state is AdmissionState.ADMIT_DEGRADED
+                    and ctl.shedder is not None):
+                ctl.shedder._ensure(pool)
+                ctl.shedder.set_cap(n, d.cap)
+                caps[n] = d.cap
+            util[d.tier] += dem[n] * caps[n]
+            tsk[d.tier] += tasks[n]
+            # The admission contract is *marginal* per resource: the app
+            # must fit the headroom on every resource it consumes.  A tier
+            # already over capacity on a resource the app demands none of
+            # (workload drift after earlier admissions) is the shedder's
+            # problem, not an infeasible admission.
+            used = dem[n] > 0.0
+            # Slack scales with the candidate: pricing admits at
+            # max_cap >= 1 - FEAS_TOL, so an overshoot up to
+            # demand * FEAS_TOL is the tolerance working, not a bug.
+            over = (util[d.tier]
+                    > cap_arr[d.tier] + FEAS_TOL * (1.0 + dem[n]))
+            if (np.any(over & used)
+                    or tsk[d.tier] > klim[d.tier] + FEAS_TOL):
+                counters["infeasible_admissions"] += 1
+        else:
+            # DEFER backs off per the decision; REJECT (SAFE mode) has no
+            # retry hint — the sim re-submits once the backoff-equivalent
+            # window passes, modelling a client retrying after the fleet
+            # leaves SAFE.
+            pending[n] = tick + (d.retry_after if d.retry_after > 0 else 4)
+    return x0
+
+
 def run_scenario(sc: Scenario, *, policy: str = "balanced",
                  config: ControllerConfig | None = None,
-                 anticipation: bool = True,
+                 anticipation: bool = True, utility: bool = False,
                  verbose: bool = False) -> SimReport:
     """Run one scenario under one policy; returns the scored trajectory.
 
@@ -220,11 +339,21 @@ def run_scenario(sc: Scenario, *, policy: str = "balanced",
     scenario's ``move_budget`` (when set) becomes the controller's
     trajectory movement budget unless the caller's config already pins one
     — so the proactive evacuation is judged against what it spends.
+
+    ``utility`` arms the overload-resilient control plane on an overload
+    scenario: utility curves attach to the controller's problem, arrivals
+    route through the admission gate (admit / admit-degraded / defer with
+    backoff), and the load shedder runs in the cooperation bus.  The
+    binary-baseline twin (``utility=False``) rides the same trajectory
+    with none of it — both are scored on the same curves by
+    ``utility_stats``, which is what makes ``overload_compare`` fair.
     """
     assert policy in ("balanced", "static"), policy
     has_chaos = sc.chaos or any(isinstance(e, ControlPlaneFault)
                                 for e in sc.events)
     fleet = build_fleet(sc)
+    curves = (default_curves(np.asarray(fleet.cluster.problem.criticality))
+              if sc.overload else None)
     ctl = None
     if policy == "balanced":
         cfg = config or (CHAOS_CONTROLLER if has_chaos else SIM_CONTROLLER)
@@ -236,10 +365,24 @@ def run_scenario(sc: Scenario, *, policy: str = "balanced",
             cfg = dataclasses.replace(
                 cfg, coop=dataclasses.replace(cfg.coop,
                                               levels=tuple(sc.levels)))
+        if utility and cfg.shed is None:
+            cfg = dataclasses.replace(cfg, shed=ShedConfig())
+        if utility and curves is not None:
+            # The utility run's controller sees the curves on every problem
+            # it observes: attached once here, they ride through the
+            # per-tick demand/valid replaces.  The binary twin's problem
+            # never carries them (``has_utility`` stays False end to end).
+            fleet.cluster = dataclasses.replace(
+                fleet.cluster,
+                problem=attach_curves(fleet.cluster.problem, *curves))
         ctl = BalanceController(fleet.cluster, cfg)
         if anticipation:
             ctl.set_advisories(fleet.declared_events)
+        if utility:
+            ctl.admission = AdmissionController()
     acct = SloAccountant()
+    pending: dict[int, int] = {}     # admission-deferred: app id -> retry tick
+    overload_counters = {"infeasible_admissions": 0}
     solver_traces0 = local_search_trace_count()
     wl_traces0 = workload_trace_count()
     observed: ClusterState | None = None   # chaos telemetry channel
@@ -260,8 +403,19 @@ def run_scenario(sc: Scenario, *, policy: str = "balanced",
             ev.apply(fleet)
 
         # 3. Place arrivals (after events: admission sees drained capacity).
+        # Overload + utility: arrivals (and retry-eligible deferred apps)
+        # route through the admission gate instead — admitted apps land at
+        # their priced tier, deferred ones stay out of the resident world.
         arrivals = np.where(np.asarray(valid) & ~prev_valid)[0]
-        if arrivals.size:
+        gated = ctl is not None and sc.overload and utility
+        if gated:
+            x0 = _admit_arrivals(fleet, ctl, pending, arrivals, tick,
+                                 overload_counters)
+            fleet.cluster = dataclasses.replace(
+                fleet.cluster,
+                problem=fleet.cluster.problem.with_assignment0(
+                    jnp.asarray(x0)))
+        elif arrivals.size:
             x0 = place_arrivals(fleet, arrivals)
             fleet.cluster = dataclasses.replace(
                 fleet.cluster,
@@ -269,7 +423,61 @@ def run_scenario(sc: Scenario, *, policy: str = "balanced",
                     jnp.asarray(x0)))
 
         # 4. Controller decides; the applied mapping becomes assignment0.
-        if ctl is not None and has_chaos:
+        if ctl is not None and sc.overload:
+            # Overload runs (utility AND binary twin) share one transplant
+            # path so both are scored identically: the controller plans on
+            # the resident view (deferred apps held out; empty for the
+            # binary twin), committed moves transplant onto the offered
+            # world, and the accountant scores the *served* world —
+            # resident apps at their shed caps.
+            pending_mask = np.zeros(np.asarray(valid).size, bool)
+            if pending:
+                pending_mask[list(pending)] = True
+            r_valid = np.asarray(fleet.cluster.problem.valid) & ~pending_mask
+            view = _resident_view(fleet.cluster, r_valid)
+            x_before = np.asarray(view.problem.assignment0)
+            if has_chaos:
+                observed = _observe(fleet, observed, tick, view=view)
+                _apply_fault_windows(ctl, fleet, tick, base_cfg)
+                evr = ctl.tick(observed, now=tick,
+                               collected_at=observed.collected_at)
+            else:
+                evr = ctl.tick(view, now=tick)
+            if evr.applied:
+                committed = np.asarray(ctl.cluster.problem.assignment0)
+                fleet.cluster = dataclasses.replace(
+                    fleet.cluster,
+                    problem=fleet.cluster.problem.with_assignment0(
+                        jnp.asarray(committed)))
+            caps_vec = None
+            if (utility and ctl.shedder is not None
+                    and ctl.shedder.caps is not None):
+                caps_vec = np.asarray(ctl.shedder.caps, np.float32)
+            served = _resident_view(fleet.cluster, r_valid)
+            if caps_vec is not None and np.any(caps_vec < 1.0):
+                served = dataclasses.replace(
+                    served, problem=dataclasses.replace(
+                        served.problem,
+                        demand=served.problem.demand
+                        * jnp.asarray(caps_vec)[:, None]))
+            unsafe = 0
+            if evr.applied and has_chaos:
+                # Safety judged against the served true world: with caps
+                # actuated, that is what the moves actually land on.
+                unsafe = count_unsafe_moves(served.problem, x_before,
+                                            committed)
+            ustats = utility_stats(fleet.cluster.problem, curves,
+                                   caps=caps_vec, pending=pending_mask)
+            stat = acct.observe(
+                served, moved=evr.moved if evr.applied else 0,
+                applied=evr.applied, triggered=evr.triggered,
+                solve_s=evr.time_s,
+                movement_cost=evr.movement_cost if evr.applied else 0.0,
+                budget_limited=evr.budget_limited, unsafe_moves=unsafe,
+                mode=evr.mode, health_score=evr.health_score,
+                utility=ustats, shed_capped_apps=evr.shed_active,
+                shed_churn=evr.shed_churn)
+        elif ctl is not None and has_chaos:
             # Chaos: the controller plans on the *observed* channel (frozen
             # or corrupted telemetry) while the accountant scores the true
             # cluster.  Committed moves transplant back onto the truth —
@@ -329,6 +537,10 @@ def run_scenario(sc: Scenario, *, policy: str = "balanced",
             # the scenario's number instead would misgrade within_budget.
             move_budget=ctl.config.movement_cost_budget,
             anticipation=bool(anticipation and fleet.declared_events))
+    if ctl is not None and sc.overload:
+        report.extra.update(
+            infeasible_admissions=overload_counters["infeasible_admissions"],
+            deferred_backlog=len(pending))
     return report
 
 
@@ -343,6 +555,27 @@ def run_pair(sc: Scenario, *, config: ControllerConfig | None = None,
         "baseline": baseline,
         "balanced": balanced,
         "compare": compare(baseline, balanced),
+    }
+
+
+def run_overload_pair(sc: Scenario, *,
+                      config: ControllerConfig | None = None,
+                      verbose: bool = False) -> dict:
+    """An overload scenario two ways over the same trajectory: the
+    binary-SLO baseline controller (no curves, no admission, no shedding)
+    and the utility-armed control plane.  The ``overload`` record is the
+    scorecard the regression gate pins (delivered-utility improvement > 1,
+    zero infeasible admissions, budgets held)."""
+    binary_cfg = (dataclasses.replace(config, shed=None)
+                  if config is not None else None)
+    binary = run_scenario(sc, policy="balanced", config=binary_cfg,
+                          utility=False, verbose=verbose)
+    armed = run_scenario(sc, policy="balanced", config=config,
+                         utility=True, verbose=verbose)
+    return {
+        "binary": binary,
+        "utility": armed,
+        "overload": overload_compare(binary, armed),
     }
 
 

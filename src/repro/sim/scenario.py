@@ -74,6 +74,11 @@ class Scenario:
     # routes telemetry through the observed channel).  ``strip_chaos``
     # clears this on the oracle twin.
     chaos: bool = False
+    # Overload scenario: offered demand exceeds fleet capacity somewhere in
+    # the trajectory.  The harness scores delivered utility against the
+    # fractional-knapsack oracle and runs the admission/shedding machinery
+    # (``run_overload_pair``: utility policy vs the binary-SLO baseline).
+    overload: bool = False
     seed: int = 0
 
     @property
@@ -283,6 +288,83 @@ def _cascading_outage(num_apps: int, ticks: int, seed: int) -> Scenario:
             RegionRestore(at=max(t0 + dur + 3, (3 * ticks) // 4),
                           announced=False),
         ))
+
+
+# ---------------------------------------------------------------------------
+# overload family: offered demand exceeds capacity (PR 7 admission/shedding)
+# ---------------------------------------------------------------------------
+
+@scenario("overload_surge", "sustained arrival surge past fleet capacity: "
+                            "admission control + utility shedding decide "
+                            "who rides the saturated tiers")
+def _overload_surge(num_apps: int, ticks: int, seed: int) -> Scenario:
+    # A 2x standby pool filling at ~8%/tick: offered demand roughly doubles
+    # over the first half of the run, far past what the t=0-calibrated
+    # capacity serves.  The surge abates late, so hysteretic re-admission
+    # gets a recovery window to prove itself on.
+    return Scenario(
+        name="overload_surge", description="", ticks=ticks,
+        num_apps=num_apps, seed=seed, overload=True,
+        pool_frac=2.0, arrival_rate=max(1.0, 0.01 * num_apps),
+        retire_rate=0.004, util_scale=1.0,
+        workload=WorkloadConfig(period=max(16, ticks // 2),
+                                diurnal_amp=0.15, burst_sigma=0.10),
+        events=(ChurnRate(at=ticks // 6,
+                          arrival_rate=max(6.0, 0.12 * num_apps),
+                          retire_rate=0.0005),
+                ChurnRate(at=(3 * ticks) // 4,
+                          arrival_rate=0.0, retire_rate=0.03)),
+        move_budget=2.0 * num_apps)
+
+
+@scenario("overload_flash", "utility-skewed flash crowd: low-criticality "
+                            "apps spike past capacity — shedding them is "
+                            "cheap in utility, stranding is not")
+def _overload_flash(num_apps: int, ticks: int, seed: int) -> Scenario:
+    return Scenario(
+        name="overload_flash", description="", ticks=ticks,
+        num_apps=num_apps, seed=seed, overload=True, util_scale=1.0,
+        workload=WorkloadConfig(period=max(16, ticks // 2),
+                                diurnal_amp=0.15, burst_sigma=0.10,
+                                flash_decay=0.93),
+        events=(FlashCrowd(at=ticks // 4, frac=0.45, magnitude=6.0,
+                           crit_below=0.35),
+                FlashCrowd(at=(5 * ticks) // 8, frac=0.30, magnitude=8.0,
+                           crit_below=0.35)),
+        move_budget=2.0 * num_apps)
+
+
+@scenario("overload_capacity_loss", "capacity loss during a surge while "
+                                    "telemetry blacks out: overload "
+                                    "composing with control-plane chaos")
+def _overload_capacity_loss(num_apps: int, ticks: int, seed: int) -> Scenario:
+    t0 = ticks // 3
+    dur = max(4, ticks // 6)
+    return Scenario(
+        name="overload_capacity_loss", description="", ticks=ticks,
+        num_apps=num_apps, seed=seed, overload=True, chaos=True,
+        pool_frac=1.5, arrival_rate=max(1.0, 0.01 * num_apps),
+        retire_rate=0.003, util_scale=0.95,
+        workload=WorkloadConfig(period=max(16, ticks // 2),
+                                diurnal_amp=0.15, burst_sigma=0.10,
+                                flash_decay=0.90),
+        events=(ChurnRate(at=ticks // 8,
+                          arrival_rate=max(3.0, 0.05 * num_apps),
+                          retire_rate=0.001),
+                # The fleet shrinks mid-surge — unannounced — and the
+                # controller loses its telemetry right after: shedding has
+                # to run on the sanitized last-known-good view.
+                CapacityScale(at=t0, tier=0, scale=0.45, announced=False),
+                CapacityScale(at=t0 + 1, tier=3, scale=0.55,
+                              announced=False),
+                TelemetryBlackout(at=t0 + 2, ticks=dur),
+                FlashCrowd(at=t0 + dur + 2, frac=0.15, magnitude=5.0,
+                           crit_below=0.5),
+                CapacityScale(at=(3 * ticks) // 4, tier=0, scale=1.0,
+                              announced=False),
+                CapacityScale(at=(3 * ticks) // 4, tier=3, scale=1.0,
+                              announced=False)),
+        move_budget=2.0 * num_apps)
 
 
 @scenario("churn_heavy", "app arrivals/retirements over a standby pool "

@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import metrics as M
@@ -32,6 +33,8 @@ from repro.core.hierarchy import REGION_LATENCY_BUDGET_MS, RegionScheduler
 from repro.core.levels import SHARD_MIN_AFFINITY
 from repro.core.problem import Problem, utilization_fraction
 from repro.core.telemetry import ClusterState, shard_affinity_of
+from repro.core.utility import (delivered_fractions, oracle_utility,
+                                utility_of)
 
 # Slack on the over-ideal / over-capacity tests so float noise at exactly
 # the ideal line does not count as a violation tick.
@@ -76,6 +79,16 @@ class TickStats:
     unsafe_moves: int = 0
     mode: str = "normal"
     health_score: float = 1.0
+    # Overload accounting (overload scenarios only; all zero elsewhere):
+    # delivered fleet utility this tick vs the fractional-knapsack oracle
+    # and the all-served maximum, apps deferred at the admission gate, apps
+    # under a shed cap, and cap transitions executed this tick.
+    delivered_utility: float = 0.0
+    oracle_utility: float = 0.0
+    max_utility: float = 0.0
+    deferred_apps: int = 0
+    shed_capped_apps: int = 0
+    shed_churn: int = 0
 
 
 def score_cluster(problem: Problem) -> dict:
@@ -100,6 +113,43 @@ def score_cluster(problem: Problem) -> dict:
         "over_capacity_tiers": int(over_cap.sum()),
         "over_ideal_excess": float(excess.sum()),
         "d2b": float(M.difference_to_balance(problem, x)),
+    }
+
+
+def utility_stats(problem: Problem, curves, *, caps=None,
+                  pending=None) -> dict:
+    """One tick's delivered-utility accounting (overload scenarios).
+
+    ``problem`` is the *offered* world: ``valid`` includes apps the
+    admission gate is holding out (``pending``), demand is uncapped.
+    ``curves`` is the (knee, slope, weight) triple scoring is done under —
+    explicit, so the binary-baseline run is scored on the same utility
+    definition its controller never saw.  ``caps`` are the shedder's
+    delivery caps.  Deferred apps deliver 0 and earn ``u(0)``; the oracle
+    is priced on the full offered demand (deferred apps included — turning
+    one away is a *choice* the oracle gets to disagree with).
+    """
+    knee, slope, weight = (np.asarray(c, np.float32) for c in curves)
+    valid = np.asarray(problem.valid, bool)
+    pending = (np.zeros_like(valid) if pending is None
+               else np.asarray(pending, bool)) & valid
+    resident = valid & ~pending
+    p_curved = dataclasses.replace(
+        problem, util_knee=jnp.asarray(knee), util_slope=jnp.asarray(slope),
+        util_weight=jnp.asarray(weight))
+    p_resident = dataclasses.replace(
+        p_curved, valid=jnp.asarray(resident),
+        demand=p_curved.demand
+        * jnp.asarray(resident, p_curved.demand.dtype)[:, None])
+    delivered = np.asarray(delivered_fractions(
+        p_resident, p_resident.assignment0, caps))
+    u = np.asarray(utility_of(jnp.asarray(delivered), jnp.asarray(knee),
+                              jnp.asarray(slope), jnp.asarray(weight)))
+    return {
+        "delivered_utility": float(np.sum(u * valid)),
+        "oracle_utility": oracle_utility(p_curved),
+        "max_utility": float(np.sum(weight * valid)),
+        "deferred_apps": int(pending.sum()),
     }
 
 
@@ -138,8 +188,9 @@ class SloAccountant:
                 applied: bool = False, triggered: bool = False,
                 solve_s: float = 0.0, movement_cost: float = 0.0,
                 budget_limited: bool = False, unsafe_moves: int = 0,
-                mode: str = "normal",
-                health_score: float = 1.0) -> TickStats:
+                mode: str = "normal", health_score: float = 1.0,
+                utility: dict | None = None, shed_capped_apps: int = 0,
+                shed_churn: int = 0) -> TickStats:
         s = score_cluster(cluster.problem)
         p = cluster.problem
         worst = RegionScheduler(cluster)._worst_ms   # memoized on the cluster
@@ -159,7 +210,10 @@ class SloAccountant:
                          region_breach_apps=int(np.sum(breach & valid)),
                          shard_misplaced_apps=int(np.sum(misplaced & valid)),
                          unsafe_moves=unsafe_moves, mode=mode,
-                         health_score=health_score, **s)
+                         health_score=health_score,
+                         shed_capped_apps=shed_capped_apps,
+                         shed_churn=shed_churn,
+                         **(utility or {}), **s)
         self.ticks.append(stat)
         return stat
 
@@ -217,7 +271,28 @@ class SimReport:
             "peak_d2b": float(d2b.max()),
             "final_d2b": float(d2b[-1]),
             "solver_time_s": float(sum(t.solve_s for t in ts)),
+            **self._utility_summary(),
             **self.extra,
+        }
+
+    def _utility_summary(self) -> dict:
+        """Overload-run keys: present only when utility was accounted."""
+        ts = self.ticks
+        if not any(t.oracle_utility > 0 for t in ts):
+            return {}
+        du = float(sum(t.delivered_utility for t in ts))
+        ou = float(sum(t.oracle_utility for t in ts))
+        mu = float(sum(t.max_utility for t in ts))
+        return {
+            "delivered_utility_integral": round(du, 4),
+            "oracle_utility_integral": round(ou, 4),
+            # The headline: what fraction of the oracle's achievable fleet
+            # utility the policy actually delivered over the trajectory.
+            "delivered_utility_ratio": round(du / max(ou, 1e-9), 6),
+            "utility_vs_max": round(du / max(mu, 1e-9), 6),
+            "deferred_app_ticks": sum(t.deferred_apps for t in ts),
+            "shed_capped_app_ticks": sum(t.shed_capped_apps for t in ts),
+            "shed_churn_events": sum(t.shed_churn for t in ts),
         }
 
     def series(self) -> dict:
@@ -232,6 +307,14 @@ class SimReport:
                               for t in self.ticks],
             "mode": [t.mode for t in self.ticks],
             "health_score": [round(t.health_score, 3) for t in self.ticks],
+            **({"delivered_utility": [round(t.delivered_utility, 3)
+                                      for t in self.ticks],
+                "oracle_utility": [round(t.oracle_utility, 3)
+                                   for t in self.ticks],
+                "deferred_apps": [t.deferred_apps for t in self.ticks],
+                "shed_capped_apps": [t.shed_capped_apps
+                                     for t in self.ticks]}
+               if any(t.oracle_utility > 0 for t in self.ticks) else {}),
         }
 
 
@@ -286,6 +369,52 @@ def compare(baseline: SimReport, balanced: SimReport) -> dict:
             "baseline": b["shard_misplaced_app_ticks"],
             "balanced": c["shard_misplaced_app_ticks"],
             "ratio": ratio("shard_misplaced_app_ticks")},
+    }
+
+
+def overload_compare(binary: SimReport, utility: SimReport) -> dict:
+    """Utility-policy vs binary-SLO baseline scorecard (overload family).
+
+    Both runs rode the *same* trajectory and are scored on the same curves
+    and the same fractional-knapsack oracle; the binary run's controller
+    simply never saw them (no utility goal, no admission gate, no
+    shedding).  ``improvement`` > 1 is the acceptance claim: graceful
+    degradation delivers strictly more fleet utility than stranding
+    whoever sits on the saturated tier.
+    """
+    b, u = binary.summary(), utility.summary()
+    b_ratio = float(b.get("delivered_utility_ratio", 0.0))
+    u_ratio = float(u.get("delivered_utility_ratio", 0.0))
+    u_audit = u.get("audit", {})
+    return {
+        "delivered_utility_ratio": {
+            "binary": round(b_ratio, 6),
+            "utility": round(u_ratio, 6),
+            "improvement": round(u_ratio / max(b_ratio, 1e-9), 6)},
+        "utility_vs_max": {"binary": b.get("utility_vs_max", 0.0),
+                           "utility": u.get("utility_vs_max", 0.0)},
+        "deferred_app_ticks": u.get("deferred_app_ticks", 0),
+        "shed_capped_app_ticks": u.get("shed_capped_app_ticks", 0),
+        # Flap metric the hysteresis is judged on: every cap transition is
+        # churn somebody pays for.
+        "shed_churn_events": u.get("shed_churn_events", 0),
+        "shed_events": u_audit.get("shed_events", 0),
+        "readmit_events": u_audit.get("readmit_events", 0),
+        # Hard invariants (the regression gate pins both to 0): admissions
+        # that did not actually fit, and movement-budget overruns.
+        "infeasible_admissions": u.get("infeasible_admissions", 0),
+        "budget_overruns": {"binary": b["budget_overruns"],
+                            "utility": u["budget_overruns"]},
+        "within_budget": {
+            "binary": (b.get("move_budget") is None
+                       or b["movement_cost"] <= b["move_budget"] + 1e-6),
+            # The controller's lifetime cost_spent (audit movement_cost)
+            # already includes shed-churn pricing on top of applied moves.
+            "utility": (u.get("move_budget") is None
+                        or u_audit.get("movement_cost", u["movement_cost"])
+                        <= u["move_budget"] + 1e-6)},
+        "admission": u_audit.get("admission", {}),
+        "moves": {"binary": b["total_moves"], "utility": u["total_moves"]},
     }
 
 

@@ -7,11 +7,15 @@ mapping tells each slice which stream partitions to consume.
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ClusterState, CoopConfig, Sptlb, make_problem
 from repro.core.telemetry import PAPER_SLO_TABLE
+from repro.streams.admission import (AdmissionController, AdmissionDecision,
+                                     admission_row)
 from repro.streams.app import StreamApp
 
 
@@ -82,16 +86,53 @@ def build_cluster(apps: list[StreamApp], slices: list[PodSlice],
 
 
 class StreamRouter:
-    """Holds the live app->slice routing table; re-routes via SPTLB."""
+    """Holds the live app->slice routing table; re-routes via SPTLB.
 
-    def __init__(self, cluster: ClusterState):
+    Constructed with the ``apps``/``slices`` it was built from, the router
+    also runs the admission gate (``streams.admission``): ``admit`` prices
+    an arriving app with the warm-started delta-solve and, when the answer
+    is admit / admit-degraded, rebuilds the cluster with the newcomer
+    pinned to the priced slice (incumbents keep their current routing).
+    """
+
+    def __init__(self, cluster: ClusterState, *,
+                 apps: Optional[list[StreamApp]] = None,
+                 slices: Optional[list[PodSlice]] = None,
+                 admission: Optional[AdmissionController] = None):
         self.cluster = cluster
         self.assignment = np.asarray(cluster.problem.assignment0).copy()
+        self.apps = list(apps) if apps is not None else None
+        self.slices = list(slices) if slices is not None else None
+        self.admission = (admission if admission is not None
+                          else AdmissionController())
 
     def route(self, *, engine: str = "local", variant: str = "manual_cnst"):
         decision = Sptlb(self.cluster).balance(
             engine, config=CoopConfig(variant=variant))
         self.assignment = np.asarray(decision.assignment)
+        return decision
+
+    def admit(self, app: StreamApp, *, mode: str = "normal",
+              now: int = 0) -> AdmissionDecision:
+        """Gate one arrival.  ``mode`` is the owning controller's operating
+        mode string (CONSERVATIVE tightens, SAFE rejects non-critical)."""
+        decision = self.admission.decide(
+            self.cluster.problem, mode=mode, now=now, **admission_row(app))
+        if decision.admitted and self.apps is not None:
+            if decision.cap < 1.0:
+                # Degraded entry: the app joins at its capped (served)
+                # demand — the declared-utility contract it signed.
+                app = dataclasses.replace(
+                    app, flops_demand=app.flops_demand * decision.cap,
+                    hbm_demand=app.hbm_demand * decision.cap)
+            self.apps.append(app)
+            cluster = build_cluster(self.apps, self.slices)
+            x0 = np.append(self.assignment,
+                           np.int32(decision.tier)).astype(np.int32)
+            self.cluster = dataclasses.replace(
+                cluster, problem=cluster.problem.with_assignment0(
+                    jnp.asarray(x0)))
+            self.assignment = x0
         return decision
 
     def partitions_for_tier(self, tier: int,

@@ -97,7 +97,9 @@ def test_gate_fails_when_budget_compliance_is_lost(tmp_path, capsys):
     budgeted = [
         name
         for name, rec in json.loads((baseline / SIM_SMOKE).read_text()).items()
-        if rec["compare"]["movement"]["within_budget"]
+        # Overload records carry the binary/utility pair instead of a
+        # static-vs-balanced compare.
+        if "compare" in rec and rec["compare"]["movement"]["within_budget"]
     ]
     assert budgeted, "at least one scenario must run under a movement budget"
 
@@ -171,6 +173,52 @@ def test_gate_fails_when_chaos_scenario_dropped(tmp_path, capsys):
     # sail through every wildcard.
     baseline, current = _stage(tmp_path, SIM_SMOKE)
     names = _chaos_scenarios(baseline)
+
+    def drop(record):
+        for name in names:
+            del record[name]
+
+    _rewrite(baseline, SIM_SMOKE, drop)
+    _rewrite(current, SIM_SMOKE, drop)
+    assert _run(baseline, current) == 1
+    assert "matched no baseline metrics" in capsys.readouterr().out
+
+
+def _overload_scenarios(directory):
+    record = json.loads((directory / SIM_SMOKE).read_text())
+    return sorted(n for n, r in record.items() if "overload" in r)
+
+
+def test_gate_fails_on_infeasible_admission(tmp_path, capsys):
+    baseline, current = _stage(tmp_path, SIM_SMOKE)
+    names = _overload_scenarios(baseline)
+    assert names, "the overload family must be in the committed smoke record"
+
+    def violate(record):
+        record[names[0]]["overload"]["infeasible_admissions"] = 1
+
+    _rewrite(current, SIM_SMOKE, violate)
+    assert _run(baseline, current) == 1
+    assert "infeasible_admissions" in capsys.readouterr().out
+
+
+def test_gate_fails_when_utility_improvement_collapses(tmp_path, capsys):
+    baseline, current = _stage(tmp_path, SIM_SMOKE)
+
+    def collapse(record):
+        for name in ("overload_surge", "overload_flash"):
+            block = record[name]["overload"]["delivered_utility_ratio"]
+            block["improvement"] = 0.9     # worse than the binary baseline
+            block["utility"] = block["binary"] * 0.9
+
+    _rewrite(current, SIM_SMOKE, collapse)
+    assert _run(baseline, current) == 1
+    assert "delivered_utility_ratio" in capsys.readouterr().out
+
+
+def test_gate_fails_when_overload_scenario_dropped(tmp_path, capsys):
+    baseline, current = _stage(tmp_path, SIM_SMOKE)
+    names = _overload_scenarios(baseline)
 
     def drop(record):
         for name in names:

@@ -176,6 +176,40 @@ def test_noop_custom_level_never_changes_results(num_apps, seed, premask):
     assert "noop" in tm.levels
 
 
+@pytest.mark.parametrize(
+    "name,premask",
+    [
+        ("N64/manual_cnst", {"region": True, "host": True}),
+        ("N64/manual_cnst", {}),  # absent levels default to True
+        ("N64/manual_cnst/unmasked", {"region": False, "host": False}),
+    ],
+)
+def test_premask_mapping_matches_bool_golden(name, premask):
+    """The PR-7 per-level premask mapping is a strict generalization of the
+    historical bool: all-True (and empty, via the default) reproduces the
+    masked golden bit-for-bit, all-False the unmasked one."""
+    cluster = generate_cluster(num_apps=64, seed=3)
+    got = _record(
+        cluster, _decide(cluster, CoopConfig(max_rounds=8, premask=premask))
+    )
+    want = GOLDEN[name]
+    assert got == want, {k: (want[k], got[k]) for k in want if got[k] != want[k]}
+
+
+def test_inactive_shed_plan_is_bit_identical():
+    """The overload throttle off is really off: ``shed=None`` and an
+    inactive plan (caps all ones) both reproduce the golden exactly."""
+    from repro.core.shedding import ShedPlan
+
+    cluster = generate_cluster(num_apps=64, seed=3)
+    inert = ShedPlan(caps=np.ones(cluster.problem.num_apps, np.float32))
+    for shed in (None, inert):
+        got = _record(
+            cluster, _decide(cluster, CoopConfig(max_rounds=8, shed=shed))
+        )
+        assert got == GOLDEN["N64/manual_cnst"], shed
+
+
 def test_controller_config_legacy_fields_fold_into_coop():
     from repro.core.controller import ControllerConfig
 

@@ -12,8 +12,7 @@ from repro.configs import get_config
 from repro.distributed import sharding as SH
 from repro.distributed.checkpoint import CheckpointManager
 from repro.distributed.fault import (CapacityEvent, FaultInjector,
-                                     apply_event, degrade, rebalance,
-                                     rebalance_after)
+                                     degrade, rebalance)
 from repro.core import generate_cluster
 from repro.launch.mesh import make_host_mesh
 from repro.models import build_model, reduce_for_smoke
@@ -167,18 +166,6 @@ def test_injector_schedule_unifies_with_sim_events():
         assert (adv.at, adv.tier) == (t.at, t.tier)
         assert adv.scale == pytest.approx(t.scale)
 
-
-def test_deprecated_fault_shims_warn_but_work():
-    cluster = generate_cluster(num_apps=100, seed=0)
-    ev = CapacityEvent("host_failure", tier=1, fraction=0.2)
-    with pytest.warns(DeprecationWarning):
-        after = apply_event(cluster, ev)
-    np.testing.assert_allclose(
-        np.asarray(after.problem.capacity),
-        np.asarray(degrade(cluster, ev.to_timed()).problem.capacity))
-    with pytest.warns(DeprecationWarning):
-        _, decision = rebalance_after(cluster, ev)
-    assert decision.violations.ok
 
 
 # ---------------------------------------------------------------------------

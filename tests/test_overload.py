@@ -1,0 +1,227 @@
+"""Edge cases for the overload control plane (ISSUE 7 satellite).
+
+The fuzz suite (tests/test_fuzz_scenarios.py) sweeps random trajectories;
+this file pins the corners with hand-built fixtures:
+
+  * a zero-capacity fleet defers every arrival (and backs off),
+  * step curves reproduce the binary SLO table exactly,
+  * the shedder does nothing while capacity suffices (and without curves),
+  * SAFE mode rejects non-critical arrivals and only those,
+  * hysteresis: re-admission waits ``readmit_ticks`` consecutive margin
+    ticks and an oscillating load never flaps caps back on.
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import generate_cluster
+from repro.core.shedding import LoadShedder, ShedConfig
+from repro.core.utility import (
+    attach_curves,
+    delivered_fractions,
+    fleet_utility,
+    step_curves,
+    utility_of,
+)
+from repro.streams.admission import AdmissionController, AdmissionState
+
+# ---------------------------------------------------------------------------
+# admission corners
+# ---------------------------------------------------------------------------
+
+
+def _zero_capacity_problem():
+    problem = generate_cluster(num_apps=16, seed=0).problem
+    return dataclasses.replace(problem, capacity=jnp.zeros_like(problem.capacity))
+
+
+def test_zero_capacity_fleet_defers_everything():
+    """No headroom anywhere: every arrival defers, none admits (not even
+    degraded), and per-app backoff grows exponentially across retries."""
+    problem = _zero_capacity_problem()
+    gate = AdmissionController()
+    with np.errstate(divide="ignore", invalid="ignore"):
+        retries = [
+            gate.decide(
+                problem,
+                demand=np.array([0.05, 0.03]),
+                tasks=4.0,
+                slo=0,
+                criticality=0.5,
+                key="stuck",
+                now=t,
+            ).retry_after
+            for t in range(4)
+        ]
+        other = gate.decide(
+            problem,
+            demand=np.array([0.01, 0.01]),
+            tasks=1.0,
+            slo=2,
+            criticality=1.0,
+            key="other",
+            now=0,
+        )
+    assert all(d.state is AdmissionState.DEFER for d in gate.log)
+    assert retries == [1, 2, 4, 8]  # backoff_base ** attempts
+    assert other.retry_after == 1  # backoff is per app key
+    audit = gate.audit()
+    assert audit["defer"] == audit["decisions"] == 5
+    assert audit["admit"] == audit["admit_degraded"] == 0
+    assert audit["backlog"] == 2
+
+
+def test_safe_mode_rejects_non_critical_only():
+    """SAFE refuses arrivals below the critical floor outright (no retry
+    hint); at-or-above-floor arrivals are still priced normally."""
+    problem = generate_cluster(num_apps=32, seed=1).problem
+    gate = AdmissionController()
+    low = gate.decide(
+        problem,
+        demand=np.array([0.01, 0.01]),
+        tasks=1.0,
+        slo=0,
+        criticality=0.3,
+        key="low",
+        mode="safe",
+    )
+    assert low.state is AdmissionState.REJECT
+    assert low.reason.startswith("safe-mode")
+    assert low.retry_after == 0
+    high = gate.decide(
+        problem,
+        demand=np.array([0.01, 0.01]),
+        tasks=1.0,
+        slo=0,
+        criticality=gate.config.critical_floor,
+        key="high",
+        mode="safe",
+    )
+    assert high.state is not AdmissionState.REJECT
+
+
+# ---------------------------------------------------------------------------
+# step-curve parity with the binary SLO table
+# ---------------------------------------------------------------------------
+
+
+def test_step_curve_is_the_binary_table_pointwise():
+    """slope=inf makes u(d) the exact indicator weight * [d >= knee]."""
+    knee, slope, weight = (jnp.asarray(a) for a in step_curves([0.0, 0.5, 1.0]))
+    for d in (0.0, 0.25, 0.999, 1.0):
+        u = np.asarray(utility_of(jnp.full(3, d), knee, slope, weight))
+        want = np.where(d >= 1.0, np.asarray(weight), 0.0)
+        np.testing.assert_allclose(u, want)
+
+
+def test_step_curve_fleet_utility_matches_binary_accounting():
+    """Fleet utility under step curves == the binary table's satisfied-app
+    weight: an app earns its full weight iff delivered >= knee, else zero —
+    on a fleet loaded past capacity so both branches are exercised."""
+    problem = generate_cluster(num_apps=96, seed=7).problem
+    problem = dataclasses.replace(problem, demand=problem.demand * 2.0)
+    problem = attach_curves(problem, step=True)
+    x0 = problem.assignment0
+    delivered = np.asarray(delivered_fractions(problem, x0))
+    valid = np.asarray(problem.valid, bool)
+    satisfied = valid & (delivered >= np.asarray(problem.util_knee))
+    assert satisfied.any() and (valid & ~satisfied).any()
+    got, max_u = fleet_utility(problem, x0)
+    want = float(np.asarray(problem.util_weight)[satisfied].sum())
+    np.testing.assert_allclose(float(got), want, rtol=1e-5)
+    np.testing.assert_allclose(
+        float(max_u), float(np.asarray(problem.util_weight)[valid].sum()), rtol=1e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# shedder corners
+# ---------------------------------------------------------------------------
+
+
+def _shed_problem(scale: float):
+    """8 equal apps, each demanding ``scale/8`` of total fleet capacity per
+    resource: offered load is exactly ``scale`` x capacity, criticality 0
+    so every app is sheddable and curves are uniform."""
+    problem = generate_cluster(num_apps=8, seed=2).problem
+    total = np.asarray(problem.capacity, np.float64).sum(axis=0)
+    demand = np.tile(total * (scale / 8.0), (8, 1)).astype(np.float32)
+    problem = dataclasses.replace(
+        problem, demand=jnp.asarray(demand), criticality=jnp.zeros(8, jnp.float32)
+    )
+    return attach_curves(problem)
+
+
+def test_shed_set_empty_when_capacity_suffices():
+    shedder = LoadShedder()
+    plan = shedder.plan(_shed_problem(0.5))
+    assert not plan.active
+    assert plan.shed_ids == () and plan.readmitted_ids == ()
+    assert plan.churn_cost == 0.0
+    assert plan.overload_frac <= 1.0
+    np.testing.assert_array_equal(plan.caps, np.ones(8, np.float32))
+    assert shedder.shed_events == 0
+
+
+def test_shedder_refuses_to_act_without_curves():
+    """Overloaded but curve-less: no utility order means no shed order —
+    the plan stays inert rather than shedding arbitrarily."""
+    problem = generate_cluster(num_apps=8, seed=2).problem
+    problem = dataclasses.replace(problem, demand=problem.demand * 50.0)
+    assert not problem.has_utility
+    plan = LoadShedder().plan(problem)
+    assert not plan.active and plan.shed_ids == ()
+
+
+def test_overload_sheds_until_served_fits():
+    shedder = LoadShedder()
+    plan = shedder.plan(_shed_problem(1.5), now=3)
+    # Each shed frees 0.75 * 1.5/8 of capacity; removing the 0.5 excess
+    # takes four apps.
+    assert len(plan.shed_ids) == 4
+    assert plan.active and plan.overload_frac > 1.0
+    assert shedder.shed_events == 4
+    capped = plan.caps < 1.0
+    assert capped.sum() == 4
+    np.testing.assert_allclose(plan.caps[capped], shedder.config.min_delivered)
+    # SHED advisories ride the declared-event channel, one per transition.
+    assert len(plan.advisories) == 4
+    assert all(a.at == 3 for a in plan.advisories)
+
+
+def test_hysteresis_readmits_only_after_consecutive_margin_ticks():
+    cfg = ShedConfig()
+    shedder = LoadShedder(cfg)
+    assert len(shedder.plan(_shed_problem(1.5)).shed_ids) == 4
+    calm = _shed_problem(0.3)
+    for tick in range(cfg.readmit_ticks - 1):
+        plan = shedder.plan(calm)
+        assert plan.readmitted_ids == (), tick
+        assert plan.active
+    plan = shedder.plan(calm)  # the readmit_ticks-th margin tick
+    assert len(plan.readmitted_ids) == 4
+    assert not plan.active
+    np.testing.assert_array_equal(plan.caps, np.ones(8, np.float32))
+    assert shedder.readmit_events == 4
+
+
+def test_oscillating_load_never_flaps_caps():
+    """Load that keeps dipping below the margin but bouncing back above it
+    (while staying under capacity) resets the streak every time: the caps
+    never lift, however long it oscillates."""
+    cfg = ShedConfig()
+    shedder = LoadShedder(cfg)
+    assert shedder.plan(_shed_problem(1.5)).active
+    calm = _shed_problem(0.3)
+    # served = (4 + 4 * 0.25)/8 * 1.5 = 0.9375 of capacity: under target,
+    # above the 0.92 re-admission margin — the streak-reset band.
+    bouncy = _shed_problem(1.5)
+    for _ in range(3):
+        for problem in (calm, calm, bouncy):
+            plan = shedder.plan(problem)
+            assert plan.readmitted_ids == ()
+            assert plan.active
+    assert shedder.readmit_events == 0
+    assert (plan.caps < 1.0).sum() == 4
