@@ -199,6 +199,19 @@ CHECKS = (
     # executables (the PR 1 contract).
     Check(SOLVER_SMOKE, ("bucketing", "bucketed"), "not_above", 0),
     Check(SOLVER_SMOKE, ("move_eval", "*", "candidates_per_s"), "not_below", 0, 3.0),
+    # PR 8 sharded fleet pass: a throughput floor (cross-machine, generous),
+    # the zero-stranded-apps merge invariant (absolute — one valid app on an
+    # infeasible tier after reassembly is a bug, not drift), and the
+    # coordinator's share of the pass gated like the bus overhead.
+    Check(SOLVER_SMOKE, ("shard_scale", "*", "apps_per_s"), "not_below", 0, 3.0),
+    Check(SOLVER_SMOKE, ("shard_scale", "*", "stranded"), "not_above", 0),
+    Check(
+        SOLVER_SMOKE,
+        ("shard_scale", "*", "coordinator_overhead_frac"),
+        "not_above",
+        0.05,
+        1.0,
+    ),
     Check(SOLVER_SMOKE, ("pallas_parity", "tier_agreement"), "not_below", 0.01),
     Check(SOLVER_SMOKE, ("pallas_parity", "rel_err"), "not_above", 1e-5, 9.0),
 )

@@ -1,0 +1,115 @@
+"""Multi-backend smoke: the vmapped sharded solve and ``move_eval_best``
+under an explicit ``set_platform`` per backend (PR 8 satellite).
+
+``jax_platform_name`` only takes effect at program start (the
+``set_platform`` idiom), so one process cannot test CPU then GPU.  The
+parent enumerates the platforms actually present, then re-execs itself
+(``--platform X``) once per backend; each child pins the platform BEFORE
+importing ``repro`` and runs the two surfaces CI must cover off-TPU:
+
+  * ``ops.move_eval_best`` (the solver's fused hot kernel, XLA path),
+  * a small batched shard solve (partition -> vmap -> merge) with its
+    zero-stranded merge invariant.
+
+CPU always runs; GPU runs when a device is visible.  TPU is exercised by
+the launch tooling, not this smoke.  Run what CI runs:
+
+    PYTHONPATH=src python -m benchmarks.multibackend_smoke
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+
+
+def set_platform(platform: str) -> None:
+    """Pin the JAX backend.  Only effective at program start, so the caller
+    must not have imported anything that touched a device yet."""
+    import jax
+
+    jax.config.update("jax_platform_name", platform)
+    if platform == "gpu":
+        # https://jax.readthedocs.io/en/latest/gpu_performance_tips.html
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + " --xla_gpu_triton_gemm_any=True"
+            + " --xla_gpu_enable_latency_hiding_scheduler=true"
+        )
+
+
+def child(platform: str) -> None:
+    """Runs in a fresh process with the platform pinned pre-import."""
+    set_platform(platform)
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from benchmarks.common import comment, random_problem_arrays
+    from repro.kernels import ops
+    from repro.shard import FleetConfig, solve_fleet, synthetic_fleet
+
+    devices = jax.devices()
+    assert devices[0].platform == platform, (devices, platform)
+    comment(f"[{platform}] {len(devices)} device(s): {devices[0].device_kind}")
+
+    # 1. the solver's fused hot kernel
+    N, T = 1_024, 16
+    args = random_problem_arrays(N, T, seed=3)
+    feas = jnp.ones((N, T), bool)
+    score, tier = ops.move_eval_best(*args, feas, jnp.int32(5), impl="xla")
+    score, tier = np.asarray(score), np.asarray(tier)
+    finite = np.isfinite(score)
+    assert finite.any(), "move_eval_best produced no finite scores"
+    assert ((tier[finite] >= 0) & (tier[finite] < T)).all()
+    comment(f"[{platform}] move_eval_best ok: {int(finite.sum())}/{N} finite")
+
+    # 2. the batched (vmapped) shard solve, end to end
+    cluster = synthetic_fleet(2_000, num_tiers=16, seed=5)
+    fd = solve_fleet(cluster, FleetConfig(num_shards=4, timeout_s=30))
+    assert fd.stranded == 0, f"{fd.stranded} stranded apps after merge"
+    assert bool(fd.solve.converged.all()) or int(fd.solve.iterations.max()) > 0
+    comment(f"[{platform}] sharded solve ok: objective {fd.objective:.4g}, "
+            f"{fd.apps_per_s:.3e} apps/s")
+    print(f"MULTIBACKEND_OK {platform}")
+
+
+def available_platforms() -> list:
+    """CPU always; GPU when jax can actually see one (probed in a child so
+    the probe's backend init cannot leak into ours)."""
+    platforms = ["cpu"]
+    probe = subprocess.run(
+        [sys.executable, "-c",
+         "import jax; print(len(jax.devices('gpu')))"],
+        capture_output=True, text=True, env=os.environ.copy())
+    if probe.returncode == 0 and probe.stdout.strip().isdigit() \
+            and int(probe.stdout.strip()) > 0:
+        platforms.append("gpu")
+    return platforms
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--platform", default=None,
+                    help="internal: run the smoke on this backend")
+    args = ap.parse_args()
+    if args.platform:
+        child(args.platform)
+        return 0
+
+    failures = 0
+    for platform in available_platforms():
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.multibackend_smoke",
+             "--platform", platform],
+            env=os.environ.copy())
+        if proc.returncode != 0:
+            print(f"MULTIBACKEND_FAIL {platform}")
+            failures += 1
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

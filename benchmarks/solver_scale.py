@@ -39,6 +39,7 @@ from repro.core import (CoopConfig, LocalSearchConfig, Sptlb,
 from repro.core.sptlb import engine_fn
 from repro.core.solver_local import local_search_trace_count
 from repro.kernels import ops
+from repro.shard import FleetConfig, solve_fleet, synthetic_fleet
 
 RESULTS: dict = {}
 
@@ -164,6 +165,48 @@ def bench_bucketing(sizes: tuple, timeout_s: int = 4):
     return counts
 
 
+def bench_shard_scale(cases, timeout_s: int = 30):
+    """Sharded fleet pass (PR 8): apps/sec and rebalance-pass wall-clock vs
+    shard count, on the vectorized synthetic fleet (generate_cluster's
+    Python loops do not reach 100k+ apps).  One warm pass compiles the
+    (S, Nb, Tb) executable; the measured pass is jit-warm, so the tracked
+    number is steady-state rebalance latency, not compile time.  The hard
+    invariant tracked alongside throughput: zero apps stranded after the
+    partition -> solve -> merge -> coordinate pass."""
+    clusters: dict = {}
+    for N, T, S in cases:
+        if (N, T) not in clusters:
+            t0 = time.perf_counter()
+            clusters[(N, T)] = synthetic_fleet(N, num_tiers=T, seed=9)
+            comment(f"synthetic_fleet N={N} T={T} built in "
+                    f"{time.perf_counter() - t0:.1f}s")
+        cluster = clusters[(N, T)]
+        cfg = FleetConfig(num_shards=S, timeout_s=timeout_s)
+        solve_fleet(cluster, cfg)                            # compile + warm
+        fd = solve_fleet(cluster, cfg)
+        key = f"N{N}_S{S}"
+        emit(f"solver_scale/shard_scale/{key}", fd.timings["total_s"] * 1e6,
+             f"apps_per_s={fd.apps_per_s:.3e};stranded={fd.stranded};"
+             f"migrations={fd.migrations};saturated={fd.saturated};"
+             f"coord_frac={fd.coordinator_overhead_frac:.4f};"
+             f"solve_s={fd.timings['solve_s']:.3f};"
+             f"objective={fd.objective:.4g}")
+        RESULTS.setdefault("shard_scale", {})[key] = {
+            "apps": N, "tiers": T, "num_shards": S,
+            "app_bucket": fd.sharded.app_bucket,
+            "tier_bucket": fd.sharded.tier_bucket,
+            "apps_per_s": fd.apps_per_s,
+            "stranded": fd.stranded, "migrations": fd.migrations,
+            "saturated": fd.saturated,
+            "coordinator_overhead_frac": fd.coordinator_overhead_frac,
+            "objective": fd.objective, **fd.timings}
+    recs = RESULTS.get("shard_scale", {})
+    if recs:
+        best = max(recs.values(), key=lambda r: r["apps_per_s"])
+        comment(f"shard_scale: best apps/sec {best['apps_per_s']:.3e} at "
+                f"N={best['apps']} S={best['num_shards']}")
+
+
 def bench_pallas_parity(N: int, T: int):
     t0 = time.perf_counter()
     comment("pallas interpret-mode parity check (runs the kernel bodies)")
@@ -198,6 +241,7 @@ def run(smoke: bool = False):
         bench_local_search_batched(500, sweeps=16)
         bench_cooperate(400, timeout_s=4)
         bench_bucketing((300, 320, 350), timeout_s=4)
+        bench_shard_scale(((2_000, 16, 1), (2_000, 16, 4)))
         bench_pallas_parity(512, 16)
     else:
         for N, T in ((1_000, 5), (10_000, 16), (100_000, 64), (100_000, 128)):
@@ -207,6 +251,8 @@ def run(smoke: bool = False):
         bench_local_search_batched(10_000, sweeps=64)   # the acceptance number
         bench_cooperate(10_000, timeout_s=8)
         bench_bucketing((3_000, 3_100, 3_250), timeout_s=4)
+        bench_shard_scale(((100_000, 64, 4), (100_000, 64, 16),
+                           (1_000_000, 64, 8), (1_000_000, 64, 32)))
         bench_pallas_parity(4_096, 128)
 
     # Smoke numbers must not clobber the tracked fleet-scale record.

@@ -12,6 +12,8 @@ Run:
   PYTHONPATH=src python examples/simulate_fleet.py                  # all
   PYTHONPATH=src python examples/simulate_fleet.py \\
       --scenario tier_drain --apps 400 --ticks 160 --verbose
+  PYTHONPATH=src python examples/simulate_fleet.py \\
+      --scenario fleet_scale --shards 4      # sharded solver path
 
 Scenario how-to
 ---------------
@@ -204,6 +206,11 @@ def main():
                          "cooperation bus (e.g. region,host,shard); default "
                          "lets each scenario pick its own (shard_skew runs "
                          "the three-level stack), others use region,host")
+    ap.add_argument("--shards", type=int, default=None,
+                    help="route the balanced controller's solves through the "
+                         "S-shard partitioned fleet path (repro.shard); "
+                         "default lets each scenario pick (fleet_scale runs "
+                         "2 shards), others use the global solver")
     ap.add_argument("--no-anticipation", action="store_true",
                     help="ignore declared maintenance advisories (reactive "
                          "controller, the pre-PR-4 behaviour)")
@@ -233,7 +240,7 @@ def main():
     levels = (tuple(n for n in args.levels.split(",") if n.strip())
               if args.levels else None)
     config = ControllerConfig(
-        timeout_s=args.timeout_s, cooldown_rounds=2,
+        timeout_s=args.timeout_s, cooldown_rounds=2, shards=args.shards,
         coop=CoopConfig(restart_rounds=args.restart_rounds, levels=levels))
 
     print(f"{'scenario':16s} {'policy':9s} {'viol':>6s} {'excess':>8s} "

@@ -154,6 +154,11 @@ class ControllerConfig:
     # transitions are priced against ``movement_cost_budget`` and published
     # as SHED advisories.
     shed: Optional[ShedConfig] = None
+    # Sharded fleet solver (repro.shard): partition the fleet into this
+    # many region-affine shards and solve them as one batched vmapped pass
+    # with coordinator-granted boundary migrations, instead of the global
+    # Sptlb engine.  None (default) keeps the global path bit-identical.
+    shards: Optional[int] = None
 
     def __post_init__(self):
         if self.coop is None:
@@ -511,11 +516,23 @@ class BalanceController:
                     balance_cluster = dataclasses.replace(
                         self.cluster, problem=p.with_avoid(
                             jnp.asarray(self._mode_avoid(p, evac))))
-            self._sptlb.cluster = balance_cluster
-            decision = self._sptlb.balance(
-                self.config.engine, timeout_s=self.config.timeout_s,
-                config=coop_cfg, hierarchy=self.hierarchy_override)
-            self._sptlb.cluster = self.cluster
+            if self.config.shards:
+                # Sharded fleet path: partitioned batched solve + the
+                # FleetCoordinator's priced boundary migrations, under the
+                # same BalanceDecision contract (plan steering, shed caps,
+                # and the movement budget all ride coop_cfg).
+                from repro.shard import FleetConfig, balance_fleet
+                decision = balance_fleet(
+                    balance_cluster,
+                    fleet=FleetConfig(num_shards=self.config.shards,
+                                      timeout_s=self.config.timeout_s),
+                    coop=coop_cfg)
+            else:
+                self._sptlb.cluster = balance_cluster
+                decision = self._sptlb.balance(
+                    self.config.engine, timeout_s=self.config.timeout_s,
+                    config=coop_cfg, hierarchy=self.hierarchy_override)
+                self._sptlb.cluster = self.cluster
             if fault is not None:
                 coop = decision.cooperation
                 # Solver distress means the solver *couldn't answer*, not

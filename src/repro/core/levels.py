@@ -162,6 +162,14 @@ def level_factory(name: str) -> Callable:
         import repro.core.hierarchy  # noqa: F401  (registration side effect)
 
     if name not in _REGISTRY:
+        # The cross-shard fleet coordinator registers from the shard
+        # subsystem — same lazy-registration contract as the builtins.
+        try:
+            import repro.shard  # noqa: F401  (registration side effect)
+        except ImportError:
+            pass
+
+    if name not in _REGISTRY:
         raise KeyError(f"unknown scheduler level {name!r}; have {sorted(_REGISTRY)}")
     return _REGISTRY[name]
 

@@ -42,9 +42,12 @@ from repro.core.problem import Problem
 CAPACITY = "capacity"
 OUTAGE = "outage"
 RESTORE = "restore"
-# A load-shed cap transition (core.shedding): ``scale`` is the app's new
-# delivery cap.  Published for audit/observability; the planner's capacity
-# and outage logic ignore it.
+# Demand-side advisory.  Two producers share the kind: load-shed cap
+# transitions (core.shedding; ``scale`` <= 1 is the app's new delivery cap,
+# published for audit/observability and ignored by the planner), and
+# declared flash crowds (``sim.events.FlashCrowd(announced=True)``;
+# ``scale`` > 1 is the offered-demand factor, which ``outlook`` phases into
+# capacity headroom the way maintenance phases capacity out).
 SHED = "shed"
 
 # Fixed detach/attach overhead of one move, in units of the mean live app's
@@ -268,7 +271,28 @@ class MaintenancePlanner:
             slo_off = affected
 
         factor = np.clip(factor, cfg.scale_floor, 1.0).astype(np.float32)
+        # Draining is a *supply* signal: only maintenance/outage factors
+        # decide which tiers to evacuate, before any demand headroom below.
         avoid = slo_off | (factor < cfg.drain_threshold)
+
+        # Demand-side advisories: a declared flash crowd (SHED advisory
+        # with an offered-demand factor > 1, ``sim.events.FlashCrowd``
+        # with ``announced=True``) phases capacity *headroom* in exactly
+        # like maintenance phases capacity out — the solver packs toward a
+        # tighter target as the crowd approaches, so the spike lands on
+        # slack instead of forcing a reactive scramble.  Shed-cap
+        # transitions published by the load shedder reuse the same kind
+        # with scale <= 1 and stay audit-only, as before.
+        for a in self.advisories:
+            if a.kind != SHED or a.scale <= 1.0 or not now < a.at <= now + cfg.horizon:
+                continue
+            weight = (cfg.horizon - (a.at - now) + 1) / cfg.horizon
+            surge = 1.0 + (a.scale - 1.0) * weight
+            if a.tier >= 0:
+                factor[a.tier] = factor[a.tier] / surge
+            else:
+                factor = (factor / surge).astype(np.float32)
+        factor = np.clip(factor, cfg.scale_floor, 1.0).astype(np.float32)
         return PlanOutlook(
             now=now,
             horizon=cfg.horizon,

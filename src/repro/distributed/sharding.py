@@ -147,6 +147,53 @@ def batch_shardings(mesh: Mesh, batch_shape) -> Any:
     return jax.tree.map(one, batch_shape)
 
 
+def _ambient_mesh() -> Optional[Mesh]:
+    """The mesh in scope, if any (explicit-sharding or legacy context)."""
+    try:                                   # explicit-sharding world
+        m = jax.sharding.get_abstract_mesh()
+        if getattr(m, "axis_names", None):
+            return m
+    except Exception:
+        pass
+    try:                                   # legacy `with mesh:` context
+        m = jax.interpreters.pxla.thread_resources.env.physical_mesh
+        if getattr(m, "axis_names", None):
+            return m
+    except Exception:
+        pass
+    return None
+
+
+def place_shard_batch(tree: Any) -> Any:
+    """Place a stacked [S, ...] shard batch over the mesh's batch axes.
+
+    The sharded fleet solver stacks S subproblems on a leading axis and
+    vmaps over it — embarrassingly parallel, so the leading axis shards
+    over ("pod","data") exactly like a model input batch and each device
+    solves its slice of the shards.  Correctness-first like everything
+    here: without an ambient mesh (single-host CPU runs, tests) or when S
+    does not divide the axis, leaves pass through untouched.
+    """
+    mesh = _ambient_mesh()
+    try:
+        multi = mesh is not None and int(np.prod(mesh.devices.shape)) > 1
+    except Exception:                      # abstract mesh: no devices array
+        multi = False
+    if not multi:
+        return tree
+    dp = dp_axes(mesh)
+
+    def one(leaf):
+        if getattr(leaf, "ndim", 0) < 1:
+            return leaf
+        spec = sanitize(P(dp, *([None] * (leaf.ndim - 1))), leaf.shape, mesh)
+        try:
+            return jax.device_put(leaf, NamedSharding(mesh, spec))
+        except Exception:
+            return leaf
+    return jax.tree.map(one, tree)
+
+
 def cache_shardings(mesh: Mesh, cache_shape, *, kv_shard: str = "heads") -> Any:
     """KV/state caches: batch over dp axes, heads/feature over "model".
 

@@ -1,0 +1,259 @@
+"""Fleet partitioning: split one global ``Problem`` into S shard subproblems.
+
+The fleet problem is nearly decomposable by region/pod: tiers occupy
+contiguous region arcs on the latency ring (``telemetry.generate_cluster``)
+and apps live near their home tier, so partitioning *tiers* by ring anchor
+and assigning every app to the shard that owns its ``assignment0`` tier
+yields subproblems with no hard cross-shard coupling — each shard's solve
+moves its apps only among its own tiers, which keeps the reassembled global
+mapping feasible by construction (cross-shard migrations are a separate,
+coordinator-granted step; see ``shard.coordinator``).
+
+Uniform shapes make the S subproblems one executable: the app axis is
+padded to a shared power-of-two bucket via the existing
+``problem.pad_problem`` (inert valid=False rows) and the tier axis to the
+widest shard with *inert tiers* — unit capacity, no SLO class allowed,
+avoided by every app — which no valid app can ever be placed on.  The
+stacked pytree then runs under one ``vmap`` (``shard.solve``).
+
+``app_ids``/``tier_ids`` are the slot->global index maps (-1 for padding);
+``merge_assignment`` scatters a batched local assignment back into a global
+one.  Partition -> merge is a bijection over apps: every app appears in
+exactly one shard slot, and merging the per-shard ``assignment0`` returns
+the global ``assignment0`` bit-for-bit (property-tested in
+tests/test_shard.py and fuzzed in tests/test_fuzz_scenarios.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.problem import Problem, bucket_size, pad_problem
+
+# Inert padded tiers carry a unit capacity so utilization fractions stay
+# finite; nothing can be placed on them (slo_allowed False + avoid True).
+INERT_CAPACITY = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardPlan:
+    """Static fleet partition: which shard owns each tier (and each app).
+
+    An app belongs to the shard owning its ``assignment0`` tier, so every
+    shard subproblem starts from a locally feasible incumbent mapping.
+    """
+
+    num_shards: int
+    tier_shard: np.ndarray  # i32[T] owning shard per tier
+    app_shard: np.ndarray  # i32[N] owning shard per app (home tier's shard)
+    shard_tiers: tuple  # per shard: ascending global tier ids
+
+
+def tier_anchors(tier_regions) -> np.ndarray:
+    """Ring-arc start region per tier (the region/pod affinity key).
+
+    Tiers occupy contiguous arcs on the region ring; the arc's first region
+    orders tiers by locality, so contiguous groups of the anchor-sorted
+    order share regions — the partition that minimizes cross-shard
+    affinity.  Degenerate rows (all or no regions) anchor at 0.
+    """
+    tr = np.asarray(tier_regions, bool)
+    T, _ = tr.shape
+    anchors = np.zeros(T, np.int64)
+    for t in range(T):
+        row = tr[t]
+        if row.all() or not row.any():
+            continue
+        starts = np.where(row & ~np.roll(row, 1))[0]
+        anchors[t] = int(starts[0]) if starts.size else 0
+    return anchors
+
+
+def plan_shards(cluster, num_shards: int) -> ShardPlan:
+    """Partition the fleet into ``num_shards`` region-affine tier groups.
+
+    Tiers are sorted by ring anchor and split into S contiguous groups with
+    balanced *valid-app* counts (each group keeps >= 1 tier; S clamps to
+    [1, T]).  Apps follow their home tier.
+    """
+    p = cluster.problem
+    T = p.num_tiers
+    S = max(1, min(int(num_shards), T))
+    anchors = tier_anchors(cluster.tier_regions)
+    order = np.lexsort((np.arange(T), anchors))
+    x0 = np.asarray(p.assignment0)
+    valid = np.asarray(p.valid)
+    counts = np.bincount(x0[valid], minlength=T).astype(np.float64)
+    total = max(float(counts.sum()), 1.0)
+
+    groups: list[list[int]] = [[] for _ in range(S)]
+    g, cum = 0, 0.0
+    for i, t in enumerate(order):
+        tiers_left = T - i
+        if groups[g] and g < S - 1 and (
+            S - 1 - g >= tiers_left or cum >= (g + 1) * total / S
+        ):
+            g += 1
+        groups[g].append(int(t))
+        cum += counts[t]
+
+    tier_shard = np.zeros(T, np.int32)
+    for s, grp in enumerate(groups):
+        tier_shard[grp] = s
+    shard_tiers = tuple(np.sort(np.asarray(grp, np.int64)) for grp in groups)
+    return ShardPlan(
+        num_shards=S,
+        tier_shard=tier_shard,
+        app_shard=tier_shard[x0],
+        shard_tiers=shard_tiers,
+    )
+
+
+@dataclasses.dataclass
+class ShardedProblem:
+    """S stacked subproblems sharing one shape, plus the slot->global maps."""
+
+    plan: ShardPlan
+    problems: Problem  # every leaf carries a leading [S] axis
+    app_ids: np.ndarray  # i32[S, Nb] global app id per slot, -1 padding
+    tier_ids: np.ndarray  # i32[S, Tb] global tier id per slot, -1 padding
+    app_bucket: int
+    tier_bucket: int
+
+    @property
+    def num_shards(self) -> int:
+        return self.plan.num_shards
+
+
+def partition_problem(
+    problem: Problem, plan: ShardPlan, *, app_bucket: Optional[int] = None
+) -> ShardedProblem:
+    """Slice the global problem into the plan's shards and stack them.
+
+    All shards share one (Nb, Tb) shape: Nb is the power-of-two bucket of
+    the largest shard population (``pad_problem`` inert rows), Tb the
+    widest shard's tier count (inert tiers).  The result solves under a
+    single vmapped executable whatever the per-shard sizes.
+    """
+    S = plan.num_shards
+    T = problem.num_tiers
+    x0 = np.asarray(problem.assignment0)
+    valid = np.asarray(problem.valid)
+    demand = np.asarray(problem.demand)
+    tasks = np.asarray(problem.tasks)
+    slo = np.asarray(problem.slo)
+    crit = np.asarray(problem.criticality)
+    avoid = np.asarray(problem.avoid)
+    capacity = np.asarray(problem.capacity)
+    task_limit = np.asarray(problem.task_limit)
+    ideal_frac = np.asarray(problem.ideal_frac)
+    ideal_task = np.asarray(problem.ideal_task_frac)
+    slo_allowed = np.asarray(problem.slo_allowed)
+    R = capacity.shape[1]
+    n_slo = slo_allowed.shape[1]
+
+    app_lists = [np.where(plan.app_shard == s)[0] for s in range(S)]
+    Tb = max(len(ts) for ts in plan.shard_tiers)
+    widest = max(max(len(a) for a in app_lists), 1)
+    Nb = bucket_size(widest) if app_bucket is None else int(app_bucket)
+    if Nb < widest:
+        raise ValueError(f"app_bucket {Nb} smaller than widest shard {widest}")
+
+    app_ids = np.full((S, Nb), -1, np.int32)
+    tier_ids = np.full((S, Tb), -1, np.int32)
+    shards = []
+    for s in range(S):
+        tiers = plan.shard_tiers[s]
+        Ts = len(tiers)
+        apps = app_lists[s]
+        inv = np.full(T, -1, np.int32)
+        inv[tiers] = np.arange(Ts, dtype=np.int32)
+        pad_t = Tb - Ts
+
+        def pad_tiers(rows, fill):
+            if not pad_t:
+                return rows
+            shape = (pad_t,) + rows.shape[1:]
+            return np.concatenate([rows, np.full(shape, fill, rows.dtype)])
+
+        extra = {}
+        if problem.has_utility:
+            extra = dict(
+                util_knee=jnp.asarray(np.asarray(problem.util_knee)[apps]),
+                util_slope=jnp.asarray(np.asarray(problem.util_slope)[apps]),
+                util_weight=jnp.asarray(np.asarray(problem.util_weight)[apps]),
+            )
+        avoid_local = avoid[np.ix_(apps, tiers)]
+        if pad_t:
+            pad_cols = np.ones((len(apps), pad_t), bool)
+            avoid_local = np.concatenate([avoid_local, pad_cols], axis=1)
+        sub = dataclasses.replace(
+            problem,
+            demand=jnp.asarray(demand[apps]),
+            tasks=jnp.asarray(tasks[apps]),
+            slo=jnp.asarray(slo[apps]),
+            criticality=jnp.asarray(crit[apps]),
+            assignment0=jnp.asarray(inv[x0[apps]]),
+            valid=jnp.asarray(valid[apps]),
+            avoid=jnp.asarray(avoid_local),
+            capacity=jnp.asarray(
+                pad_tiers(capacity[tiers], np.float32(INERT_CAPACITY))
+            ),
+            task_limit=jnp.asarray(
+                pad_tiers(task_limit[tiers], np.float32(INERT_CAPACITY))
+            ),
+            ideal_frac=jnp.asarray(pad_tiers(ideal_frac[tiers], np.float32(0.70))),
+            ideal_task_frac=jnp.asarray(
+                pad_tiers(ideal_task[tiers], np.float32(0.80))
+            ),
+            slo_allowed=jnp.asarray(
+                pad_tiers(slo_allowed[tiers].reshape(Ts, n_slo), False)
+            ),
+            **extra,
+        )
+        shards.append(pad_problem(sub, Nb))
+        app_ids[s, : len(apps)] = apps
+        tier_ids[s, :Ts] = tiers
+
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *shards)
+    return ShardedProblem(
+        plan=plan,
+        problems=stacked,
+        app_ids=app_ids,
+        tier_ids=tier_ids,
+        app_bucket=Nb,
+        tier_bucket=Tb,
+    )
+
+
+def merge_assignment(problem: Problem, sharded: ShardedProblem, x) -> np.ndarray:
+    """Reassemble a batched local assignment [S, Nb] into a global i32[N].
+
+    Padding slots (app id -1) and any local tier outside the shard's real
+    tier set (defensive; the inert-tier masks make it unreachable for valid
+    apps) fall back to the incumbent ``assignment0``.
+    """
+    x = np.asarray(x)
+    S = sharded.app_ids.shape[0]
+    dest = sharded.tier_ids[np.arange(S)[:, None], x]
+    mask = (sharded.app_ids >= 0) & (dest >= 0)
+    merged = np.asarray(problem.assignment0).copy()
+    merged[sharded.app_ids[mask]] = dest[mask]
+    return merged
+
+
+def stranded_apps(problem: Problem, assignment) -> int:
+    """Valid apps parked on tiers their SLO/avoid feasibility forbids.
+
+    Zero after every partition -> solve -> merge pass is a hard invariant
+    (gated in CI via the ``shard_scale`` bench section).
+    """
+    feas = np.asarray(problem.feasible_mask())
+    a = np.asarray(assignment)
+    valid = np.asarray(problem.valid)
+    return int(np.sum(valid & ~feas[np.arange(a.size), a]))

@@ -208,11 +208,25 @@ class FlashCrowd(TimedEvent):
     utility-skewed overload case: the spike lands on low-utility demand, so
     a utility-aware controller can shed its way out while the binary-SLO
     baseline sees an undifferentiated overload.
+
+    ``announced=True`` makes the crowd a *declared* demand event (a planned
+    product launch, a scheduled broadcast): it publishes a SHED advisory
+    whose ``scale`` is the fleet-wide offered-demand factor
+    (``1 + frac * (magnitude - 1)``), and the planner phases capacity
+    headroom in ahead of it the way maintenance phases capacity out.  The
+    default stays False — surprise crowds never declare.
     """
 
     frac: float = 0.05
     magnitude: float = 6.0
     crit_below: float | None = None
+    announced: bool = False
+
+    def declare(self):
+        if not self.announced:
+            return None
+        return P.Advisory(at=self.at, kind=P.SHED,
+                          scale=1.0 + self.frac * (self.magnitude - 1.0))
 
     def apply(self, fleet: FleetState) -> None:
         live = np.asarray(fleet.wl.valid).copy()

@@ -365,6 +365,10 @@ def run_scenario(sc: Scenario, *, policy: str = "balanced",
             cfg = dataclasses.replace(
                 cfg, coop=dataclasses.replace(cfg.coop,
                                               levels=tuple(sc.levels)))
+        if sc.shards is not None and cfg.shards is None:
+            # The scenario routes solves through the sharded fleet path
+            # (repro.shard); a caller-pinned shard count wins.
+            cfg = dataclasses.replace(cfg, shards=sc.shards)
         if utility and cfg.shed is None:
             cfg = dataclasses.replace(cfg, shed=ShedConfig())
         if utility and curves is not None:

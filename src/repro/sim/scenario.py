@@ -79,6 +79,10 @@ class Scenario:
     # fractional-knapsack oracle and runs the admission/shedding machinery
     # (``run_overload_pair``: utility policy vs the binary-SLO baseline).
     overload: bool = False
+    # Sharded fleet solver (repro.shard): route the controller's solves
+    # through an S-shard partitioned batched pass with coordinator-granted
+    # boundary migrations.  None keeps the global Sptlb path.
+    shards: int | None = None
     seed: int = 0
 
     @property
@@ -379,3 +383,41 @@ def _churn_heavy(num_apps: int, ticks: int, seed: int) -> Scenario:
                                 diurnal_amp=0.25, burst_sigma=0.12),
         events=(ChurnRate(at=ticks // 2,
                           arrival_rate=max(2.0, 0.02 * num_apps)),))
+
+
+@scenario("fleet_scale", "sharded solver path: the controller rebalances "
+                         "through the S-shard partitioned batched pass")
+def _fleet_scale(num_apps: int, ticks: int, seed: int) -> Scenario:
+    """The ``repro.shard`` subsystem under trajectory load: every triggered
+    solve partitions the fleet, solves all shards under one vmap, merges,
+    and lets the FleetCoordinator grant priced boundary migrations.  The
+    workload mixes a diurnal swing with a mid-run surprise crowd so shard
+    saturation actually occurs; scorecard semantics are identical to the
+    global path (the BalanceDecision contract is shared)."""
+    return Scenario(
+        name="fleet_scale", description="", ticks=ticks,
+        num_apps=num_apps, seed=seed, shards=2,
+        workload=WorkloadConfig(period=max(16, ticks // 2),
+                                diurnal_amp=0.25, burst_sigma=0.10),
+        events=(FlashCrowd(at=ticks // 3, frac=0.10, magnitude=4.0),),
+        move_budget=2.0 * num_apps)
+
+
+@scenario("fleet_scale_surge", "declared flash crowd over the sharded path: "
+                               "the demand advisory phases headroom in ahead")
+def _fleet_scale_surge(num_apps: int, ticks: int, seed: int) -> Scenario:
+    """Demand-side anticipation end-to-end: the crowd is *announced*
+    (``FlashCrowd(announced=True)`` -> SHED advisory with an offered-demand
+    factor > 1), so the planner tightens capacity targets as the spike
+    approaches and the sharded solver packs headroom in before it lands —
+    the demand-side mirror of tier_drain's declared evacuation."""
+    return Scenario(
+        name="fleet_scale_surge", description="", ticks=ticks,
+        num_apps=num_apps, seed=seed, shards=2,
+        workload=WorkloadConfig(period=max(16, ticks // 2),
+                                diurnal_amp=0.20, burst_sigma=0.08),
+        events=(FlashCrowd(at=ticks // 3, frac=0.20, magnitude=4.0,
+                           announced=True),
+                FlashCrowd(at=(2 * ticks) // 3, frac=0.10, magnitude=3.0,
+                           announced=True)),
+        move_budget=2.0 * num_apps)

@@ -1,0 +1,97 @@
+"""Demand-side advisories (PR 8 satellite): declared flash crowds phase
+capacity headroom through the PR-4 advisory channel the way maintenance
+phases capacity out, reusing the PR-7 SHED advisory kind."""
+
+import numpy as np
+import pytest
+
+from repro.core import generate_cluster
+from repro.core.planner import SHED, Advisory, MaintenancePlanner, PlannerConfig
+from repro.sim.events import FlashCrowd
+from repro.sim.harness import run_scenario
+from repro.sim.scenario import get_scenario
+
+
+@pytest.fixture(scope="module")
+def cluster():
+    return generate_cluster(num_apps=120, seed=3)
+
+
+# -- event -> advisory wiring ------------------------------------------------
+
+
+def test_flash_crowd_declares_only_when_announced():
+    surprise = FlashCrowd(at=10, frac=0.1, magnitude=5.0)
+    assert surprise.declare() is None
+
+    declared = FlashCrowd(at=10, frac=0.1, magnitude=5.0, announced=True)
+    adv = declared.declare()
+    assert adv is not None
+    assert adv.kind == SHED and adv.at == 10
+    # expected offered-demand factor: frac of apps spike by magnitude
+    assert adv.scale == pytest.approx(1.0 + 0.1 * (5.0 - 1.0))
+    assert adv.scale > 1.0  # the demand side of the SHED kind
+
+
+def test_fleet_scale_surge_scenario_declares_its_crowds():
+    sc = get_scenario("fleet_scale_surge", num_apps=96, ticks=32, seed=0)
+    declared = sc.declared_events
+    assert len(declared) == 2
+    assert all(a.kind == SHED and a.scale > 1.0 for a in declared)
+    assert sc.shards == 2
+
+
+# -- planner phasing ---------------------------------------------------------
+
+
+def test_outlook_phases_headroom_toward_a_declared_crowd(cluster):
+    planner = MaintenancePlanner(
+        [Advisory(at=10, kind=SHED, scale=1.8)], PlannerConfig(horizon=8)
+    )
+    # Beyond the horizon: nothing tightens yet.
+    assert not planner.outlook(0, cluster).active
+
+    far = planner.outlook(3, cluster)  # 7 ticks out, weight 2/8
+    near = planner.outlook(9, cluster)  # 1 tick out, weight 1.0
+    assert far.active and near.active
+    # headroom phases in monotonically: targets tighten toward the event
+    assert (near.tier_factor <= far.tier_factor + 1e-6).all()
+    assert (far.tier_factor < 1.0).all()
+    # at weight 1.0 the target is the full declared surge: 1 / 1.8
+    np.testing.assert_allclose(near.tier_factor, 1.0 / 1.8, atol=1e-6)
+    # demand headroom never marks tiers for evacuation
+    assert not far.avoid_tiers.any() and not near.avoid_tiers.any()
+    assert not near.slo_off_tiers.any()
+
+
+def test_tier_scoped_crowd_only_tightens_that_tier(cluster):
+    planner = MaintenancePlanner(
+        [Advisory(at=5, kind=SHED, tier=2, scale=2.0)], PlannerConfig(horizon=8)
+    )
+    out = planner.outlook(4, cluster)  # weight 1.0
+    assert out.tier_factor[2] == pytest.approx(0.5, abs=1e-6)
+    others = np.delete(out.tier_factor, 2)
+    np.testing.assert_allclose(others, 1.0)
+
+
+def test_shedder_shed_advisories_stay_audit_only(cluster):
+    """The load shedder publishes SHED caps with scale <= 1 (PR 7); those
+    must keep riding the channel without touching capacity targets."""
+    planner = MaintenancePlanner(
+        [Advisory(at=5, kind=SHED, scale=0.7)], PlannerConfig(horizon=8)
+    )
+    out = planner.outlook(4, cluster)
+    assert not out.active
+    np.testing.assert_allclose(out.tier_factor, 1.0)
+    assert out.pending == 1  # still counted/auditable in the window
+
+
+# -- end to end through the sim ----------------------------------------------
+
+
+def test_fleet_scale_surge_runs_with_anticipation():
+    sc = get_scenario("fleet_scale_surge", num_apps=96, ticks=16, seed=0)
+    rep = run_scenario(sc, policy="balanced", anticipation=True)
+    s = rep.summary()
+    assert s["rebalances"] >= 1
+    assert rep.extra["anticipation"] is True

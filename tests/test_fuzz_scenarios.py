@@ -1,6 +1,6 @@
 """Invariant fuzzing over random trajectories (ISSUE 7 satellite).
 
-Three fuzz surfaces, >= 200 random trajectories total, each asserting the
+Four fuzz surfaces, >= 200 random trajectories total, each asserting the
 control plane's hard invariants — the properties the regression gate pins
 on two curated scenarios, checked here across a randomized family:
 
@@ -14,7 +14,15 @@ on two curated scenarios, checked here across a randomized family:
     config floor, and DEFER backoff is monotone per app;
   * cooperation passes over randomly perturbed clusters with the premask
     on: zero region rejections and zero resident-set overflows, whatever
-    the demand skew.
+    the demand skew;
+  * sharded fleet passes (PR 8): partition -> merge stays a bijection,
+    the merged mapping strands nobody and never worsens the incumbent,
+    whatever the shard count or demand skew.
+
+``FUZZ_TRAJECTORIES`` scales every surface proportionally: unset (CI) it
+keeps the per-surface defaults below (232 total); a nightly-style run sets
+e.g. ``FUZZ_TRAJECTORIES=2000`` for ~9x the coverage.  Values at or below
+the default total are ignored — the knob only ever adds examples.
 
 Runs under the ``_hypothesis_compat`` fallback (deterministic seeded
 examples) when hypothesis is not installed — tier-1 needs no optional
@@ -22,6 +30,7 @@ packages.
 """
 
 import dataclasses
+import os
 
 import jax.numpy as jnp
 import numpy as np
@@ -29,16 +38,30 @@ import numpy as np
 from _hypothesis_compat import hypothesis, st
 from repro.core import CoopConfig, Sptlb, generate_cluster
 from repro.core.constraints import FEAS_TOL
+from repro.core.goals import objective
 from repro.core.problem import tier_loads
+from repro.shard import (
+    merge_assignment,
+    partition_problem,
+    plan_shards,
+    solve_shards,
+    stranded_apps,
+)
+from repro.shard.solve import ShardSolveConfig
 from repro.sim import Scenario, WorkloadConfig, run_scenario
 from repro.sim.events import CapacityScale, ChurnRate, FlashCrowd
 from repro.streams.admission import AdmissionController, AdmissionState
+
+# Per-surface example counts at the CI default, before the env knob.
+_BASE_SIM, _BASE_ADMISSION, _BASE_PREMASK, _BASE_SHARD = 48, 120, 40, 24
+_BASE_TOTAL = _BASE_SIM + _BASE_ADMISSION + _BASE_PREMASK + _BASE_SHARD
+_SCALE = max(1.0, int(os.environ.get("FUZZ_TRAJECTORIES", "0")) / _BASE_TOTAL)
 
 # ---------------------------------------------------------------------------
 # 1. full overload trajectories (48 examples x 5 ticks, one shape bucket)
 # ---------------------------------------------------------------------------
 
-N_SIM_TRAJECTORIES = 48
+N_SIM_TRAJECTORIES = int(round(_BASE_SIM * _SCALE))
 
 
 def _random_overload_scenario(seed: int) -> Scenario:
@@ -119,7 +142,7 @@ def test_fuzz_overload_trajectories_hold_invariants(seed):
 # 2. admission-gate decision trajectories (120 examples, pure numpy, fast)
 # ---------------------------------------------------------------------------
 
-N_ADMISSION_TRAJECTORIES = 120
+N_ADMISSION_TRAJECTORIES = int(round(_BASE_ADMISSION * _SCALE))
 _BASE_CLUSTER = None
 
 
@@ -195,7 +218,7 @@ def test_fuzz_admission_never_admits_infeasible(seed):
 # 3. premask cooperation passes (40 examples, shared cluster/bucket)
 # ---------------------------------------------------------------------------
 
-N_PREMASK_TRAJECTORIES = 40
+N_PREMASK_TRAJECTORIES = int(round(_BASE_PREMASK * _SCALE))
 _PREMASK_CLUSTER = None
 
 
@@ -246,6 +269,62 @@ def test_fuzz_premask_no_rejections_no_resident_overflow(seed):
     assert decision.violations.ok, seed
 
 
+# ---------------------------------------------------------------------------
+# 4. sharded fleet passes (24 examples, shared cluster, <= 5 shape buckets)
+# ---------------------------------------------------------------------------
+
+N_SHARD_TRAJECTORIES = int(round(_BASE_SHARD * _SCALE))
+_SHARD_CLUSTER = None
+
+
+def _shard_cluster():
+    global _SHARD_CLUSTER
+    if _SHARD_CLUSTER is None:
+        _SHARD_CLUSTER = generate_cluster(num_apps=96, seed=7)
+    return _SHARD_CLUSTER
+
+
+@hypothesis.settings(max_examples=N_SHARD_TRAJECTORIES, deadline=None)
+@hypothesis.given(st.integers(0, 10_000))
+def test_fuzz_sharded_passes_hold_invariants(seed):
+    rng = np.random.default_rng(seed ^ 0x54A2D)
+    cluster = _shard_cluster()
+    # Random per-app demand skew; shapes stay fixed so at most one compile
+    # per shard count (S in 1..5 -> <= 5 (S, Nb, Tb) buckets).
+    skew = rng.uniform(0.5, 1.8, size=(cluster.problem.num_apps, 1))
+    problem = dataclasses.replace(
+        cluster.problem, demand=cluster.problem.demand * jnp.asarray(skew, jnp.float32)
+    )
+    skewed = dataclasses.replace(cluster, problem=problem)
+    num_shards = int(rng.integers(1, 6))
+
+    plan = plan_shards(skewed, num_shards)
+    sharded = partition_problem(problem, plan)
+    # Bijection: every app in exactly one slot; merged incumbents are the
+    # global incumbents bit-for-bit.
+    ids = sharded.app_ids[sharded.app_ids >= 0]
+    assert np.array_equal(np.sort(ids), np.arange(problem.num_apps)), seed
+    identity = merge_assignment(problem, sharded, np.asarray(sharded.problems.assignment0))
+    assert np.array_equal(identity, np.asarray(problem.assignment0)), seed
+
+    res = solve_shards(sharded, ShardSolveConfig(max_iters=32))
+    merged = merge_assignment(problem, sharded, res.x)
+    # Hard invariants: nobody stranded, the incumbent never worsened, and
+    # no app left its home shard (cross-shard is coordinator-only).
+    assert stranded_apps(problem, merged) == 0, (seed, num_shards)
+    obj0 = float(objective(problem, problem.assignment0))
+    assert float(objective(problem, jnp.asarray(merged))) <= obj0 + 1e-4, seed
+    assert (plan.tier_shard[merged] == plan.app_shard).all(), (seed, num_shards)
+
+
 def test_fuzz_counts_cover_the_contract():
-    """The satellite's floor: at least 200 random trajectories total."""
-    assert N_SIM_TRAJECTORIES + N_ADMISSION_TRAJECTORIES + N_PREMASK_TRAJECTORIES >= 200
+    """The satellite's floor: at least 200 random trajectories total (and
+    the env knob only ever scales the coverage up)."""
+    total = (
+        N_SIM_TRAJECTORIES
+        + N_ADMISSION_TRAJECTORIES
+        + N_PREMASK_TRAJECTORIES
+        + N_SHARD_TRAJECTORIES
+    )
+    assert total >= 200
+    assert total >= _BASE_TOTAL
