@@ -170,6 +170,41 @@ CHECKS = (
         0.02,
         0.03,
     ),
+    # PR 9 streaming service: event-driven control must match the lockstep
+    # scorecard within tolerance while doing strictly less work.  Event
+    # integrity and delta-solve safety are absolute — one dropped event or
+    # one reverted delta is a bug, not drift — and the >= 30% full-pass
+    # reduction is the acceptance number, pinned per scenario (named
+    # checks so a baseline regeneration that dropped a scenario fails).
+    Check(SIM_SMOKE, ("service_loop", "*", "compare", "dropped_events"), "not_above", 0),
+    Check(SIM_SMOKE, ("service_loop", "*", "compare", "delta_reverts"), "not_above", 0),
+    Check(
+        SIM_SMOKE,
+        ("service_loop", "*", "compare", "slo_violation_ticks", "ratio"),
+        "not_above",
+        0.10,
+        0.25,
+    ),
+    Check(
+        SIM_SMOKE,
+        ("service_loop", "*", "compare", "mean_d2b", "ratio"),
+        "not_above",
+        0.15,
+        0.25,
+    ),
+    Check(
+        SIM_SMOKE,
+        ("service_loop", "steady_diurnal", "compare", "full_passes", "reduction"),
+        "not_below",
+        0.03,
+    ),
+    Check(
+        SIM_SMOKE,
+        ("service_loop", "flash_crowd", "compare", "full_passes", "reduction"),
+        "not_below",
+        0.05,
+        0.10,
+    ),
     # --- solver smoke: counts/objectives tight, wall-clock generous ------
     Check(SOLVER_SMOKE, ("local_search", "*", "batch16", "moves_per_s"), "not_below", 0, 3.0),
     Check(SOLVER_SMOKE, ("local_search", "*", "batch1", "moves_per_s"), "not_below", 0, 3.0),

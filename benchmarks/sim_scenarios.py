@@ -171,12 +171,61 @@ def bench_scenario(name: str, num_apps: int, ticks: int, seed: int = 0):
     return rec
 
 
+def bench_service_loop(num_apps: int, ticks: int):
+    """PR 9 streaming service: the same trajectory as a lockstep run and as
+    an event stream through ``ServiceLoop``, on the two curated plain
+    scenarios the acceptance pins.  The record keys the gate pins are the
+    ``compare`` scorecard (quality ratios vs lockstep, >= 30% fewer full
+    cooperate passes, zero dropped events, zero delta reverts) plus the
+    loop's operational ``stats`` (events/s, re-solve p50/p99)."""
+    from repro.sim import run_service_pair
+
+    section = {}
+    for name in ("steady_diurnal", "flash_crowd"):
+        sc = get_scenario(name, num_apps=num_apps, ticks=ticks)
+        t0 = time.perf_counter()
+        pair = run_service_pair(sc)
+        wall = time.perf_counter() - t0
+        cmp = pair["service_compare"]
+        stats = pair["service"].extra["service"]
+        section[name] = {
+            "num_apps": num_apps,
+            "ticks": ticks,
+            "wall_s": wall,
+            "compare": cmp,
+            "stats": stats,
+        }
+        viol = cmp["slo_violation_ticks"]
+        fp = cmp["full_passes"]
+        emit(f"sim_scenarios/service_loop/{name}/N{num_apps}x{ticks}",
+             wall * 1e6,
+             f"viol_lockstep={viol['lockstep']};viol_service={viol['service']};"
+             f"full_passes={fp['lockstep']}->{fp['service']};"
+             f"reduction={fp['reduction']:.3f};"
+             f"delta_solves={cmp['delta_solves']};"
+             f"noop_ticks={cmp['noop_ticks']};"
+             f"dropped={cmp['dropped_events']};"
+             f"reverts={cmp['delta_reverts']};"
+             f"events_per_s={stats['events_per_s']:.0f};"
+             f"resolve_p50_ms={stats['resolve_p50_ms']:.1f};"
+             f"resolve_p99_ms={stats['resolve_p99_ms']:.1f}")
+        comment(f"{name} (service): full passes {fp['lockstep']} -> "
+                f"{fp['service']} ({fp['reduction']:.0%} fewer), "
+                f"{cmp['delta_solves']} delta solves, "
+                f"{cmp['noop_ticks']} noop ticks, violations "
+                f"{viol['lockstep']} -> {viol['service']}, "
+                f"{cmp['dropped_events']} dropped events")
+    RESULTS["service_loop"] = section
+    return section
+
+
 def run(smoke: bool = False):
     comment(f"--- fleet simulator scenarios "
             f"(XLA path, CPU{', smoke' if smoke else ''}) ---")
     num_apps, ticks = (128, 24) if smoke else (400, 160)
     for name in list_scenarios():
         bench_scenario(name, num_apps, ticks)
+    bench_service_loop(num_apps, ticks)
 
     # Smoke numbers must not clobber the tracked fleet-scale record.
     name = "BENCH_sim_smoke.json" if smoke else "BENCH_sim.json"

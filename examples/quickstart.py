@@ -10,7 +10,7 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import jax
 import numpy as np
 
-from repro.core import CoopConfig, Sptlb, generate_cluster, utilization_fraction
+from repro import CoopConfig, Sptlb, generate_cluster, utilization_fraction
 from repro.models import build_model, reduce_for_smoke
 from repro.configs import get_config
 from repro.streams import StreamConfig, TokenStream

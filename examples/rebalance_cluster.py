@@ -26,7 +26,8 @@ your own level is one call:
 import argparse
 
 
-from repro.core import CoopConfig, Hierarchy, Sptlb, generate_cluster
+from repro import CoopConfig, Sptlb, generate_cluster
+from repro.core import Hierarchy
 from repro.distributed.fault import CapacityEvent, rebalance
 
 

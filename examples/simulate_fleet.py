@@ -112,10 +112,42 @@ mode's bounded latency degradation.  ``BENCH_sim.json`` is regenerated by
 """
 import argparse
 
-from repro.core.controller import ControllerConfig
-from repro.core.levels import CoopConfig
-from repro.sim import (get_scenario, list_scenarios, run_chaos_pair,
-                       run_overload_pair, run_pair, run_scenario)
+from repro import (ControllerConfig, CoopConfig, get_scenario,
+                   list_scenarios, run_pair, run_scenario, run_service_pair)
+from repro.sim import run_chaos_pair, run_overload_pair
+
+
+def run_service(names, args):
+    """--service: event-stream service vs lockstep scorecard per scenario."""
+    if args.scenario == "all":
+        names = [n for n in sorted(list_scenarios())
+                 if not (sc := get_scenario(n, num_apps=8, ticks=8,
+                                            seed=0)).chaos and not sc.overload]
+    for name in names:
+        sc = get_scenario(name, num_apps=args.apps, ticks=args.ticks,
+                          seed=args.seed)
+        if sc.chaos or sc.overload:
+            print(f"{name}: chaos/overload scenarios replay through their "
+                  f"own harnesses — skipping")
+            continue
+        print(f"-- {name}: {sc.description}")
+        out = run_service_pair(sc, verbose=args.verbose)
+        c = out["service_compare"]
+        fp = c["full_passes"]
+        print(f"   full passes        lockstep {fp['lockstep']} vs "
+              f"service {fp['service']} (reduction {fp['reduction']:.2f})")
+        print(f"   delta solves       {c['delta_solves']} "
+              f"({c['delta_fraction']:.2f} of solves), "
+              f"{c['noop_ticks']} no-op ticks, "
+              f"{c['delta_reverts']} parity reverts")
+        v = c["slo_violation_ticks"]
+        ratio = "n/a" if v["ratio"] is None else f"{v['ratio']:.2f}"
+        print(f"   violation ticks    lockstep {v['lockstep']} vs "
+              f"service {v['service']} (ratio {ratio})")
+        print(f"   moves              lockstep {c['total_moves']['lockstep']} "
+              f"vs service {c['total_moves']['service']}")
+        print(f"   events             {c['events_applied']} applied, "
+              f"{c['dropped_events']} dropped (must be 0)")
 
 
 def run_chaos(names, args):
@@ -225,6 +257,11 @@ def main():
                     help="run the overload family through run_overload_pair "
                          "and print the utility-vs-binary scorecard (see "
                          "docs/overload_and_admission.md)")
+    ap.add_argument("--service", action="store_true",
+                    help="replay scenarios as event streams through the "
+                         "ServiceLoop (drift-triggered delta solves) and "
+                         "print the service-vs-lockstep scorecard (see "
+                         "docs/streaming_service.md)")
     ap.add_argument("--verbose", action="store_true",
                     help="per-tick trace")
     args = ap.parse_args()
@@ -236,6 +273,9 @@ def main():
         return
     if args.overload:
         run_overload(names, args)
+        return
+    if args.service:
+        run_service(names, args)
         return
     levels = (tuple(n for n in args.levels.split(",") if n.strip())
               if args.levels else None)

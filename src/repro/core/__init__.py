@@ -27,7 +27,8 @@ from repro.core.health import (BreakerBoard, BreakerConfig, CircuitBreaker,
                                HealthConfig, TelemetryHealth,
                                TelemetryMonitor)
 from repro.core.controller import (BalanceController, ControllerConfig,
-                                   FaultToleranceConfig, Mode)
+                                   FaultToleranceConfig, Mode, TickInput,
+                                   TickResult)
 
 __all__ = [
     "Advisory", "MaintenancePlanner", "PlannerConfig", "PlanOutlook",
@@ -50,4 +51,5 @@ __all__ = [
     "BreakerBoard", "BreakerConfig", "CircuitBreaker", "HealthConfig",
     "TelemetryHealth", "TelemetryMonitor",
     "BalanceController", "ControllerConfig", "FaultToleranceConfig", "Mode",
+    "TickInput", "TickResult",
 ]

@@ -31,16 +31,31 @@ Policies:
 
 Externally-evolved clusters: the controller is driven by whoever owns the
 telemetry loop (``repro.sim.harness`` in the fleet simulator).  Callers
-hand the evolved cluster to ``tick(cluster)`` (or assign ``self.cluster``
-between ticks); the controller re-syncs its reused ``Sptlb`` either way, so
-capacity events, demand drift, and churn (``valid``-mask flips) are picked
-up without rebuilding the controller or losing cooldown/audit state.
+hand the evolved cluster to ``step(TickInput(cluster=...))`` (or assign
+``self.cluster`` between ticks); the controller re-syncs its reused
+``Sptlb`` either way, so capacity events, demand drift, and churn
+(``valid``-mask flips) are picked up without rebuilding the controller or
+losing cooldown/audit state.
+
+Public surface (this is the redesigned API):
+
+  * ``step(TickInput) -> TickResult`` — one control round, decomposed into
+    observe / decide / actuate phases.  ``TickInput.events`` carries typed
+    ``ServiceEvent`` records (``repro.service.events``, duck-typed on
+    ``kind`` so core never imports service); ``TickInput.dirty_shards``
+    scopes the sharded solve to a dirty region (delta solve).
+  * ``ingest(event)`` — fold one event into controller state between
+    rounds (advisory schedules, fault windows, telemetry/capacity/
+    membership deltas).
+  * ``tick`` / ``observe`` / ``set_advisories`` / ``admit`` — deprecated
+    shims over the above; they warn and will be removed.
 """
 from __future__ import annotations
 
 import dataclasses
 import enum
 import time
+import warnings
 from typing import Optional
 
 import jax.numpy as jnp
@@ -211,6 +226,50 @@ class ControllerEvent:
     health_score: float = 1.0
 
 
+@dataclasses.dataclass(frozen=True)
+class TickInput:
+    """Everything one control round may consume, as one typed record.
+
+    Replaces the legacy ``tick(cluster=..., now=..., collected_at=...)``
+    kwargs.  ``events`` is a sequence of ``ServiceEvent`` records folded in
+    (via ``ingest``) before the observe phase; ``dirty_shards`` scopes the
+    sharded solve to those shard indices (the delta-solve path — ignored
+    on the global engine, where there is no incremental structure to
+    exploit)."""
+
+    cluster: Optional[ClusterState] = None
+    now: Optional[int] = None
+    collected_at: Optional[int] = None
+    events: tuple = ()
+    dirty_shards: Optional[tuple] = None
+    # Shard count the dirty ids were computed against.  Only consulted when
+    # ``dirty_shards`` is given and the config has no standing shard count:
+    # it lets a delta solve route through the partitioned solver while full
+    # passes keep the (higher-quality, cross-region) global engine.
+    num_shards: Optional[int] = None
+
+
+@dataclasses.dataclass
+class TickResult:
+    """What one control round produced.
+
+    Wraps the audit-trail ``ControllerEvent`` (every legacy field is
+    reachable directly on the result — attribute access delegates) plus
+    the full ``BalanceDecision`` when a solve ran, the advisories that
+    expired this round, and whether the solve was scoped to a dirty
+    region (``delta``)."""
+
+    event: ControllerEvent
+    decision: Optional[object] = None  # core.sptlb.BalanceDecision
+    expired_advisories: tuple = ()
+    delta: bool = False
+
+    def __getattr__(self, name):
+        # Delegation keeps ``res.applied`` / ``res.reason`` / ... working
+        # for code written against the ControllerEvent return type.
+        return getattr(self.event, name)
+
+
 class BalanceController:
     def __init__(self, cluster: ClusterState,
                  config: ControllerConfig = ControllerConfig()):
@@ -218,6 +277,7 @@ class BalanceController:
         self.config = config
         self.round = 0
         self.last_applied_round = -10**9
+        self.last_applied_now = -10**9
         self.history: list[ControllerEvent] = []
         # One balancer for the controller's lifetime: re-instantiating it
         # every trigger discarded nothing expensive per se, but the cluster
@@ -255,15 +315,29 @@ class BalanceController:
         # instead of the config's level names (the sim's LevelFault event
         # swaps in a faulty wrapper here).
         self.hierarchy_override = None
+        # Advisory lifecycle: one record per declared advisory tracking
+        # whether a solve was applied while it steered the planning horizon
+        # (``acted``).  An advisory whose deadline passes unacted — e.g. the
+        # controller sat in SAFE through the whole window — raises the
+        # catch-up flag, which forces one post-recovery rebalance instead of
+        # silently forgetting the event ever happened.
+        self._advisory_log: list[dict] = []
+        self.advisory_expiries: list[dict] = []
+        self._advisory_catchup = False
+        # Externally-declared fault windows (FaultSignal events): (until,
+        # severity) pairs folded into the composite health score while
+        # ``now < until``.
+        self._ext_faults: list[tuple[int, float]] = []
 
-    def set_advisories(self, advisories, *,
-                       horizon: Optional[int] = None) -> None:
+    def _set_advisories(self, advisories, *,
+                        horizon: Optional[int] = None) -> None:
         """Hand the controller a declared maintenance schedule (a sequence
         of ``core.planner.Advisory``).  An empty schedule disables
         anticipation; the budget and history are untouched either way."""
         advisories = tuple(advisories)
         if not advisories or self.config.anticipation_horizon <= 0:
             self.planner = None
+            self._advisory_log = []
             return
         self.planner = MaintenancePlanner(
             advisories,
@@ -271,10 +345,21 @@ class BalanceController:
                 horizon=(self.config.anticipation_horizon
                          if horizon is None else horizon),
                 drain_threshold=self.config.drain_avoid_threshold))
+        self._advisory_log = [
+            {"advisory": a, "acted": False, "expired": False}
+            for a in self.planner.advisories]
+
+    def set_advisories(self, advisories, *,
+                       horizon: Optional[int] = None) -> None:
+        warnings.warn(
+            "BalanceController.set_advisories(...) is deprecated; send an "
+            "AdvisoryBatch event through step(TickInput(events=...)) or "
+            "ingest(...)", DeprecationWarning, stacklevel=2)
+        self._set_advisories(advisories, horizon=horizon)
 
     # -- admission gate (requires an attached streams.admission controller) --
-    def admit(self, *, demand, tasks, slo, criticality, key,
-              app_id: Optional[int] = None):
+    def _admit(self, *, demand, tasks, slo, criticality, key,
+               app_id: Optional[int] = None):
         """Price one arriving app in the current operating mode.
 
         Delegates to the attached ``AdmissionController`` (``admission``):
@@ -297,6 +382,88 @@ class BalanceController:
             self.shedder.set_cap(app_id, decision.cap)
         return decision
 
+    def admit(self, *, demand, tasks, slo, criticality, key,
+              app_id: Optional[int] = None):
+        warnings.warn(
+            "BalanceController.admit(...) is deprecated; route arrivals "
+            "through the service loop / ingest(AppArrival)",
+            DeprecationWarning, stacklevel=2)
+        return self._admit(demand=demand, tasks=tasks, slo=slo,
+                           criticality=criticality, key=key, app_id=app_id)
+
+    # -- event ingestion ------------------------------------------------------
+    def ingest(self, event) -> None:
+        """Fold one ``ServiceEvent`` into controller state.
+
+        Dispatch is duck-typed on ``event.kind`` (core never imports
+        ``repro.service``).  Fleet-state events mutate ``self.cluster``
+        directly — the standalone path for callers without a service loop;
+        under a loop the ``FleetShadow`` owns fleet state and only
+        advisory/fault events reach here."""
+        kind = getattr(event, "kind", None)
+        if kind == "advisories":
+            self._set_advisories(event.advisories, horizon=event.horizon)
+        elif kind == "fault":
+            self._ext_faults.append((int(event.until),
+                                     float(event.severity)))
+        elif kind == "telemetry":
+            p = self.cluster.problem
+            ids = jnp.asarray(np.asarray(event.app_ids, np.int64))
+            demand = p.demand.at[ids].set(
+                jnp.asarray(event.demand, p.demand.dtype).reshape(
+                    ids.shape[0], -1))
+            tasks = p.tasks.at[ids].set(
+                jnp.asarray(event.tasks, p.tasks.dtype).reshape(-1))
+            self._observe(dataclasses.replace(
+                self.cluster,
+                problem=dataclasses.replace(p, demand=demand, tasks=tasks),
+                collected_at=max(self.cluster.collected_at,
+                                 int(event.collected_at))))
+        elif kind == "capacity":
+            p = self.cluster.problem
+            fields = {}
+            for name in ("capacity", "task_limit", "slo_allowed"):
+                value = getattr(event, name)
+                if value is not None:
+                    fields[name] = jnp.asarray(value)
+            cl = dataclasses.replace(
+                self.cluster, problem=dataclasses.replace(p, **fields))
+            if event.region_latency is not None:
+                cl = dataclasses.replace(
+                    cl, region_latency=np.asarray(event.region_latency))
+            if event.hosts_per_tier is not None:
+                cl = dataclasses.replace(
+                    cl, hosts_per_tier=np.asarray(event.hosts_per_tier))
+            self._observe(cl)
+        elif kind == "arrival":
+            p = self.cluster.problem
+            n = int(event.app_id)
+            x0 = p.assignment0
+            if event.tier >= 0:
+                x0 = x0.at[n].set(int(event.tier))
+            self._observe(dataclasses.replace(
+                self.cluster, problem=dataclasses.replace(
+                    p,
+                    valid=p.valid.at[n].set(True),
+                    demand=p.demand.at[n].set(
+                        jnp.asarray(event.demand, p.demand.dtype)),
+                    tasks=p.tasks.at[n].set(float(event.tasks)),
+                    slo=p.slo.at[n].set(int(event.slo)),
+                    criticality=p.criticality.at[n].set(
+                        float(event.criticality)),
+                    assignment0=x0)))
+        elif kind == "departure":
+            p = self.cluster.problem
+            n = int(event.app_id)
+            self._observe(dataclasses.replace(
+                self.cluster, problem=dataclasses.replace(
+                    p,
+                    valid=p.valid.at[n].set(False),
+                    demand=p.demand.at[n].set(0.0),
+                    tasks=p.tasks.at[n].set(0.0))))
+        else:
+            raise ValueError(f"unknown service event kind: {kind!r}")
+
     # -- trigger policy -----------------------------------------------------
     def should_rebalance(self, d2b: Optional[float] = None,
                          outlook: Optional[PlanOutlook] = None
@@ -310,7 +477,12 @@ class BalanceController:
         p = self.cluster.problem
         if d2b is None:
             d2b = M.difference_to_balance(p, p.assignment0)
-        if self.round - self.last_applied_round < cfg.cooldown_rounds:
+        # Cooldown is wall-clock (``now``), not controller rounds: under an
+        # event-driven frontend the controller only steps on solve-worthy
+        # ticks, and counting rounds would stretch the cooldown across
+        # arbitrarily many quiescent wall ticks.  In lockstep operation the
+        # two clocks advance together, so the semantics are unchanged.
+        if self.now - self.last_applied_now < cfg.cooldown_rounds:
             return False, f"cooldown ({d2b=:.3f})"
         if outlook is not None and outlook.active:
             return True, (
@@ -331,11 +503,18 @@ class BalanceController:
                 return True, f"slo-stranded apps {stranded}"
         return False, f"balanced ({d2b=:.3f})"
 
-    def observe(self, cluster: ClusterState) -> None:
+    def _observe(self, cluster: ClusterState) -> None:
         """Adopt an externally-evolved cluster (fresh telemetry, capacity
         events, churn) without losing cooldown/audit state."""
         self.cluster = cluster
         self._sptlb.cluster = cluster
+
+    def observe(self, cluster: ClusterState) -> None:
+        warnings.warn(
+            "BalanceController.observe(...) is deprecated; pass the "
+            "cluster via step(TickInput(cluster=...)) or send telemetry/"
+            "capacity events", DeprecationWarning, stacklevel=2)
+        self._observe(cluster)
 
     # -- degraded-mode machinery (inert when config.fault is None) -----------
     def _evacuation_mask(self, p) -> np.ndarray:
@@ -362,7 +541,14 @@ class BalanceController:
     def _composite_score(self) -> float:
         telemetry = self.health.score if self.health is not None else 1.0
         board = self.board.health_factor() if self.board is not None else 1.0
-        return float(telemetry * board * (1.0 - self._solver_distress))
+        score = float(telemetry * board * (1.0 - self._solver_distress))
+        # Externally-declared fault windows (FaultSignal events) degrade the
+        # score while active; expired windows are pruned as time passes.
+        self._ext_faults = [(u, s) for (u, s) in self._ext_faults
+                            if self.now < u]
+        for _, severity in self._ext_faults:
+            score *= max(0.0, 1.0 - severity)
+        return score
 
     def _transition(self, to: Mode, score: float) -> None:
         self.mode_transitions.append({
@@ -404,21 +590,79 @@ class BalanceController:
         self._solver_distress = ((1.0 - w) * self._solver_distress
                                  + w * (0.0 if accepted else 1.0))
 
+    # -- advisory lifecycle ---------------------------------------------------
+    def _expire_advisories(self) -> tuple:
+        """Expire advisories whose deadline has passed.
+
+        This is the stale-advisory fix: an advisory whose ``at`` tick goes
+        by while the controller is held (SAFE mode, exhausted budget) used
+        to vanish silently — ``MaintenancePlanner.outlook`` only looks at
+        ``now < at``, so on recovery nothing ever re-phased the fleet for
+        the event that already happened.  Expiry is now explicit: each
+        record lands in ``advisory_expiries`` (audited), and an *unacted*
+        expiry raises the catch-up flag that forces one rebalance when the
+        controller is next free to move."""
+        expired = []
+        for rec in self._advisory_log:
+            a = rec["advisory"]
+            if not rec["expired"] and a.at <= self.now:
+                rec["expired"] = True
+                entry = {"tick": self.now, "kind": a.kind, "tier": a.tier,
+                         "at": a.at, "acted": rec["acted"]}
+                self.advisory_expiries.append(entry)
+                expired.append(entry)
+                if not rec["acted"]:
+                    self._advisory_catchup = True
+        return tuple(expired)
+
+    def _mark_advisories_acted(self) -> None:
+        """A decision was applied at ``self.now``: every advisory currently
+        steering the planning horizon has been acted on."""
+        if self.planner is None:
+            return
+        horizon = self.planner.config.horizon
+        for rec in self._advisory_log:
+            a = rec["advisory"]
+            if not rec["expired"] and self.now < a.at <= self.now + horizon:
+                rec["acted"] = True
+
     # -- one control round ----------------------------------------------------
+    def step(self, inp: Optional[TickInput] = None) -> TickResult:
+        """One control round: observe -> decide -> actuate.
+
+        ``inp.now`` is the external clock the advisory schedule is declared
+        against (the sim harness passes its tick); callers without one get
+        the controller's own 0-based round count.  ``inp.collected_at``
+        stamps when the observed telemetry was actually collected (defaults
+        to the cluster's own ``collected_at``); with fault tolerance armed,
+        ``now - collected_at`` is the staleness the telemetry monitor
+        scores."""
+        inp = inp if inp is not None else TickInput()
+        self._observe_phase(inp)
+        plan = self._decide_phase(inp)
+        return self._actuate_phase(inp, plan)
+
     def tick(self, cluster: Optional[ClusterState] = None,
              now: Optional[int] = None,
              collected_at: Optional[int] = None) -> ControllerEvent:
-        """One control round.  ``now`` is the external clock the advisory
-        schedule is declared against (the sim harness passes its tick);
-        callers without one get the controller's own 0-based round count.
-        ``collected_at`` stamps when the observed telemetry was actually
-        collected (defaults to the cluster's own ``collected_at``); with
-        fault tolerance armed, ``now - collected_at`` is the staleness the
-        telemetry monitor scores."""
-        if cluster is not None:
-            self.observe(cluster)
+        """Deprecated: use ``step(TickInput(...))``; returns only the audit
+        ``ControllerEvent`` (the ``TickResult`` carries strictly more)."""
+        warnings.warn(
+            "BalanceController.tick(...) is deprecated; use "
+            "step(TickInput(cluster=..., now=..., collected_at=...))",
+            DeprecationWarning, stacklevel=2)
+        return self.step(TickInput(cluster=cluster, now=now,
+                                   collected_at=collected_at)).event
+
+    def _observe_phase(self, inp: TickInput) -> None:
+        """Adopt the world: the handed cluster, queued events, the clock,
+        then (fault-armed) telemetry sanitation and the mode machine."""
+        if inp.cluster is not None:
+            self._observe(inp.cluster)
+        for event in inp.events:
+            self.ingest(event)
         self.round += 1
-        self.now = (self.round - 1) if now is None else int(now)
+        self.now = (self.round - 1) if inp.now is None else int(inp.now)
         fault = self.config.fault
         if fault is not None:
             # Sanitize first: quarantined/implausible readings are replaced
@@ -427,16 +671,24 @@ class BalanceController:
             # A cluster nobody ever stamped (collected_at at its default 0)
             # reads as fresh — staleness only engages for producers that
             # participate in the stamping protocol.
+            collected_at = inp.collected_at
             if collected_at is None:
                 collected_at = (self.cluster.collected_at
                                 if self.cluster.collected_at else self.now)
             sanitized, self.health = self.monitor.ingest(
                 self.cluster, self.now, collected_at)
-            self.observe(sanitized)
+            self._observe(sanitized)
             self._update_mode(self._composite_score())
         # Callers may also swap ``self.cluster`` directly between ticks; the
         # reused balancer must follow it either way.
         self._sptlb.cluster = self.cluster
+
+    def _decide_phase(self, inp: Optional[TickInput] = None) -> dict:
+        """Everything between fresh telemetry and the solver: shed caps,
+        the planning outlook, advisory expiry, the trigger policy, mode
+        gating, and the movement budget.  Returns the actuation plan."""
+        inp = inp if inp is not None else TickInput()
+        fault = self.config.fault
         p = self.cluster.problem
         # Overload shedding runs first (in every mode — capping demand needs
         # no movement and only reduces risk): the plan's caps are the
@@ -454,8 +706,20 @@ class BalanceController:
                 self.shed_advisories.extend(shed_plan.advisories)
         outlook = (self.planner.outlook(self.now, self.cluster)
                    if self.planner is not None else None)
+        expired = self._expire_advisories()
         d2b_before = M.difference_to_balance(p, p.assignment0)
         triggered, reason = self.should_rebalance(d2b_before, outlook)
+        if (not triggered and inp.dirty_shards is not None
+                and self.now - self.last_applied_now
+                >= self.config.cooldown_rounds):
+            # A delta request arrives pre-triggered: the caller's drift
+            # detector already judged the dirty region solve-worthy, and a
+            # scoped sharded solve is too cheap to double-gate behind the
+            # lockstep trigger thresholds.  Cooldown and the mode gates
+            # below still apply.
+            triggered = True
+            reason = (f"drift delta over {len(inp.dirty_shards)} dirty "
+                      f"shards ({reason})")
         if shed_plan is not None and shed_plan.churned and not triggered:
             # Cap transitions change what the fleet serves this tick —
             # rebalance promptly (overrides cooldown, like declared events).
@@ -480,6 +744,14 @@ class BalanceController:
                 reason = f"conservative hold ({reason})"
             elif triggered:
                 reason = f"conservative strand-fix of {n_evac} apps ({reason})"
+        if (not triggered and self._advisory_catchup
+                and (fault is None or self.mode is Mode.NORMAL)):
+            # An advisory deadline passed while the controller was held
+            # (SAFE/CONSERVATIVE or budget-blocked): the fleet was never
+            # re-phased for the event.  Force one rebalance now that moving
+            # is acceptable again — overrides cooldown, like declared events.
+            triggered = True
+            reason = f"expired-advisory catch-up ({reason})"
         ev = ControllerEvent(self.round, triggered, reason, False, d2b_before,
                              mode=self.mode.value,
                              health_score=round(self._composite_score(), 4)
@@ -495,6 +767,25 @@ class BalanceController:
         if (fault is not None and self.mode is Mode.CONSERVATIVE
                 and remaining != float("inf")):
             remaining = remaining * fault.budget_factor_conservative
+        return {"ev": ev, "triggered": triggered, "outlook": outlook,
+                "shed_plan": shed_plan, "evac": evac, "remaining": remaining,
+                "expired": expired}
+
+    def _actuate_phase(self, inp: TickInput, plan: dict) -> TickResult:
+        """Run (or skip) the solve the decide phase asked for and commit
+        its consequences: the applied assignment, the movement ledger,
+        solver-distress accounting, and the audit trail."""
+        fault = self.config.fault
+        p = self.cluster.problem
+        ev = plan["ev"]
+        triggered = plan["triggered"]
+        outlook = plan["outlook"]
+        shed_plan = plan["shed_plan"]
+        evac = plan["evac"]
+        remaining = plan["remaining"]
+        reason = ev.reason
+        decision = None
+        delta = False
         if triggered and remaining <= 1e-9:
             # The downtime budget is spent: movement is off the table, no
             # matter what the metrics say.  Observable, never silent.
@@ -516,17 +807,24 @@ class BalanceController:
                     balance_cluster = dataclasses.replace(
                         self.cluster, problem=p.with_avoid(
                             jnp.asarray(self._mode_avoid(p, evac))))
-            if self.config.shards:
+            dirty = inp.dirty_shards
+            delta = dirty is not None
+            shards = self.config.shards or (inp.num_shards if delta else None)
+            if shards:
                 # Sharded fleet path: partitioned batched solve + the
                 # FleetCoordinator's priced boundary migrations, under the
                 # same BalanceDecision contract (plan steering, shed caps,
-                # and the movement budget all ride coop_cfg).
+                # and the movement budget all ride coop_cfg).  A dirty-region
+                # scope from the service loop turns this into a delta solve;
+                # without a standing config.shards, *only* delta solves route
+                # here and full passes keep the global engine.
                 from repro.shard import FleetConfig, balance_fleet
                 decision = balance_fleet(
                     balance_cluster,
-                    fleet=FleetConfig(num_shards=self.config.shards,
+                    fleet=FleetConfig(num_shards=shards,
                                       timeout_s=self.config.timeout_s),
-                    coop=coop_cfg)
+                    coop=coop_cfg,
+                    dirty_shards=dirty)
             else:
                 self._sptlb.cluster = balance_cluster
                 decision = self._sptlb.balance(
@@ -566,14 +864,18 @@ class BalanceController:
                         jnp.asarray(decision.assignment)))
                 self._sptlb.cluster = self.cluster   # next tick re-syncs too
                 self.last_applied_round = self.round
+                self.last_applied_now = self.now
                 ev.applied = True
                 self.cost_spent += decision.movement_cost
+                self._mark_advisories_acted()
+                self._advisory_catchup = False
         if fault is not None and not triggered:
             # No solve this tick: solver distress decays toward healthy
             # (the breaker board and telemetry keep their own state).
             self._solver_distress *= fault.solver_distress_decay
         self.history.append(ev)
-        return ev
+        return TickResult(event=ev, decision=decision,
+                          expired_advisories=plan["expired"], delta=delta)
 
     def audit(self) -> dict:
         """Summary of the decision trail (§3.3's emitted metrics)."""
@@ -589,6 +891,10 @@ class BalanceController:
             "movement_cost_budget": self.config.movement_cost_budget,
             "budget_overruns": self.budget_overruns,
         }
+        if self.advisory_expiries:
+            out["advisory_expiries"] = list(self.advisory_expiries)
+            out["advisories_expired_unacted"] = sum(
+                1 for e in self.advisory_expiries if not e["acted"])
         if self.admission is not None:
             out["admission"] = self.admission.audit()
         if self.shedder is not None:

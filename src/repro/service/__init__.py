@@ -1,0 +1,36 @@
+"""Streaming control service: event ingestion, drift detection, delta
+solves.
+
+The paper's schedulers are long-running services; this package is the
+operational wrapper that makes ``BalanceController`` one.  See
+docs/streaming_service.md for the runbook.
+"""
+
+from repro.service.drift import (DELTA, FULL, NOOP, DriftConfig,
+                                 DriftDecision, DriftDetector)
+from repro.service.events import (AdvisoryBatch, AppArrival, AppDeparture,
+                                  CapacityUpdate, FaultSignal, ServiceEvent,
+                                  TelemetryDelta)
+from repro.service.loop import ServiceConfig, ServiceLoop, ServiceStepResult
+from repro.service.shadow import DIRTY_REL, FleetShadow
+
+__all__ = [
+    "AdvisoryBatch",
+    "AppArrival",
+    "AppDeparture",
+    "CapacityUpdate",
+    "DELTA",
+    "DIRTY_REL",
+    "DriftConfig",
+    "DriftDecision",
+    "DriftDetector",
+    "FaultSignal",
+    "FleetShadow",
+    "FULL",
+    "NOOP",
+    "ServiceConfig",
+    "ServiceEvent",
+    "ServiceLoop",
+    "ServiceStepResult",
+    "TelemetryDelta",
+]

@@ -85,14 +85,36 @@ def solve_fleet(
     *,
     move_cost: Optional[np.ndarray] = None,
     migration_budget: float = float("inf"),
+    dirty_shards=None,
 ) -> FleetDecision:
-    """One sharded rebalance pass over the cluster's current problem."""
+    """One sharded rebalance pass over the cluster's current problem.
+
+    ``dirty_shards`` (optional bool[S] mask or shard-index iterable) is the
+    delta-solve path: only the named shards re-solve, the rest keep their
+    incumbent mapping (``shard.solve``).  An all-dirty mask is bit-identical
+    to the full pass.  For a *strict* subset the merged mapping carries a
+    never-worse guard: the global objective is not shard-separable (the
+    balance terms couple through the fleet mean), so a locally-improving
+    delta that worsens the global objective reverts to the incumbent —
+    observable as ``timings["delta_reverted"]``, never silent.
+    """
     cfg = config if config is not None else FleetConfig()
     problem = cluster.problem
     t0 = time.perf_counter()
     plan = plan_shards(cluster, cfg.num_shards)
     sharded = partition_problem(problem, plan)
     t_partition = time.perf_counter()
+
+    dirty = None
+    if dirty_shards is not None:
+        mask = np.zeros(plan.num_shards, bool)
+        arr = np.asarray(dirty_shards)
+        if arr.dtype == bool:
+            mask[: arr.size] = arr[: plan.num_shards]
+        else:
+            ids = arr.astype(np.int64)
+            mask[ids[(ids >= 0) & (ids < plan.num_shards)]] = True
+        dirty = mask
 
     res = solve_shards(
         sharded,
@@ -103,10 +125,19 @@ def solve_fleet(
             batch_quality=cfg.batch_quality,
             seed=cfg.seed,
         ),
+        dirty=dirty,
     )
     t_solve = time.perf_counter()
 
     merged = merge_assignment(problem, sharded, res.x)
+    delta_reverted = False
+    if dirty is not None and not dirty.all():
+        x0 = np.asarray(problem.assignment0)
+        obj0 = float(global_objective(problem, jnp.asarray(x0)))
+        obj1 = float(global_objective(problem, jnp.asarray(merged)))
+        if obj1 > obj0 + 1e-9:
+            merged = x0.copy()
+            delta_reverted = True
     t_merge = time.perf_counter()
 
     coordinator = FleetCoordinator(
@@ -133,6 +164,8 @@ def solve_fleet(
         "merge_s": t_merge - t_solve,
         "coordinator_s": t_coord - t_merge,
         "total_s": total_s,
+        "solved_shards": int(res.solved.sum()) if res.solved.size else plan.num_shards,
+        "delta_reverted": delta_reverted,
     }
     return FleetDecision(
         assignment=merged,
@@ -155,6 +188,7 @@ def balance_fleet(
     *,
     fleet: FleetConfig | None = None,
     coop: CoopConfig | None = None,
+    dirty_shards=None,
 ) -> BalanceDecision:
     """The sharded pass under the controller's ``BalanceDecision`` contract.
 
@@ -187,6 +221,7 @@ def balance_fleet(
         cfg,
         move_cost=knobs.move_cost,
         migration_budget=budget,
+        dirty_shards=dirty_shards,
     )
     problem = base_cluster.problem
     res = SolveResult(

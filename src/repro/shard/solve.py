@@ -47,7 +47,12 @@ class ShardSolveConfig:
 
 @dataclasses.dataclass
 class ShardSolveResult:
-    """Per-shard outputs of one batched pass (leading [S] axis)."""
+    """Per-shard outputs of one batched pass (leading [S] axis).
+
+    Under a ``dirty`` mask (delta solve) the unsolved shards report their
+    incumbent assignment with 0 iterations / 0 committed moves and a NaN
+    objective; ``solved`` records which shards actually ran.
+    """
 
     x: jax.Array  # i32[S, Nb] local assignments
     iterations: np.ndarray  # i32[S]
@@ -56,6 +61,9 @@ class ShardSolveResult:
     objective: np.ndarray  # f32[S] final per-shard objective
     solve_time_s: float
     trace_count: int
+    solved: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, bool)
+    )  # bool[S]
 
 
 def _batched_solver(config: ShardSolveConfig):
@@ -91,24 +99,90 @@ def _batched_solver(config: ShardSolveConfig):
 
 
 def solve_shards(
-    sharded: ShardedProblem, config: ShardSolveConfig | None = None
+    sharded: ShardedProblem,
+    config: ShardSolveConfig | None = None,
+    *,
+    dirty=None,
 ) -> ShardSolveResult:
-    """Solve all shards as one batched pass; returns per-shard results."""
+    """Solve all shards (or only the ``dirty`` ones) as one batched pass.
+
+    ``dirty`` is an optional bool[S] mask (or iterable of shard indices):
+    the *delta-solve* path.  The dirty subproblems are gathered out of the
+    stacked pytree with an index select — every leaf keeps the exact values
+    it holds in the full stack, and the per-shard PRNG keys are gathered
+    from the same ``split`` the full pass uses — so an all-dirty delta
+    solve runs the identical executable on identical inputs and is
+    bit-identical to the full solve (property-tested in
+    tests/test_service.py).  A strict subset pays one extra compilation per
+    new (S', Nb, Tb) shape triple and leaves unsolved shards at their
+    incumbent assignment.
+    """
     cfg = config if config is not None else ShardSolveConfig()
     S = sharded.num_shards
     problems = place_shard_batch(sharded.problems)
     keys = jax.random.split(jax.random.PRNGKey(cfg.seed), S)
     x0 = problems.assignment0
     fn = _batched_solver(cfg)
+
+    if dirty is None:
+        idx = np.arange(S)
+    else:
+        mask = np.asarray(dirty)
+        idx = (
+            np.where(mask)[0]
+            if mask.dtype == bool
+            else np.unique(mask.astype(np.int64))
+        )
+    solved = np.zeros(S, bool)
+    solved[idx] = True
+    if idx.size == 0:
+        return ShardSolveResult(
+            x=x0,
+            iterations=np.zeros(S, np.int32),
+            converged=np.ones(S, bool),
+            committed=np.zeros(S, np.int32),
+            objective=np.full(S, np.nan, np.float32),
+            solve_time_s=0.0,
+            trace_count=shard_batch_trace_count(),
+            solved=solved,
+        )
+
+    gather = idx
+    sub_problems = jax.tree_util.tree_map(lambda a: a[gather], problems)
+    sub_keys = keys[gather]
+    sub_x0 = x0[gather]
     t0 = time.perf_counter()
-    x, it, done, committed, obj = fn(problems, keys, x0)
-    x = jax.block_until_ready(x)
+    x_sub, it, done, committed, obj = fn(sub_problems, sub_keys, sub_x0)
+    x_sub = jax.block_until_ready(x_sub)
+    if idx.size == S:
+        return ShardSolveResult(
+            x=x_sub,
+            iterations=np.asarray(it),
+            converged=np.asarray(done),
+            committed=np.asarray(committed),
+            objective=np.asarray(obj),
+            solve_time_s=time.perf_counter() - t0,
+            trace_count=shard_batch_trace_count(),
+            solved=solved,
+        )
+    # Scatter the solved shards back; the rest keep their incumbents.
+    x = np.asarray(x0).copy()
+    x[idx] = np.asarray(x_sub)
+    iterations = np.zeros(S, np.int32)
+    iterations[idx] = np.asarray(it)
+    converged = np.ones(S, bool)
+    converged[idx] = np.asarray(done)
+    committed_full = np.zeros(S, np.int32)
+    committed_full[idx] = np.asarray(committed)
+    objective = np.full(S, np.nan, np.float32)
+    objective[idx] = np.asarray(obj)
     return ShardSolveResult(
         x=x,
-        iterations=np.asarray(it),
-        converged=np.asarray(done),
-        committed=np.asarray(committed),
-        objective=np.asarray(obj),
+        iterations=iterations,
+        converged=converged,
+        committed=committed_full,
+        objective=objective,
         solve_time_s=time.perf_counter() - t0,
         trace_count=shard_batch_trace_count(),
+        solved=solved,
     )

@@ -28,7 +28,7 @@ import numpy as np
 
 from repro.core.constraints import FEAS_TOL
 from repro.core.controller import (BalanceController, ControllerConfig,
-                                   FaultToleranceConfig)
+                                   FaultToleranceConfig, TickInput)
 from repro.core.hierarchy import RegionScheduler
 from repro.core.levels import DEFAULT_LEVELS
 from repro.core.shedding import ShedConfig
@@ -381,7 +381,8 @@ def run_scenario(sc: Scenario, *, policy: str = "balanced",
                 problem=attach_curves(fleet.cluster.problem, *curves))
         ctl = BalanceController(fleet.cluster, cfg)
         if anticipation:
-            ctl.set_advisories(fleet.declared_events)
+            from repro.service.events import AdvisoryBatch
+            ctl.ingest(AdvisoryBatch(advisories=tuple(fleet.declared_events)))
         if utility:
             ctl.admission = AdmissionController()
     acct = SloAccountant()
@@ -443,10 +444,11 @@ def run_scenario(sc: Scenario, *, policy: str = "balanced",
             if has_chaos:
                 observed = _observe(fleet, observed, tick, view=view)
                 _apply_fault_windows(ctl, fleet, tick, base_cfg)
-                evr = ctl.tick(observed, now=tick,
-                               collected_at=observed.collected_at)
+                evr = ctl.step(TickInput(
+                    cluster=observed, now=tick,
+                    collected_at=observed.collected_at))
             else:
-                evr = ctl.tick(view, now=tick)
+                evr = ctl.step(TickInput(cluster=view, now=tick))
             if evr.applied:
                 committed = np.asarray(ctl.cluster.problem.assignment0)
                 fleet.cluster = dataclasses.replace(
@@ -490,8 +492,8 @@ def run_scenario(sc: Scenario, *, policy: str = "balanced",
             observed = _observe(fleet, observed, tick)
             _apply_fault_windows(ctl, fleet, tick, base_cfg)
             x_before = np.asarray(fleet.cluster.problem.assignment0)
-            evr = ctl.tick(observed, now=tick,
-                           collected_at=observed.collected_at)
+            evr = ctl.step(TickInput(cluster=observed, now=tick,
+                                     collected_at=observed.collected_at))
             unsafe = 0
             if evr.applied:
                 committed = np.asarray(ctl.cluster.problem.assignment0)
@@ -509,7 +511,7 @@ def run_scenario(sc: Scenario, *, policy: str = "balanced",
                 budget_limited=evr.budget_limited, unsafe_moves=unsafe,
                 mode=evr.mode, health_score=evr.health_score)
         elif ctl is not None:
-            evr = ctl.tick(fleet.cluster, now=tick)
+            evr = ctl.step(TickInput(cluster=fleet.cluster, now=tick))
             fleet.cluster = ctl.cluster
             stat = acct.observe(
                 fleet.cluster, moved=evr.moved if evr.applied else 0,
@@ -613,4 +615,174 @@ def run_chaos_pair(sc: Scenario, *, config: ControllerConfig | None = None,
         "baseline": baseline,
         "chaos": chaos_compare(degraded, oracle),
         "compare": compare(baseline, degraded),
+    }
+
+
+# -- streaming service adapter ---------------------------------------------
+
+def run_scenario_service(sc: Scenario, *,
+                         config: ControllerConfig | None = None,
+                         anticipation: bool = True,
+                         num_shards: int = 4,
+                         verbose: bool = False) -> SimReport:
+    """Replay a scenario as an *event stream* through the ServiceLoop.
+
+    The world evolves exactly as in ``run_scenario`` (same workload state,
+    same timed events, same greedy arrival placement — the trajectories are
+    bit-identical up to the controller's decisions), but the controller
+    never sees the cluster directly: every change reaches it as a typed
+    ``ServiceEvent`` (telemetry deltas for drifted demand, capacity updates
+    for timed events, arrivals/departures for churn, one advisory batch at
+    t=0), and the drift detector decides per tick whether to pay for a
+    solve at all.  The accountant scores the same served world as the
+    lockstep run; the loop's operational counters ride
+    ``report.extra["service"]``.
+
+    Chaos and overload scenarios are out of scope here — they need the
+    observed-channel / resident-view machinery (``run_scenario``), not an
+    event replay.
+    """
+    if sc.overload or sc.chaos:
+        raise ValueError("service replay supports plain scenarios only")
+    from repro.service import ServiceConfig, ServiceLoop
+    from repro.service.events import (AdvisoryBatch, AppArrival, AppDeparture,
+                                      CapacityUpdate, TelemetryDelta)
+
+    fleet = build_fleet(sc)
+    cfg = config or SIM_CONTROLLER
+    if sc.move_budget is not None and cfg.movement_cost_budget is None:
+        cfg = dataclasses.replace(cfg, movement_cost_budget=sc.move_budget)
+    if sc.shards is not None and cfg.shards is None:
+        cfg = dataclasses.replace(cfg, shards=sc.shards)
+    # Delta solves partition at this count; full passes keep the engine the
+    # lockstep run would use (global unless the scenario/config shards it).
+    shards = cfg.shards or num_shards
+    ctl = BalanceController(fleet.cluster, cfg)
+    loop = ServiceLoop(controller=ctl,
+                       config=ServiceConfig(num_shards=shards))
+    if anticipation and fleet.declared_events:
+        loop.submit(AdvisoryBatch(advisories=tuple(fleet.declared_events)))
+
+    acct = SloAccountant()
+    solver_traces0 = local_search_trace_count()
+    wl_traces0 = workload_trace_count()
+    p0 = fleet.cluster.problem
+    prev_demand = np.asarray(p0.demand, np.float64).copy()
+    prev_tasks = np.asarray(p0.tasks, np.float64).copy()
+    prev_cap = np.asarray(p0.capacity, np.float64).copy()
+    prev_klim = np.asarray(p0.task_limit, np.float64).copy()
+    prev_slo_ok = np.asarray(p0.slo_allowed, bool).copy()
+    prev_lat = np.asarray(fleet.cluster.region_latency).copy()
+    prev_hosts = np.asarray(fleet.cluster.hosts_per_tier).copy()
+
+    for tick in range(sc.ticks):
+        fleet.wl, demand, tasks, valid = workload_step(fleet.wl_cfg, fleet.wl)
+        prev_valid = np.asarray(fleet.cluster.problem.valid)
+        fleet.cluster = dataclasses.replace(
+            fleet.cluster,
+            problem=dataclasses.replace(
+                fleet.cluster.problem, demand=demand, tasks=tasks,
+                valid=valid))
+        for ev in events_at(sc.events, tick):
+            ev.apply(fleet)
+        valid_np = np.asarray(fleet.cluster.problem.valid)
+        arrivals = np.where(valid_np & ~prev_valid)[0]
+        if arrivals.size:
+            x0 = place_arrivals(fleet, arrivals)
+            fleet.cluster = dataclasses.replace(
+                fleet.cluster,
+                problem=fleet.cluster.problem.with_assignment0(
+                    jnp.asarray(x0)))
+
+        # The world's changes, re-expressed as events.
+        p = fleet.cluster.problem
+        cap = np.asarray(p.capacity, np.float64)
+        klim = np.asarray(p.task_limit, np.float64)
+        slo_ok = np.asarray(p.slo_allowed, bool)
+        lat = np.asarray(fleet.cluster.region_latency)
+        hosts = np.asarray(fleet.cluster.hosts_per_tier)
+        changed = {}
+        if not np.array_equal(cap, prev_cap):
+            changed["capacity"] = cap.copy()
+        if not np.array_equal(klim, prev_klim):
+            changed["task_limit"] = klim.copy()
+        if not np.array_equal(slo_ok, prev_slo_ok):
+            changed["slo_allowed"] = slo_ok.copy()
+        if not np.array_equal(lat, prev_lat):
+            changed["region_latency"] = lat.copy()
+        if not np.array_equal(hosts, prev_hosts):
+            changed["hosts_per_tier"] = hosts.copy()
+        if changed:
+            loop.submit(CapacityUpdate(**changed))
+        prev_cap, prev_klim, prev_slo_ok = cap, klim, slo_ok
+        prev_lat, prev_hosts = lat, hosts
+
+        x0_np = np.asarray(p.assignment0)
+        dem = np.asarray(p.demand, np.float64)
+        tsk = np.asarray(p.tasks, np.float64)
+        slo_np = np.asarray(p.slo)
+        crit_np = np.asarray(p.criticality)
+        for n in arrivals:
+            loop.submit(AppArrival(
+                app_id=int(n), demand=dem[n].copy(), tasks=float(tsk[n]),
+                slo=int(slo_np[n]), criticality=float(crit_np[n]),
+                tier=int(x0_np[n])))
+        for n in np.where(prev_valid & ~valid_np)[0]:
+            loop.submit(AppDeparture(app_id=int(n)))
+        moved_mask = valid_np & prev_valid & (
+            np.any(dem != prev_demand, axis=1) | (tsk != prev_tasks))
+        ids = np.where(moved_mask)[0]
+        if ids.size:
+            loop.submit(TelemetryDelta(
+                app_ids=tuple(int(n) for n in ids),
+                demand=dem[ids].copy(), tasks=tsk[ids].copy(),
+                collected_at=tick))
+        prev_demand, prev_tasks = dem.copy(), tsk.copy()
+
+        out = loop.step(tick)
+        res = out.result
+        if res is not None and res.applied:
+            fleet.cluster = dataclasses.replace(
+                fleet.cluster,
+                problem=fleet.cluster.problem.with_assignment0(
+                    jnp.asarray(np.asarray(
+                        ctl.cluster.problem.assignment0))))
+        stat = acct.observe(
+            fleet.cluster,
+            moved=res.moved if res is not None and res.applied else 0,
+            applied=res is not None and res.applied,
+            triggered=res is not None and res.triggered,
+            solve_s=out.latency_s if res is not None else 0.0,
+            movement_cost=(res.movement_cost
+                           if res is not None and res.applied else 0.0),
+            budget_limited=res is not None and res.budget_limited)
+        if verbose:
+            print(f"  t={tick:4d} {out.action:5s} live={stat.live_apps:5d} "
+                  f"d2b={stat.d2b:.3f} slo_viol={stat.slo_violating_apps:4d} "
+                  f"{out.reason}")
+
+    report = acct.report(sc.name, "service")
+    report.extra.update(
+        solver_retraces=local_search_trace_count() - solver_traces0,
+        workload_retraces=workload_trace_count() - wl_traces0,
+        num_apps=sc.num_apps, pool=sc.max_apps,
+        audit=ctl.audit(), service=loop.stats())
+    return report
+
+
+def run_service_pair(sc: Scenario, *,
+                     config: ControllerConfig | None = None,
+                     verbose: bool = False) -> dict:
+    """The same trajectory twice — lockstep controller vs event-driven
+    service — plus the ``service`` scorecard the regression gate pins
+    (quality within tolerance of lockstep, >= 30% fewer full cooperate
+    passes, zero dropped events)."""
+    from repro.sim.slo import service_compare
+    lockstep = run_scenario(sc, policy="balanced", config=config,
+                            verbose=verbose)
+    service = run_scenario_service(sc, config=config, verbose=verbose)
+    return {
+        "lockstep": lockstep,
+        "service": service,
+        "service_compare": service_compare(lockstep, service),
     }

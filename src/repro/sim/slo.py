@@ -456,3 +456,56 @@ def chaos_compare(degraded: SimReport, oracle: SimReport) -> dict:
         "budget_overruns": d["budget_overruns"],
         "moves": {"degraded": d["total_moves"], "oracle": o["total_moves"]},
     }
+
+
+def service_compare(lockstep: SimReport, service: SimReport) -> dict:
+    """Event-driven service vs the lockstep controller, same trajectory.
+
+    Both runs evolved bit-identical worlds (same seeds, same events); the
+    lockstep run evaluated the full trigger policy — and paid a full
+    cooperate pass whenever it fired — every tick, while the service run
+    replayed the trajectory as an event stream and let the drift detector
+    decide.  The scorecard the regression gate pins: placement quality
+    within tolerance of lockstep, >= 30% fewer full passes, zero dropped
+    events.
+    """
+    ls, sv = lockstep.summary(), service.summary()
+    stats = service.extra.get("service", {})
+
+    def ratio(key):
+        if ls[key] > 0:
+            return sv[key] / ls[key]
+        return 1.0 if sv[key] == 0 else None
+
+    # Every lockstep trigger ran the full solver; the service's full passes
+    # are counted directly by the loop.
+    lockstep_full = int(ls["triggers"])
+    service_full = int(stats.get("full_solves", 0))
+    if lockstep_full > 0:
+        reduction = 1.0 - service_full / lockstep_full
+    else:
+        reduction = 1.0 if service_full == 0 else 0.0
+    return {
+        "slo_violation_ticks": {"lockstep": ls["slo_violation_ticks"],
+                                "service": sv["slo_violation_ticks"],
+                                "ratio": ratio("slo_violation_ticks")},
+        "over_ideal_excess_integral": {
+            "lockstep": ls["over_ideal_excess_integral"],
+            "service": sv["over_ideal_excess_integral"],
+            "ratio": ratio("over_ideal_excess_integral")},
+        "mean_d2b": {"lockstep": ls["mean_d2b"], "service": sv["mean_d2b"],
+                     "ratio": (sv["mean_d2b"] / ls["mean_d2b"]
+                               if ls["mean_d2b"] > 0 else 1.0)},
+        "total_moves": {"lockstep": ls["total_moves"],
+                        "service": sv["total_moves"]},
+        "movement_cost": {"lockstep": ls["movement_cost"],
+                          "service": sv["movement_cost"]},
+        "full_passes": {"lockstep": lockstep_full, "service": service_full,
+                        "reduction": round(reduction, 4)},
+        "delta_solves": int(stats.get("delta_solves", 0)),
+        "noop_ticks": int(stats.get("noop_ticks", 0)),
+        "delta_fraction": round(float(stats.get("delta_fraction", 0.0)), 4),
+        "dropped_events": int(stats.get("dropped_events", 0)),
+        "delta_reverts": int(stats.get("delta_reverts", 0)),
+        "events_applied": int(stats.get("events_applied", 0)),
+    }

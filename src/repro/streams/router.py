@@ -135,6 +135,47 @@ class StreamRouter:
             self.assignment = x0
         return decision
 
+    # -- streaming-service frontend ------------------------------------------
+    def arrival_event(self, app: StreamApp, app_id: int, *,
+                      mode: str = "normal", now: int = 0):
+        """Gate one arrival and express it as a ``ServiceEvent``.
+
+        The router is the service's frontend: instead of rebuilding the
+        cluster itself (``admit``), it prices the app through the admission
+        gate and — when admitted — returns the ``AppArrival`` record to
+        submit to the owning ``ServiceLoop``, with the priced slice as the
+        placement hint and the (possibly capped) served demand.  Returns
+        ``(decision, event)``; ``event`` is None when the gate deferred or
+        rejected."""
+        from repro.service.events import AppArrival
+        decision = self.admission.decide(
+            self.cluster.problem, mode=mode, now=now, **admission_row(app))
+        if not decision.admitted:
+            return decision, None
+        event = AppArrival(
+            app_id=int(app_id),
+            demand=np.array([app.flops_demand, app.hbm_demand],
+                            np.float32) * decision.cap,
+            tasks=float(app.num_partitions), slo=int(app.slo),
+            criticality=float(app.criticality), tier=int(decision.tier))
+        return decision, event
+
+    @staticmethod
+    def departure_event(app_id: int):
+        """The ``AppDeparture`` record for an app leaving its slice."""
+        from repro.service.events import AppDeparture
+        return AppDeparture(app_id=int(app_id))
+
+    def sync(self, result) -> np.ndarray:
+        """Adopt an applied ``TickResult`` (or ``ServiceStepResult``) as
+        the live routing table; a no-op for unapplied rounds."""
+        if getattr(result, "result", None) is not None:
+            result = result.result           # unwrap a ServiceStepResult
+        if getattr(result, "applied", False) and result.decision is not None:
+            self.assignment = np.asarray(
+                result.decision.assignment).copy()
+        return self.assignment
+
     def partitions_for_tier(self, tier: int,
                             apps: list[StreamApp]) -> dict[str, int]:
         """Which apps (and their partition counts) this slice consumes."""

@@ -1,0 +1,131 @@
+"""The curated public API surface (ISSUE 9 satellite).
+
+``repro.__all__`` is the stability contract: every name on it must
+resolve, must be the same object as its home-module definition (no stale
+re-export shadowing a refactor), and must cover what the examples and the
+three documented workflows actually import.  Deep modules stay importable
+but are deliberately *not* asserted here — only the curated surface is
+pinned.
+"""
+
+import ast
+import importlib
+import pathlib
+
+import pytest
+
+import repro
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+# Where each public name is defined (the module whose attribute must be
+# identical to the top-level re-export).
+_HOME = {
+    "Sptlb": "repro.core.sptlb",
+    "BalanceDecision": "repro.core.sptlb",
+    "CoopConfig": "repro.core.sptlb",
+    "Problem": "repro.core.problem",
+    "make_problem": "repro.core.problem",
+    "ClusterState": "repro.core.telemetry",
+    "generate_cluster": "repro.core.telemetry",
+    "utilization_fraction": "repro.core.problem",
+    "BalanceController": "repro.core.controller",
+    "ControllerConfig": "repro.core.controller",
+    "FaultToleranceConfig": "repro.core.controller",
+    "Mode": "repro.core.controller",
+    "TickInput": "repro.core.controller",
+    "TickResult": "repro.core.controller",
+    "Advisory": "repro.core.planner",
+    "ServiceLoop": "repro.service.loop",
+    "ServiceConfig": "repro.service.loop",
+    "ServiceStepResult": "repro.service.loop",
+    "ServiceEvent": "repro.service.events",
+    "TelemetryDelta": "repro.service.events",
+    "CapacityUpdate": "repro.service.events",
+    "AppArrival": "repro.service.events",
+    "AppDeparture": "repro.service.events",
+    "AdvisoryBatch": "repro.service.events",
+    "FaultSignal": "repro.service.events",
+    "DriftConfig": "repro.service.drift",
+    "DriftDetector": "repro.service.drift",
+    "FleetShadow": "repro.service.shadow",
+    "Scenario": "repro.sim.scenario",
+    "get_scenario": "repro.sim.scenario",
+    "list_scenarios": "repro.sim.scenario",
+    "run_pair": "repro.sim.harness",
+    "run_scenario": "repro.sim.harness",
+    "run_scenario_service": "repro.sim.harness",
+    "run_service_pair": "repro.sim.harness",
+    "service_compare": "repro.sim.slo",
+    "StreamApp": "repro.streams.router",
+    "StreamRouter": "repro.streams.router",
+    "PodSlice": "repro.streams.router",
+    "build_cluster": "repro.streams.router",
+}
+
+
+def test_all_names_resolve():
+    missing = [n for n in repro.__all__ if not hasattr(repro, n)]
+    assert missing == []
+
+
+def test_all_is_sorted_within_no_dupes():
+    assert len(set(repro.__all__)) == len(repro.__all__)
+
+
+def test_home_map_covers_the_surface():
+    """Every public name (bar the version string) has a pinned home."""
+    assert set(_HOME) == set(repro.__all__) - {"__version__"}
+
+
+@pytest.mark.parametrize("name", sorted(_HOME))
+def test_reexport_is_identical_to_home_definition(name):
+    home = importlib.import_module(_HOME[name])
+    assert getattr(repro, name) is getattr(home, name), (
+        f"repro.{name} is not {_HOME[name]}.{name} — stale re-export?")
+
+
+def test_version_is_a_pep440ish_string():
+    assert isinstance(repro.__version__, str)
+    assert all(part.isdigit() for part in repro.__version__.split("."))
+
+
+def _imported_repro_names(path: pathlib.Path) -> dict[str, set]:
+    """{module: {names}} for every ``repro``-rooted import in the file."""
+    tree = ast.parse(path.read_text())
+    out: dict[str, set] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and node.module and (
+                node.module == "repro" or node.module.startswith("repro.")):
+            out.setdefault(node.module, set()).update(
+                a.name for a in node.names)
+        elif isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "repro" or a.name.startswith("repro."):
+                    out.setdefault(a.name, set())
+    return out
+
+
+@pytest.mark.parametrize(
+    "example", sorted(p.name for p in (REPO / "examples").glob("*.py")))
+def test_examples_import_the_curated_surface(example):
+    """Examples are the API's showroom: every name they pull from the
+    top-level package is on ``__all__``, and any deep import they still
+    need is a name the curated surface does not carry (harness extras
+    like chaos/overload runners), never a shadow path to a public name."""
+    imports = _imported_repro_names(REPO / "examples" / example)
+    public = set(repro.__all__)
+    for mod, names in imports.items():
+        if mod == "repro":
+            assert names <= public, (example, names - public)
+        else:
+            leaked = {n for n in names if n in public}
+            assert not leaked, (
+                f"{example} imports {sorted(leaked)} from {mod}; those are "
+                f"public — import them from repro directly")
+
+
+def test_deep_modules_stay_importable():
+    for mod in ("repro.core", "repro.service", "repro.sim", "repro.shard",
+                "repro.streams"):
+        importlib.import_module(mod)

@@ -1,6 +1,6 @@
 """Invariant fuzzing over random trajectories (ISSUE 7 satellite).
 
-Four fuzz surfaces, >= 200 random trajectories total, each asserting the
+Five fuzz surfaces, >= 200 random trajectories total, each asserting the
 control plane's hard invariants — the properties the regression gate pins
 on two curated scenarios, checked here across a randomized family:
 
@@ -20,7 +20,7 @@ on two curated scenarios, checked here across a randomized family:
     whatever the shard count or demand skew.
 
 ``FUZZ_TRAJECTORIES`` scales every surface proportionally: unset (CI) it
-keeps the per-surface defaults below (232 total); a nightly-style run sets
+keeps the per-surface defaults below (256 total); a nightly-style run sets
 e.g. ``FUZZ_TRAJECTORIES=2000`` for ~9x the coverage.  Values at or below
 the default total are ignored — the knob only ever adds examples.
 
@@ -54,7 +54,9 @@ from repro.streams.admission import AdmissionController, AdmissionState
 
 # Per-surface example counts at the CI default, before the env knob.
 _BASE_SIM, _BASE_ADMISSION, _BASE_PREMASK, _BASE_SHARD = 48, 120, 40, 24
-_BASE_TOTAL = _BASE_SIM + _BASE_ADMISSION + _BASE_PREMASK + _BASE_SHARD
+_BASE_SERVICE = 24
+_BASE_TOTAL = (_BASE_SIM + _BASE_ADMISSION + _BASE_PREMASK + _BASE_SHARD
+               + _BASE_SERVICE)
 _SCALE = max(1.0, int(os.environ.get("FUZZ_TRAJECTORIES", "0")) / _BASE_TOTAL)
 
 # ---------------------------------------------------------------------------
@@ -317,6 +319,100 @@ def test_fuzz_sharded_passes_hold_invariants(seed):
     assert (plan.tier_shard[merged] == plan.app_shard).all(), (seed, num_shards)
 
 
+# ---------------------------------------------------------------------------
+# 5. service event streams (PR 9): ingestion integrity under random bursts
+# ---------------------------------------------------------------------------
+
+N_SERVICE_TRAJECTORIES = int(round(_BASE_SERVICE * _SCALE))
+_SERVICE_CLUSTER = None
+
+
+def _service_cluster():
+    global _SERVICE_CLUSTER
+    if _SERVICE_CLUSTER is None:
+        _SERVICE_CLUSTER = generate_cluster(num_apps=48, seed=11)
+    return _SERVICE_CLUSTER
+
+
+@hypothesis.settings(max_examples=N_SERVICE_TRAJECTORIES, deadline=None)
+@hypothesis.given(st.integers(0, 10_000))
+def test_fuzz_service_event_streams_hold_integrity(seed):
+    """Random event bursts through the ServiceLoop: whatever mix of
+    telemetry, churn, capacity, advisory, and fault events arrives between
+    ticks, no event is dropped and every app's applied-sequence log is
+    exactly the submission order of the events that touched it."""
+    from repro.core.planner import CAPACITY, Advisory
+    from repro.service import (AdvisoryBatch, AppArrival, AppDeparture,
+                               CapacityUpdate, FaultSignal, ServiceLoop,
+                               TelemetryDelta)
+
+    rng = np.random.default_rng(seed ^ 0x5E21CE)
+    cluster = _service_cluster()
+    loop = ServiceLoop(cluster)
+    demand = np.asarray(cluster.problem.demand, np.float64)
+    tasks = np.asarray(cluster.problem.tasks, np.float64)
+    slo = np.asarray(cluster.problem.slo)
+    num_apps = demand.shape[0]
+    num_tiers = np.asarray(cluster.problem.capacity).shape[0]
+    live = set(range(num_apps))
+    expected: dict[int, list[int]] = {}
+
+    def submit(event, touched):
+        seq = loop.submit(event)
+        for n in touched:
+            expected.setdefault(int(n), []).append(seq)
+
+    for tick in range(4):
+        for _ in range(int(rng.integers(0, 4))):
+            roll = rng.random()
+            if roll < 0.5 and live:
+                ids = rng.choice(sorted(live), size=min(len(live), int(rng.integers(1, 8))), replace=False)
+                scale = rng.uniform(0.6, 1.6, size=(ids.size, 1))
+                submit(
+                    TelemetryDelta(
+                        app_ids=tuple(int(n) for n in ids),
+                        demand=demand[ids] * scale,
+                        tasks=tasks[ids] * rng.uniform(0.8, 1.2),
+                        collected_at=tick,
+                    ),
+                    ids,
+                )
+            elif roll < 0.65 and len(live) > 4:
+                gone = int(rng.choice(sorted(live)))
+                live.discard(gone)
+                submit(AppDeparture(app_id=gone), [gone])
+            elif roll < 0.8 and len(live) < num_apps:
+                back = int(rng.choice(sorted(set(range(num_apps)) - live)))
+                live.add(back)
+                submit(
+                    AppArrival(
+                        app_id=back, demand=demand[back] * rng.uniform(0.5, 1.5),
+                        tasks=float(tasks[back]), slo=int(slo[back]),
+                        tier=int(rng.integers(0, num_tiers)),
+                    ),
+                    [back],
+                )
+            elif roll < 0.9:
+                submit(
+                    AdvisoryBatch(advisories=(
+                        Advisory(at=tick + int(rng.integers(2, 9)),
+                                 kind=CAPACITY,
+                                 scale=float(rng.uniform(0.7, 1.0))),)),
+                    [],
+                )
+            else:
+                submit(FaultSignal(source="fuzz", until=tick + 1), [])
+        loop.step(tick)
+
+    assert loop.dropped_events == 0, seed
+    assert loop.applied_events == loop.submitted, seed
+    # Per-app integrity: the log is the submission order, verbatim — no
+    # drop, no duplicate, no reorder; strictly increasing by construction.
+    assert loop.shadow.applied_seq == expected, seed
+    for seqs in loop.shadow.applied_seq.values():
+        assert all(a < b for a, b in zip(seqs, seqs[1:])), seed
+
+
 def test_fuzz_counts_cover_the_contract():
     """The satellite's floor: at least 200 random trajectories total (and
     the env knob only ever scales the coverage up)."""
@@ -325,6 +421,7 @@ def test_fuzz_counts_cover_the_contract():
         + N_ADMISSION_TRAJECTORIES
         + N_PREMASK_TRAJECTORIES
         + N_SHARD_TRAJECTORIES
+        + N_SERVICE_TRAJECTORIES
     )
     assert total >= 200
     assert total >= _BASE_TOTAL

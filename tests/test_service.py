@@ -1,0 +1,443 @@
+"""Streaming control service: events, drift, delta solves, API shims.
+
+Covers the ISSUE 9 tentpole and satellites:
+
+* delta-solve parity: an all-dirty delta solve is *bit-identical* to the
+  full sharded solve (property-tested over seeds and shard counts), and a
+  strict-subset delta never worsens the global objective (the never-worse
+  revert guard);
+* the drift decision table (``service.drift``) row by row;
+* shadow/event bookkeeping: dirty bits, membership, the applied-sequence
+  integrity log;
+* the service loop end-to-end (noop/delta/full behaviour, asyncio serve);
+* the stale-advisory fix: deadlines that pass while the controller is held
+  are expired explicitly, audited, and trigger one catch-up rebalance;
+* the API redesign: ``step(TickInput) -> TickResult`` is golden-parity
+  with the deprecated ``tick`` shim, and the old entry points warn.
+"""
+
+import asyncio
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (BalanceController, ControllerConfig, CoopConfig,
+                        TickInput, generate_cluster)
+from repro.core.goals import objective
+from repro.core.planner import CAPACITY, Advisory
+from repro.service import (DELTA, FULL, NOOP, AdvisoryBatch, AppArrival,
+                           AppDeparture, CapacityUpdate, DriftConfig,
+                           DriftDetector, FaultSignal, FleetShadow,
+                           ServiceConfig, ServiceLoop, TelemetryDelta)
+from repro.shard import (FleetConfig, ShardSolveConfig, merge_assignment,
+                         partition_problem, plan_shards, solve_fleet,
+                         solve_shards)
+
+
+def _cluster(num_apps=64, seed=0):
+    return generate_cluster(num_apps=num_apps, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# delta-solve parity (the acceptance gate's hard property)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed,num_shards", [(0, 2), (1, 3), (2, 4)])
+def test_all_dirty_delta_bit_identical_to_full(seed, num_shards):
+    cluster = _cluster(seed=seed)
+    plan = plan_shards(cluster, num_shards)
+    sharded = partition_problem(cluster.problem, plan)
+    cfg = ShardSolveConfig(max_iters=48)
+    full = solve_shards(sharded, cfg)
+    for dirty in (np.ones(sharded.num_shards, bool),
+                  np.arange(sharded.num_shards)):
+        delta = solve_shards(sharded, cfg, dirty=dirty)
+        # Bit-identical, not approximately equal: the all-dirty gather is
+        # the identity, so the same jit executable sees the same inputs.
+        assert np.array_equal(full.x, delta.x), (seed, num_shards)
+        assert np.array_equal(full.iterations, delta.iterations)
+        assert np.array_equal(full.objective, delta.objective)
+        assert delta.solved.all()
+
+
+def test_empty_dirty_set_returns_incumbents():
+    cluster = _cluster()
+    plan = plan_shards(cluster, 3)
+    sharded = partition_problem(cluster.problem, plan)
+    res = solve_shards(sharded, ShardSolveConfig(max_iters=16),
+                       dirty=np.zeros(3, bool))
+    assert np.array_equal(res.x, np.asarray(sharded.problems.assignment0))
+    assert not res.solved.any()
+    assert (res.iterations == 0).all()
+
+
+def test_subset_delta_never_worse_than_incumbent():
+    cluster = _cluster(seed=5)
+    # Skew demand so a rebalance is actually worth something.
+    p = cluster.problem
+    rng = np.random.default_rng(5)
+    skew = rng.uniform(0.6, 1.7, size=(p.num_apps, 1)).astype(np.float32)
+    cluster = dataclasses.replace(
+        cluster, problem=dataclasses.replace(
+            p, demand=p.demand * jnp.asarray(skew)))
+    obj0 = float(objective(cluster.problem, cluster.problem.assignment0))
+    for dirty in ([0], [1, 2], [0, 3]):
+        fd = solve_fleet(cluster, FleetConfig(num_shards=4),
+                         dirty_shards=dirty)
+        obj1 = float(objective(cluster.problem, jnp.asarray(fd.assignment)))
+        # The never-worse guard: a scoped re-solve either improves the
+        # global objective or reverts to the incumbent (audited).
+        assert obj1 <= obj0 + 1e-6, dirty
+        assert fd.timings["solved_shards"] == len(dirty)
+        assert "delta_reverted" in fd.timings
+
+
+def test_unsolved_shards_keep_incumbent_mapping():
+    cluster = _cluster(seed=3)
+    plan = plan_shards(cluster, 4)
+    sharded = partition_problem(cluster.problem, plan)
+    res = solve_shards(sharded, ShardSolveConfig(max_iters=32), dirty=[1])
+    merged = merge_assignment(cluster.problem, sharded, res.x)
+    x0 = np.asarray(cluster.problem.assignment0)
+    untouched = plan.app_shard != 1
+    assert np.array_equal(merged[untouched], x0[untouched])
+    assert list(np.where(res.solved)[0]) == [1]
+
+
+# ---------------------------------------------------------------------------
+# drift decision table
+# ---------------------------------------------------------------------------
+
+def _decide(det, *, loads=None, now=0, capacity_dirty=False,
+            outlook_active=False, stranded=0, dirty_shards=(),
+            pending_membership=False, d2b=0.0):
+    return det.decide(
+        loads=np.asarray([0.5, 0.5, 0.5] if loads is None else loads),
+        now=now, capacity_dirty=capacity_dirty,
+        outlook_active=outlook_active, stranded=stranded,
+        dirty_shards=dirty_shards, pending_membership=pending_membership,
+        d2b=d2b)
+
+
+def test_drift_table_full_triggers():
+    det = DriftDetector()
+    assert _decide(det, capacity_dirty=True).action == FULL
+    assert _decide(det, outlook_active=True).action == FULL
+    assert _decide(det, stranded=1).action == FULL
+    assert _decide(det, loads=[0.4, 1.2, 0.5]).action == FULL  # overload
+    assert _decide(det, d2b=0.3).action == FULL  # standing imbalance
+
+
+def test_drift_table_quiescent_and_delta():
+    det = DriftDetector(DriftConfig(d2b_delta=0.08))
+    first = _decide(det)
+    assert first.action == NOOP
+    # Dirty apps alone are not enough below every threshold...
+    calm = _decide(det, dirty_shards=(1,))
+    assert calm.action == NOOP
+    # ...but membership churn on a dirty shard is.
+    move = _decide(det, dirty_shards=(1,), pending_membership=True)
+    assert move.action == DELTA
+    assert move.dirty_shards == (1,)
+    # Mild standing imbalance above d2b_delta scopes to the dirty shards.
+    mild = _decide(det, d2b=0.1, dirty_shards=(2,))
+    assert mild.action == DELTA
+
+
+def test_drift_solver_floor_masks_unfixable_imbalance():
+    det = DriftDetector()
+    # The last applied solve could only reach d2b 0.3: re-firing on the
+    # same standing imbalance would burn a full pass every tick.
+    det.note_solve(np.asarray([0.5, 0.5, 0.5]), full=True, d2b=0.3)
+    assert _decide(det, d2b=0.3).action == NOOP
+    # Real further drift above floor + margin still fires.
+    assert _decide(det, d2b=0.4).action == FULL
+    # The floor decays: after enough quiet ticks the detector re-probes
+    # whether the solver can now do better.
+    for _ in range(200):
+        _decide(det, d2b=0.0)
+    assert _decide(det, d2b=0.3).action == FULL
+
+
+def test_drift_fault_holds_delta_not_full():
+    det = DriftDetector()
+    _decide(det)  # seed the EWMA
+    det.note_fault(until=10)
+    held = _decide(det, now=5, dirty_shards=(0,), pending_membership=True)
+    assert held.action == NOOP and "fault" in held.reason
+    # FULL triggers still fire on suspect data (feasibility beats caution).
+    assert _decide(det, now=5, stranded=2).action == FULL
+    # After the fault window the delta resumes.
+    after = _decide(det, now=11, dirty_shards=(0,), pending_membership=True)
+    assert after.action == DELTA
+
+
+def test_drift_ewma_rebases_at_solve():
+    det = DriftDetector(DriftConfig(ewma_alpha=1.0, full_threshold=0.5,
+                                    overload_full=10.0))
+    _decide(det, loads=[0.5, 0.5, 0.5])
+    drifted = _decide(det, loads=[0.5, 0.66, 0.5], dirty_shards=(1,),
+                      d2b=0.12)
+    assert drifted.action == DELTA and drifted.divergence > 0.1
+    det.note_solve(np.asarray([0.5, 0.66, 0.5]), full=True)
+    rebased = _decide(det, loads=[0.5, 0.66, 0.5])
+    assert rebased.action == NOOP and rebased.divergence == 0.0
+
+
+def test_drift_full_interval_safety_valve():
+    det = DriftDetector(DriftConfig(full_interval=3))
+    assert [_decide(det).action for _ in range(3)] == [NOOP, NOOP, FULL]
+
+
+# ---------------------------------------------------------------------------
+# fleet shadow
+# ---------------------------------------------------------------------------
+
+def test_shadow_telemetry_dirty_bits_are_relative():
+    cluster = _cluster()
+    shadow = FleetShadow(cluster, dirty_rel=0.05)
+    d = np.asarray(cluster.problem.demand)
+    tasks = np.asarray(cluster.problem.tasks)
+    # App 0 drifts 1% (clean), app 1 drifts 20% (dirty).
+    ev = TelemetryDelta(app_ids=(0, 1),
+                        demand=np.stack([d[0] * 1.01, d[1] * 1.2]),
+                        tasks=tasks[:2], collected_at=7)
+    shadow.apply(ev, seq=0)
+    assert shadow.dirty_apps == {1}
+    assert shadow.collected_at == 7
+    shadow.clean([1])
+    assert shadow.dirty_apps == set()
+    # Re-based reference: the same reading again is no longer drift.
+    shadow.apply(dataclasses.replace(ev, collected_at=8), seq=1)
+    assert shadow.dirty_apps == set()
+
+
+def test_shadow_membership_and_capacity():
+    cluster = _cluster()
+    shadow = FleetShadow(cluster)
+    app = 0
+    shadow.apply(AppDeparture(app_id=app), seq=0)
+    assert not shadow._valid[app]
+    shadow.apply(AppArrival(app_id=app, demand=[0.01, 0.01], tasks=2.0,
+                            slo=1, tier=3), seq=1)
+    assert shadow._valid[app] and shadow._x0[app] == 3
+    assert not shadow.capacity_dirty
+    shadow.apply(CapacityUpdate(
+        capacity=np.asarray(cluster.problem.capacity) * 0.9), seq=2)
+    assert shadow.capacity_dirty
+    assert shadow.applied_seq[app] == [0, 1]
+
+
+def test_shadow_view_roundtrip():
+    cluster = _cluster()
+    shadow = FleetShadow(cluster)
+    view = shadow.view(now=42)
+    assert view.collected_at == 42
+    assert np.array_equal(np.asarray(view.problem.assignment0),
+                          np.asarray(cluster.problem.assignment0))
+    p, q = cluster.problem, view.problem
+    live = np.asarray(p.valid)
+    assert np.allclose(np.asarray(q.demand)[live], np.asarray(p.demand)[live])
+
+
+# ---------------------------------------------------------------------------
+# service loop
+# ---------------------------------------------------------------------------
+
+def test_loop_quiescent_ticks_are_noops():
+    loop = ServiceLoop(_cluster())
+    # The generated seed state is imbalanced on purpose: the first tick is
+    # a full pass (standing spread), after which the fleet is quiescent.
+    first = loop.step(0)
+    assert first.action == FULL and first.applied
+    rounds = loop.controller.round
+    for t in range(1, 5):
+        out = loop.step(t)
+        assert out.action == NOOP, out.reason
+        assert out.result is None
+    s = loop.stats()
+    assert s["noop_ticks"] == 4 and s["dropped_events"] == 0
+    assert loop.controller.round == rounds  # no further solve priced
+
+
+def test_loop_delta_then_full_and_integrity():
+    cluster = _cluster()
+    loop = ServiceLoop(cluster, config=ServiceConfig(num_shards=3))
+    d = np.asarray(cluster.problem.demand)
+    live = np.flatnonzero(np.asarray(cluster.problem.valid))
+    # Localized drift: a handful of apps double their demand.
+    ids = live[:5]
+    loop.submit(TelemetryDelta(app_ids=tuple(int(i) for i in ids),
+                               demand=d[ids] * 2.0,
+                               tasks=np.asarray(cluster.problem.tasks)[ids],
+                               collected_at=1))
+    out = loop.step(1)
+    assert out.action in (DELTA, FULL)
+    assert out.events_drained == 1
+    if out.action == DELTA:
+        assert out.result is not None and out.result.delta
+        assert 0 < len(out.dirty_shards) < loop.num_shards
+    # Structural change forces a full pass through the global engine.
+    loop.submit(CapacityUpdate(
+        capacity=np.asarray(cluster.problem.capacity) * 0.85))
+    out2 = loop.step(2)
+    assert out2.action == FULL
+    assert out2.result is not None and not out2.result.delta
+    assert loop.dropped_events == 0
+    assert loop.stats()["events_applied"] == loop.submitted
+
+
+def test_loop_advisories_and_fault_route_to_controller():
+    cluster = _cluster()
+    loop = ServiceLoop(cluster)
+    loop.submit(AdvisoryBatch(advisories=(
+        Advisory(at=6, kind=CAPACITY, tier=0, scale=0.5),)))
+    loop.submit(FaultSignal(source="telemetry", until=3, severity=0.4))
+    out = loop.step(0)
+    assert loop.controller.planner is not None
+    assert loop.drift.fault_until == 3
+    # The advisory is inside the horizon: the outlook forces a full pass.
+    assert out.action == FULL
+
+
+def test_loop_serve_drains_asyncio_queue():
+    cluster = _cluster()
+    loop = ServiceLoop(cluster)
+    d = np.asarray(cluster.problem.demand)
+    live = np.flatnonzero(np.asarray(cluster.problem.valid))
+
+    async def drive():
+        q = asyncio.Queue()
+        for k in range(3):
+            ids = live[k::8][:4]
+            await q.put(TelemetryDelta(
+                app_ids=tuple(int(i) for i in ids), demand=d[ids] * 1.01,
+                tasks=np.asarray(cluster.problem.tasks)[ids],
+                collected_at=k))
+        await q.put(None)
+        return await loop.serve(q)
+
+    steps = asyncio.run(drive())
+    assert steps >= 1
+    assert loop.applied_events == 3 and loop.dropped_events == 0
+
+
+# ---------------------------------------------------------------------------
+# stale-advisory fix
+# ---------------------------------------------------------------------------
+
+def test_stale_advisory_expires_and_forces_catchup():
+    cluster = _cluster()
+    # Thresholds high enough that nothing triggers organically: the only
+    # way this controller rebalances is the catch-up path under test.
+    ctl = BalanceController(cluster, ControllerConfig(
+        timeout_s=4, trigger_d2b=9.0, trigger_over_ideal=9.0,
+        trigger_slo_apps=10**6))
+    ctl.ingest(AdvisoryBatch(advisories=(
+        Advisory(at=2, kind=CAPACITY, tier=0, scale=0.5),)))
+    # The controller never gets to act before the deadline passes (no tick
+    # runs): at now=3 the advisory is stale.  Expiry must be explicit and
+    # the unacted deadline must force one catch-up rebalance.
+    res = ctl.step(TickInput(now=3))
+    assert len(res.expired_advisories) == 1
+    assert res.expired_advisories[0]["acted"] is False
+    assert res.triggered and "expired-advisory catch-up" in res.reason
+    audit = ctl.audit()
+    assert audit["advisories_expired_unacted"] == 1
+    assert audit["advisory_expiries"][0]["at"] == 2
+    # The catch-up fires once, not forever.
+    res2 = ctl.step(TickInput(now=4))
+    assert "expired-advisory catch-up" not in res2.reason
+
+
+def test_acted_advisory_expires_without_catchup():
+    cluster = _cluster()
+    ctl = BalanceController(cluster, ControllerConfig(
+        timeout_s=4, trigger_d2b=0.0, cooldown_rounds=0))
+    ctl.ingest(AdvisoryBatch(advisories=(
+        Advisory(at=8, kind=CAPACITY, tier=0, scale=0.5),)))
+    # trigger_d2b=0 fires a rebalance at now=1 with the advisory inside
+    # the planning horizon -> acted.
+    res = ctl.step(TickInput(now=1))
+    assert res.triggered
+    res2 = ctl.step(TickInput(now=9))
+    expired = res2.expired_advisories
+    assert len(expired) == 1 and expired[0]["acted"] is True
+    assert "expired-advisory catch-up" not in res2.reason
+
+
+# ---------------------------------------------------------------------------
+# API redesign: step/TickInput vs the deprecated shims
+# ---------------------------------------------------------------------------
+
+def test_tick_shim_golden_parity_with_step():
+    cluster = _cluster(seed=9)
+    a = BalanceController(cluster, ControllerConfig(timeout_s=4))
+    b = BalanceController(cluster, ControllerConfig(timeout_s=4))
+    rng = np.random.default_rng(9)
+    world = cluster
+    for t in range(4):
+        skew = rng.uniform(0.9, 1.3,
+                           size=(world.problem.num_apps, 1)).astype(np.float32)
+        world = dataclasses.replace(
+            world, problem=dataclasses.replace(
+                world.problem,
+                demand=world.problem.demand * jnp.asarray(skew)))
+        with pytest.warns(DeprecationWarning):
+            old = a.tick(world, now=t, collected_at=t)
+        new = b.step(TickInput(cluster=world, now=t, collected_at=t))
+        assert old.triggered == new.triggered
+        assert old.applied == new.applied
+        assert old.reason == new.reason
+        assert np.isclose(old.d2b_before, new.d2b_before)
+        assert np.array_equal(np.asarray(a.cluster.problem.assignment0),
+                              np.asarray(b.cluster.problem.assignment0))
+
+
+def test_tickresult_delegates_to_event():
+    ctl = BalanceController(_cluster(), ControllerConfig(timeout_s=4))
+    res = ctl.step(TickInput(now=0))
+    assert res.event is not None
+    assert res.applied == res.event.applied
+    assert res.d2b_before == res.event.d2b_before
+    assert res.mode == res.event.mode
+    with pytest.raises(AttributeError):
+        res.not_a_field
+
+
+def test_legacy_entry_points_warn():
+    cluster = _cluster()
+    ctl = BalanceController(cluster, ControllerConfig(timeout_s=4))
+    with pytest.warns(DeprecationWarning):
+        ctl.set_advisories(())
+    with pytest.warns(DeprecationWarning):
+        ctl.observe(cluster)
+    with pytest.warns(DeprecationWarning):
+        ctl.tick(cluster, now=0)
+
+
+def test_ingest_membership_mutates_standalone_cluster():
+    cluster = _cluster()
+    ctl = BalanceController(cluster, ControllerConfig(timeout_s=4))
+    app = 0
+    ctl.ingest(AppDeparture(app_id=app))
+    assert not bool(ctl.cluster.problem.valid[app])
+    ctl.ingest(AppArrival(app_id=app, demand=[0.02, 0.02], tasks=3.0,
+                          slo=0, tier=1))
+    assert bool(ctl.cluster.problem.valid[app])
+    assert int(ctl.cluster.problem.assignment0[app]) == 1
+    with pytest.raises(ValueError):
+        ctl.ingest(object())
+
+
+def test_ingest_fault_degrades_composite_score():
+    cluster = _cluster()
+    ctl = BalanceController(cluster, ControllerConfig(timeout_s=4))
+    base = ctl._composite_score()
+    ctl.now = 0
+    ctl.ingest(FaultSignal(source="upstream", until=5, severity=0.5))
+    assert ctl._composite_score() == pytest.approx(base * 0.5)
+    ctl.now = 6  # expired: pruned on the next score
+    assert ctl._composite_score() == pytest.approx(base)

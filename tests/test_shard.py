@@ -169,7 +169,11 @@ def test_solve_fleet_end_to_end(cluster):
         "merge_s",
         "coordinator_s",
         "total_s",
+        "solved_shards",
+        "delta_reverted",
     }
+    assert fd.timings["solved_shards"] == 3
+    assert fd.timings["delta_reverted"] is False
 
 
 # -- coordinator -------------------------------------------------------------
