@@ -205,6 +205,43 @@ CHECKS = (
         0.05,
         0.10,
     ),
+    # PR 10 measured-latency family: the latency-SLO level's acceptance.
+    # Budget compliance is absolute — one measured-stack move committed
+    # into a tier over its live p99 budget is a bug, not drift — the
+    # measurement plane must actually calibrate (an inert-fallback run
+    # proves nothing), and the measured stack must keep beating the static
+    # 36 ms constant on the p99-aware placement integral (named checks so
+    # a baseline regeneration that dropped a network scenario — which the
+    # wildcards would silently forgive — fails the gate).
+    Check(SIM_SMOKE, ("*", "netlat", "budget_exceeding_moves", "measured"), "not_above", 0),
+    Check(SIM_SMOKE, ("*", "netlat", "calibrated"), "stays_true"),
+    Check(
+        SIM_SMOKE,
+        ("network_degraded_slow_links", "netlat", "network_p99_integral", "ratio"),
+        "not_above",
+        0.005,
+        0.005,
+    ),
+    Check(
+        SIM_SMOKE,
+        ("network_degraded_asymmetric", "netlat", "network_p99_integral", "ratio"),
+        "not_above",
+        0.005,
+        0.005,
+    ),
+    Check(
+        SIM_SMOKE,
+        ("network_degraded_jitter", "netlat", "network_p99_integral", "ratio"),
+        "not_above",
+        0.005,
+        0.005,
+    ),
+    # PR 10 multi-producer ingestion: event integrity under submit-side
+    # contention is absolute; sustained ingest rate is cross-machine, so
+    # order-of-magnitude only.
+    Check(SIM_SMOKE, ("service_ingest", "dropped_events"), "not_above", 0),
+    Check(SIM_SMOKE, ("service_ingest", "per_app_ordered"), "stays_true"),
+    Check(SIM_SMOKE, ("service_ingest", "ingest_events_per_s"), "not_below", 0, 3.0),
     # --- solver smoke: counts/objectives tight, wall-clock generous ------
     Check(SOLVER_SMOKE, ("local_search", "*", "batch16", "moves_per_s"), "not_below", 0, 3.0),
     Check(SOLVER_SMOKE, ("local_search", "*", "batch1", "moves_per_s"), "not_below", 0, 3.0),

@@ -23,6 +23,14 @@ utility-armed pair via ``run_overload_pair``: their records carry the
 counters, the zero-infeasible-admissions invariant) — see
 docs/overload_and_admission.md.
 
+Network scenarios (``Scenario.netlat``) run the static-36ms vs
+measured-budget pair via ``run_netlat_pair``: their records carry the
+``netlat`` scorecard (p99-aware placement-latency ratio < 1, zero
+budget-exceeding committed moves under live measured budgets) — see
+docs/latency_slo.md.  ``service_ingest`` additionally drives one
+``ServiceLoop`` from N concurrent producer threads (the thread-safe
+``submit`` path) and records sustained events/s and re-solve latency.
+
 Emits CSV rows like every other benchmark AND writes ``BENCH_sim.json`` at
 the repo root so the trajectory scorecard is tracked PR-over-PR
 (regenerate with ``PYTHONPATH=src python -m benchmarks.sim_scenarios``;
@@ -37,9 +45,123 @@ import time
 
 from benchmarks.common import comment, emit
 from repro.sim import (get_scenario, list_scenarios, run_chaos_pair,
-                       run_overload_pair, run_pair)
+                       run_netlat_pair, run_overload_pair, run_pair)
 
 RESULTS: dict = {}
+
+
+def bench_netlat_scenario(sc, num_apps: int, ticks: int):
+    """Network scenarios run the static-budget/measured-budget pair: the
+    record keys the gate pins are the ``netlat`` scorecard (the measured
+    stack's p99-aware placement-latency integral at ratio <= 1 vs the
+    static 36 ms stack, zero committed moves whose destination exceeds a
+    live measured p99 budget, calibration achieved)."""
+    t0 = time.perf_counter()
+    out = run_netlat_pair(sc)
+    wall = time.perf_counter() - t0
+    n = out["netlat"]
+    rec = {
+        "num_apps": num_apps,
+        "pool": sc.max_apps,
+        "ticks": ticks,
+        "wall_s": wall,
+        "static": out["static"].summary(),
+        "measured": out["measured"].summary(),
+        "netlat": n,
+        "series": {"static": out["static"].series(),
+                   "measured": out["measured"].series()},
+    }
+    p99 = n["network_p99_integral"]
+    bex = n["budget_exceeding_moves"]
+    emit(f"sim_scenarios/{sc.name}/N{num_apps}x{ticks}", wall * 1e6,
+         f"p99_static={p99['static']:.1f};p99_measured={p99['measured']:.1f};"
+         f"p99_ratio={p99['ratio']:.4f};"
+         f"bex_static={bex['static']};bex_measured={bex['measured']};"
+         f"moves_static={n['moves']['static']};"
+         f"moves_measured={n['moves']['measured']};"
+         f"calibrated={n['calibrated']};relax={n['relax_factor']:.3f};"
+         f"quarantined={n['quarantined_samples']}")
+    comment(f"{sc.name} (netlat): p99 integral {p99['static']:.0f} -> "
+            f"{p99['measured']:.0f} ({p99['ratio']:.3f}x), budget-exceeding "
+            f"moves {bex['static']} -> {bex['measured']}, moves "
+            f"{n['moves']['static']} -> {n['moves']['measured']}")
+    RESULTS[sc.name] = rec
+    return rec
+
+
+def bench_service_ingest(num_apps: int, ticks: int, producers: int = 4):
+    """Multi-producer ingestion: ``producers`` concurrent threads submit
+    telemetry deltas for disjoint app partitions while the main thread
+    steps the loop — the thread-safe ``submit`` path under contention.
+    The gate pins zero dropped events and per-app sequence monotonicity;
+    the operational numbers are sustained events/s and re-solve p50/p99."""
+    import threading
+
+    import numpy as np
+
+    from repro.core import generate_cluster
+    from repro.core.controller import BalanceController, ControllerConfig
+    from repro.service import ServiceLoop, TelemetryDelta
+
+    cluster = generate_cluster(num_apps=num_apps, seed=7)
+    ctl = BalanceController(cluster, ControllerConfig(timeout_s=30))
+    loop = ServiceLoop(controller=ctl)
+    dem0 = np.asarray(cluster.problem.demand, np.float32)
+    tsk0 = np.asarray(cluster.problem.tasks, np.float32)
+    live = np.where(np.asarray(cluster.problem.valid))[0]
+    chunks = [c for c in np.array_split(live, producers) if c.size]
+
+    def produce(pid: int, ids: np.ndarray) -> None:
+        rng = np.random.default_rng(100 + pid)
+        for r in range(ticks):
+            skew = rng.uniform(0.9, 1.15, size=(ids.size, 1)).astype(
+                np.float32)
+            loop.submit(TelemetryDelta(
+                app_ids=tuple(int(n) for n in ids),
+                demand=dem0[ids] * skew, tasks=tsk0[ids].copy(),
+                collected_at=r))
+
+    t0 = time.perf_counter()
+    threads = [threading.Thread(target=produce, args=(i, c))
+               for i, c in enumerate(chunks)]
+    for t in threads:
+        t.start()
+    step = 0
+    while any(t.is_alive() for t in threads) or loop._queue:
+        loop.step(step)
+        step += 1
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    stats = loop.stats()
+    ordered = all(seqs == sorted(seqs)
+                  for seqs in loop.shadow.applied_seq.values())
+    rec = {
+        "num_apps": num_apps,
+        "producers": len(chunks),
+        "events_per_producer": ticks,
+        "wall_s": wall,
+        "events_submitted": stats["events_submitted"],
+        "dropped_events": stats["dropped_events"],
+        "per_app_ordered": ordered,
+        "ingest_events_per_s": (stats["events_applied"] / wall
+                                if wall > 0 else 0.0),
+        "stats": stats,
+    }
+    emit(f"sim_scenarios/service_ingest/N{num_apps}x{ticks}", wall * 1e6,
+         f"producers={len(chunks)};"
+         f"events={stats['events_submitted']};"
+         f"dropped={stats['dropped_events']};ordered={ordered};"
+         f"ingest_events_per_s={rec['ingest_events_per_s']:.0f};"
+         f"resolve_p50_ms={stats['resolve_p50_ms']:.1f};"
+         f"resolve_p99_ms={stats['resolve_p99_ms']:.1f}")
+    comment(f"service_ingest: {len(chunks)} producers x {ticks} deltas, "
+            f"{rec['ingest_events_per_s']:.0f} events/s ingested, "
+            f"{stats['dropped_events']} dropped, re-solve p50 "
+            f"{stats['resolve_p50_ms']:.1f} ms / p99 "
+            f"{stats['resolve_p99_ms']:.1f} ms")
+    RESULTS["service_ingest"] = rec
+    return rec
 
 
 def bench_overload_scenario(sc, num_apps: int, ticks: int):
@@ -125,6 +247,8 @@ def bench_chaos_scenario(sc, num_apps: int, ticks: int):
 
 def bench_scenario(name: str, num_apps: int, ticks: int, seed: int = 0):
     sc = get_scenario(name, num_apps=num_apps, ticks=ticks, seed=seed)
+    if sc.netlat:
+        return bench_netlat_scenario(sc, num_apps, ticks)
     if sc.overload:
         # Overload routing wins over chaos: overload_capacity_loss composes
         # both, and its acceptance story is the utility scorecard (the
@@ -226,6 +350,7 @@ def run(smoke: bool = False):
     for name in list_scenarios():
         bench_scenario(name, num_apps, ticks)
     bench_service_loop(num_apps, ticks)
+    bench_service_ingest(num_apps, ticks)
 
     # Smoke numbers must not clobber the tracked fleet-scale record.
     name = "BENCH_sim_smoke.json" if smoke else "BENCH_sim.json"

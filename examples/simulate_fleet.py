@@ -101,6 +101,19 @@ runbook interpretation:
 
   PYTHONPATH=src python examples/simulate_fleet.py --overload --verbose
 
+Network
+-------
+``--netlat`` runs the network_degraded family (slow links, asymmetric
+detours, jitter storms — or one of them via ``--scenario``) through
+``sim.run_netlat_pair``: the *static* run vets placements against the
+hard-coded 36 ms constant, the *measured* twin binds the latency-SLO
+level (per-pair budgets calibrated from streaming P² sketches, vetted
+against live p99 estimates), and the scorecard reports the placement-p99
+integral ratio (must be < 1), budget-exceeding moves (measured must be
+0), and the calibration/quarantine counters.  See docs/latency_slo.md:
+
+  PYTHONPATH=src python examples/simulate_fleet.py --netlat --verbose
+
 Metrics (see ``repro/sim/slo.py``): ``slo_violation_ticks`` integrates
 app-ticks on SLO-ineligible tiers plus tier-ticks over the ideal line;
 ``over_ideal_excess_integral`` weights the latter by severity;
@@ -112,9 +125,40 @@ mode's bounded latency degradation.  ``BENCH_sim.json`` is regenerated by
 """
 import argparse
 
-from repro import (ControllerConfig, CoopConfig, get_scenario,
-                   list_scenarios, run_pair, run_scenario, run_service_pair)
+from repro import (ControllerConfig, CoopConfig, get_scenario, list_scenarios,
+                   run_netlat_pair, run_pair, run_scenario, run_service_pair)
 from repro.sim import run_chaos_pair, run_overload_pair
+
+
+def run_netlat(names, args):
+    """--netlat: measured-vs-static budget scorecard per network scenario."""
+    if args.scenario == "all":
+        names = [n for n in sorted(list_scenarios())
+                 if get_scenario(n, num_apps=8, ticks=8, seed=0).netlat]
+    for name in names:
+        sc = get_scenario(name, num_apps=args.apps, ticks=args.ticks,
+                          seed=args.seed)
+        if not sc.netlat:
+            print(f"{name}: not a network scenario (no link weather for the "
+                  f"measurement plane to see) — skipping")
+            continue
+        print(f"-- {name}: {sc.description}")
+        out = run_netlat_pair(sc, verbose=args.verbose)
+        c = out["netlat"]
+        p99 = c["network_p99_integral"]
+        print(f"   p99 integral       static {p99['static']:.1f} vs "
+              f"measured {p99['measured']:.1f} (ratio {p99['ratio']:.4f})")
+        peak = c["peak_network_p99_ms"]
+        print(f"   peak p99           static {peak['static']:.1f} ms vs "
+              f"measured {peak['measured']:.1f} ms")
+        bex = c["budget_exceeding_moves"]
+        print(f"   budget-exceeding   static {bex['static']} vs "
+              f"measured {bex['measured']} (measured must be 0)")
+        print(f"   moves              static {c['moves']['static']} vs "
+              f"measured {c['moves']['measured']}")
+        print(f"   calibrated         {c['calibrated']} "
+              f"(relax {c['relax_factor']}, "
+              f"{c['quarantined_samples']} quarantined samples)")
 
 
 def run_service(names, args):
@@ -257,6 +301,10 @@ def main():
                     help="run the overload family through run_overload_pair "
                          "and print the utility-vs-binary scorecard (see "
                          "docs/overload_and_admission.md)")
+    ap.add_argument("--netlat", action="store_true",
+                    help="run the network_degraded family through "
+                         "run_netlat_pair and print the measured-vs-static "
+                         "budget scorecard (see docs/latency_slo.md)")
     ap.add_argument("--service", action="store_true",
                     help="replay scenarios as event streams through the "
                          "ServiceLoop (drift-triggered delta solves) and "
@@ -273,6 +321,9 @@ def main():
         return
     if args.overload:
         run_overload(names, args)
+        return
+    if args.netlat:
+        run_netlat(names, args)
         return
     if args.service:
         run_service(names, args)

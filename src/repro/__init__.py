@@ -23,10 +23,11 @@ from repro.core import (Advisory, BalanceController, BalanceDecision,
                         make_problem, utilization_fraction)
 from repro.service import (AdvisoryBatch, AppArrival, AppDeparture,
                            CapacityUpdate, DriftConfig, DriftDetector,
-                           FaultSignal, FleetShadow, ServiceConfig,
-                           ServiceEvent, ServiceLoop, ServiceStepResult,
-                           TelemetryDelta)
-from repro.sim import (Scenario, get_scenario, list_scenarios, run_pair,
+                           FaultSignal, FleetShadow, LatencyDelta,
+                           ServiceConfig, ServiceEvent, ServiceLoop,
+                           ServiceStepResult, TelemetryDelta)
+from repro.sim import (Scenario, get_scenario, list_scenarios,
+                       netlat_compare, run_netlat_pair, run_pair,
                        run_scenario, run_scenario_service, run_service_pair,
                        service_compare)
 from repro.streams import PodSlice, StreamApp, StreamRouter, build_cluster
@@ -42,13 +43,13 @@ __all__ = [
     "Mode", "Advisory", "TickInput", "TickResult",
     # streaming service
     "ServiceLoop", "ServiceConfig", "ServiceStepResult", "ServiceEvent",
-    "TelemetryDelta", "CapacityUpdate", "AppArrival", "AppDeparture",
-    "AdvisoryBatch", "FaultSignal", "DriftConfig", "DriftDetector",
-    "FleetShadow",
+    "TelemetryDelta", "CapacityUpdate", "LatencyDelta", "AppArrival",
+    "AppDeparture", "AdvisoryBatch", "FaultSignal", "DriftConfig",
+    "DriftDetector", "FleetShadow",
     # scenario registry + trajectory evaluation
     "Scenario", "get_scenario", "list_scenarios", "run_pair",
     "run_scenario", "run_scenario_service", "run_service_pair",
-    "service_compare",
+    "service_compare", "run_netlat_pair", "netlat_compare",
     # stream-runtime frontend
     "StreamApp", "StreamRouter", "PodSlice", "build_cluster",
     "__version__",

@@ -14,7 +14,8 @@ Policies:
     on a tier no longer eligible for their SLO class (capacity events and
     outages strand incumbents — constraint 4 read as a state),
   * anticipation: with declared maintenance advisories on board
-    (``set_advisories``), a ``core.planner.MaintenancePlanner`` derives
+    (an ``AdvisoryBatch`` event), a ``core.planner.MaintenancePlanner``
+    derives
     per-tick capacity/eligibility targets over the declared horizon; an
     active outlook triggers proactively and the solver balances against
     the planning problem — evacuation starts *before* the first ramp step
@@ -47,8 +48,9 @@ Public surface (this is the redesigned API):
   * ``ingest(event)`` — fold one event into controller state between
     rounds (advisory schedules, fault windows, telemetry/capacity/
     membership deltas).
-  * ``tick`` / ``observe`` / ``set_advisories`` / ``admit`` — deprecated
-    shims over the above; they warn and will be removed.
+
+The pre-PR-9 entry points (``tick`` / ``observe`` / ``set_advisories`` /
+``admit``) are gone; callers use ``step(TickInput)`` / ``ingest``.
 """
 from __future__ import annotations
 
@@ -349,14 +351,6 @@ class BalanceController:
             {"advisory": a, "acted": False, "expired": False}
             for a in self.planner.advisories]
 
-    def set_advisories(self, advisories, *,
-                       horizon: Optional[int] = None) -> None:
-        warnings.warn(
-            "BalanceController.set_advisories(...) is deprecated; send an "
-            "AdvisoryBatch event through step(TickInput(events=...)) or "
-            "ingest(...)", DeprecationWarning, stacklevel=2)
-        self._set_advisories(advisories, horizon=horizon)
-
     # -- admission gate (requires an attached streams.admission controller) --
     def _admit(self, *, demand, tasks, slo, criticality, key,
                app_id: Optional[int] = None):
@@ -381,15 +375,6 @@ class BalanceController:
             self.shedder._ensure(self.cluster.problem.num_apps)
             self.shedder.set_cap(app_id, decision.cap)
         return decision
-
-    def admit(self, *, demand, tasks, slo, criticality, key,
-              app_id: Optional[int] = None):
-        warnings.warn(
-            "BalanceController.admit(...) is deprecated; route arrivals "
-            "through the service loop / ingest(AppArrival)",
-            DeprecationWarning, stacklevel=2)
-        return self._admit(demand=demand, tasks=tasks, slo=slo,
-                           criticality=criticality, key=key, app_id=app_id)
 
     # -- event ingestion ------------------------------------------------------
     def ingest(self, event) -> None:
@@ -508,13 +493,6 @@ class BalanceController:
         events, churn) without losing cooldown/audit state."""
         self.cluster = cluster
         self._sptlb.cluster = cluster
-
-    def observe(self, cluster: ClusterState) -> None:
-        warnings.warn(
-            "BalanceController.observe(...) is deprecated; pass the "
-            "cluster via step(TickInput(cluster=...)) or send telemetry/"
-            "capacity events", DeprecationWarning, stacklevel=2)
-        self._observe(cluster)
 
     # -- degraded-mode machinery (inert when config.fault is None) -----------
     def _evacuation_mask(self, p) -> np.ndarray:
@@ -641,18 +619,6 @@ class BalanceController:
         self._observe_phase(inp)
         plan = self._decide_phase(inp)
         return self._actuate_phase(inp, plan)
-
-    def tick(self, cluster: Optional[ClusterState] = None,
-             now: Optional[int] = None,
-             collected_at: Optional[int] = None) -> ControllerEvent:
-        """Deprecated: use ``step(TickInput(...))``; returns only the audit
-        ``ControllerEvent`` (the ``TickResult`` carries strictly more)."""
-        warnings.warn(
-            "BalanceController.tick(...) is deprecated; use "
-            "step(TickInput(cluster=..., now=..., collected_at=...))",
-            DeprecationWarning, stacklevel=2)
-        return self.step(TickInput(cluster=cluster, now=now,
-                                   collected_at=collected_at)).event
 
     def _observe_phase(self, inp: TickInput) -> None:
         """Adopt the world: the handed cluster, queued events, the clock,

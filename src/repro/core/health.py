@@ -144,6 +144,19 @@ class TelemetryMonitor:
         self._lkg_demand: Optional[np.ndarray] = None  # f32[N, R]
         self._lkg_tasks: Optional[np.ndarray] = None   # f32[N]
         self.last_health: Optional[TelemetryHealth] = None
+        self._external: dict[str, SignalHealth] = {}
+
+    def note_signal(self, health: SignalHealth) -> None:
+        """Fold an externally-sensed signal into subsequent health records.
+
+        Producers outside the demand/tasks telemetry path — e.g. the
+        measured-latency sketch bank (``repro.netlat``), whose corrupt or
+        stale link readings must degrade the composite score the same way
+        blind demand telemetry does — publish their ``SignalHealth`` here.
+        The record persists until the producer replaces it, so a signal
+        that went quiet keeps weighing on the score instead of vanishing.
+        """
+        self._external[health.name] = health
 
     # -- scoring helpers ------------------------------------------------------
     def _staleness_score(self, staleness: int) -> float:
@@ -202,6 +215,7 @@ class TelemetryMonitor:
         health.signals["tasks"] = SignalHealth(
             "tasks", staleness, int(q_tasks.sum()), n_live,
             round(stale_score * plaus_score(int(q_tasks.sum())), 4))
+        health.signals.update(self._external)
 
         dirty = bool(q_demand.any() or q_tasks.any())
         inflation = self._inflation(staleness)

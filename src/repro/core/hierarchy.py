@@ -75,16 +75,17 @@ from repro.core.goals import objective as _objective
 from repro.core.health import OPEN
 from repro.core.levels import (BusState, CoopConfig, CoopTimings,
                                DEFAULT_LEVELS, Hierarchy, Proposal,
-                               SchedulerLevel, register_level)
+                               REGION_LATENCY_BUDGET_MS,
+                               RELAX_LATENCY_FACTOR, SchedulerLevel,
+                               register_level)
 from repro.core.planner import movement_cost_of
 from repro.core.problem import Problem, bucket_size
 from repro.core.solver_local import SolveResult
 from repro.core.telemetry import ClusterState
 from repro.kernels.pack import DispatchStats, pack_ffd, pack_ffd_tiers
 
-# The region scheduler's default latency budget (ms): placements must keep
-# an app within this worst-case latency of its data-source region.
-REGION_LATENCY_BUDGET_MS = 36.0
+# The latency budget/relax constants are re-exported from ``core.levels``
+# (the single source of truth) — historical importers read them from here.
 
 
 class RegionScheduler(SchedulerLevel):
@@ -198,7 +199,8 @@ class RegionScheduler(SchedulerLevel):
         if relax_tiers is None or not np.asarray(relax_tiers).any():
             return
         base = self.budget if self.budget is not None else REGION_LATENCY_BUDGET_MS
-        factor = float(getattr(plan, "relax_latency_factor", 1.5))
+        factor = float(getattr(plan, "relax_latency_factor",
+                               RELAX_LATENCY_FACTOR))
         x0 = np.asarray(self.cluster.problem.assignment0)
         self._budget_per_app = np.where(
             np.asarray(relax_tiers)[x0], base * factor, base).astype(np.float32)

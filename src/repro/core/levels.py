@@ -78,6 +78,18 @@ DEFAULT_LEVELS = ("region", "host")
 # current placement is already worse — see ShardLocalityScheduler.
 SHARD_MIN_AFFINITY = 0.25
 
+# The latency-SLO source of truth.  The region scheduler's default budget
+# (ms): placements must keep an app within this worst-case latency of its
+# data-source region.  The maintenance relax factor is the default bounded
+# degradation granted to residents evacuating a declared deep drain.  Both
+# used to be duplicated literals in ``core.hierarchy`` and the level
+# implementations below; every consumer (region level, shard level, the
+# planner's PlanOutlook default, ``sim.slo`` breach accounting) now reads
+# these — and the measured-latency level (``repro.netlat``) overrides them
+# with calibrated per-region-pair budgets from streaming percentiles.
+REGION_LATENCY_BUDGET_MS = 36.0
+RELAX_LATENCY_FACTOR = 1.5
+
 
 @dataclasses.dataclass
 class Proposal:
@@ -166,6 +178,14 @@ def level_factory(name: str) -> Callable:
         # subsystem — same lazy-registration contract as the builtins.
         try:
             import repro.shard  # noqa: F401  (registration side effect)
+        except ImportError:
+            pass
+
+    if name not in _REGISTRY:
+        # The measured-latency level ("netlat") registers from the netlat
+        # subsystem — same lazy-registration contract.
+        try:
+            import repro.netlat  # noqa: F401  (registration side effect)
         except ImportError:
             pass
 
@@ -463,7 +483,7 @@ class ShardLocalityScheduler(SchedulerLevel):
         if plan is None or relax_tiers is None or not np.asarray(relax_tiers).any():
             return
         resident = np.asarray(relax_tiers)[self._x0]
-        factor = float(getattr(plan, "relax_latency_factor", 1.5))
+        factor = float(getattr(plan, "relax_latency_factor", RELAX_LATENCY_FACTOR))
         self._bar = np.where(resident, self._bar / factor, self._bar).astype(np.float32)
 
     def premask(self, problem) -> np.ndarray:

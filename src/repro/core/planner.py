@@ -36,6 +36,7 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.levels import RELAX_LATENCY_FACTOR
 from repro.core.problem import Problem
 
 # Advisory kinds.
@@ -93,7 +94,7 @@ class PlannerConfig:
     # preference, the SLO class table stays a hard constraint, and the
     # refill after restore sends the apps home again.
     deep_drain_threshold: float = 0.25
-    relax_latency_factor: float = 1.5
+    relax_latency_factor: float = RELAX_LATENCY_FACTOR
 
 
 @dataclasses.dataclass(frozen=True)
@@ -118,7 +119,7 @@ class PlanOutlook:
     relax_home_tiers: np.ndarray = dataclasses.field(
         default_factory=lambda: np.zeros(0, bool)
     )
-    relax_latency_factor: float = 1.5
+    relax_latency_factor: float = RELAX_LATENCY_FACTOR
 
     @property
     def active(self) -> bool:

@@ -106,7 +106,7 @@ class FaultInjector:
         scales composed cumulatively (two 20% failures on one tier leave it
         at 0.64x as-built), ready for a ``sim.Scenario``'s event list.
         ``advisories`` are the announced subset's ``core.planner.Advisory``
-        records, ready for ``BalanceController.set_advisories`` — the same
+        records, ready for an ``AdvisoryBatch`` event (``ingest``) — the same
         channel declared maintenance rides (the PR-4 anticipation path).
         """
         scale = np.ones(self.num_tiers)

@@ -9,8 +9,8 @@ docs/streaming_service.md for the runbook.
 from repro.service.drift import (DELTA, FULL, NOOP, DriftConfig,
                                  DriftDecision, DriftDetector)
 from repro.service.events import (AdvisoryBatch, AppArrival, AppDeparture,
-                                  CapacityUpdate, FaultSignal, ServiceEvent,
-                                  TelemetryDelta)
+                                  CapacityUpdate, FaultSignal, LatencyDelta,
+                                  ServiceEvent, TelemetryDelta)
 from repro.service.loop import ServiceConfig, ServiceLoop, ServiceStepResult
 from repro.service.shadow import DIRTY_REL, FleetShadow
 
@@ -27,6 +27,7 @@ __all__ = [
     "FaultSignal",
     "FleetShadow",
     "FULL",
+    "LatencyDelta",
     "NOOP",
     "ServiceConfig",
     "ServiceEvent",

@@ -23,6 +23,7 @@ Decision table (first match wins; see docs/streaming_service.md):
   dirty apps + divergence > delta   DELTA (dirty shards only)
   dirty apps + d2b > delta gate     DELTA (dirty shards only)
   arrivals/departures pending       DELTA (dirty shards only)
+  latency-SLO breach + dirty apps   DELTA (dirty shards only)
   otherwise                         NOOP
   ================================  ==========================
 
@@ -150,6 +151,7 @@ class DriftDetector:
         pending_membership: bool,
         d2b: float = 0.0,
         over_ideal: float = -1.0,
+        latency_breach: bool = False,
     ) -> DriftDecision:
         cfg = self.config
         loads = np.asarray(loads, np.float64)
@@ -187,14 +189,18 @@ class DriftDetector:
             # Suspect telemetry: a partial re-solve could move apps on a
             # stale shard view.  Hold; the FULL triggers above still fire.
             return DriftDecision(NOOP, "fault signal active (delta held)", div)
-        if dirty_shards and (d2b > delta_gate or pending_membership):
+        if dirty_shards and (d2b > delta_gate or pending_membership
+                             or latency_breach):
             # The delta gate is d2b-driven, not divergence-driven: load
             # moving around while the fleet stays balanced is not worth a
             # solve, however fast it moves.  Divergence only forces the
-            # hand at the FULL threshold above (fleet-wide change).
+            # hand at the FULL threshold above (fleet-wide change).  A
+            # latency-SLO breach bypasses the d2b gate: the fleet may be
+            # perfectly balanced while apps sit behind a degraded link.
+            why = ("latency-SLO breach, " if latency_breach else "")
             return DriftDecision(
                 DELTA,
-                f"divergence {div:.3f}, d2b {d2b:.3f}, "
+                f"{why}divergence {div:.3f}, d2b {d2b:.3f}, "
                 f"{len(dirty_shards)} dirty shards",
                 div,
                 tuple(dirty_shards),

@@ -1,12 +1,11 @@
 """Typed event vocabulary for the streaming control service.
 
 The paper's schedulers are always-on services fed by the fleet; everything
-the controller used to learn through method calls (``observe`` telemetry,
-``set_advisories`` schedules, ``admit`` arrivals) is re-expressed here as a
-small closed set of ``ServiceEvent`` records.  The service loop
-(``service.loop``) drains them into a fleet shadow state; the controller's
-``ingest`` accepts the same records directly, so the legacy entry points
-are thin shims over one vocabulary.
+the controller used to learn through method calls (telemetry observations,
+advisory schedules, admissions) is expressed here as a small closed set of
+``ServiceEvent`` records.  The service loop (``service.loop``) drains them
+into a fleet shadow state; the controller's ``ingest`` accepts the same
+records directly — one vocabulary for both paths.
 
 Dispatch is duck-typed on the ``kind`` class attribute (a short string):
 ``repro.core`` never imports this module, so the core controller can
@@ -27,6 +26,7 @@ import numpy as np
 
 TELEMETRY = "telemetry"
 CAPACITY = "capacity"
+LATENCY = "latency"
 ARRIVAL = "arrival"
 DEPARTURE = "departure"
 ADVISORIES = "advisories"
@@ -69,6 +69,27 @@ class CapacityUpdate(ServiceEvent):
     slo_allowed: Optional[np.ndarray] = None  # bool[T, S]
     region_latency: Optional[np.ndarray] = None  # f32[Rg, Rg]
     hosts_per_tier: Optional[np.ndarray] = None  # i32[T]
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyDelta(ServiceEvent):
+    """Fresh region-pair latency estimates (the measured-latency control
+    plane's p99 matrix, or the simulator's ground truth).
+
+    Unlike folding latency into ``CapacityUpdate``, this is *not* a
+    structural signal: capacities, limits and shard boundaries are all
+    unchanged, so it must not force a full pass.  The shadow re-stages the
+    matrix, marks the apps whose standing placement now breaches the
+    latency budget dirty, and raises ``latency_breach`` — which enables
+    the drift detector's *delta* branch over just those shards.
+    ``budget_ms`` overrides the static region budget when the measured
+    plane has calibrated per-pair budgets (``None`` = static contract).
+    """
+
+    kind = LATENCY
+    region_latency: np.ndarray  # f32[Rg, Rg]
+    collected_at: int = 0
+    budget_ms: Optional[float] = None
 
 
 @dataclasses.dataclass(frozen=True)

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import threading
 import time
 from typing import Optional
 
@@ -94,6 +95,10 @@ class ServiceLoop:
         self.drift = DriftDetector(config.drift)
         self._queue: collections.deque = collections.deque()
         self._seq = 0
+        # Producers may submit from multiple threads (the ingestion bench
+        # does); the lock keeps (seq, enqueue) atomic so the global order
+        # stays gap-free.  ``step`` stays single-consumer.
+        self._submit_lock = threading.Lock()
         self.submitted = 0
         self.applied_events = 0
         self._pending_membership = False
@@ -107,11 +112,14 @@ class ServiceLoop:
 
     # -- ingestion ------------------------------------------------------------
     def submit(self, event) -> int:
-        """Enqueue one event; returns its global sequence number."""
-        seq = self._seq
-        self._seq += 1
-        self.submitted += 1
-        self._queue.append((seq, event))
+        """Enqueue one event; returns its global sequence number.
+
+        Safe to call from concurrent producer threads."""
+        with self._submit_lock:
+            seq = self._seq
+            self._seq += 1
+            self.submitted += 1
+            self._queue.append((seq, event))
         return seq
 
     def _drain(self, now: int) -> int:
@@ -167,7 +175,8 @@ class ServiceLoop:
             dirty_shards=dirty,
             pending_membership=self._pending_membership,
             d2b=self.shadow.d2b(),
-            over_ideal=self.shadow.over_ideal())
+            over_ideal=self.shadow.over_ideal(),
+            latency_breach=self.shadow.latency_breach)
 
         res: Optional[TickResult] = None
         if decision.action is not NOOP:

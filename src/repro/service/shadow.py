@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.hierarchy import RegionScheduler
+from repro.core.levels import REGION_LATENCY_BUDGET_MS
 from repro.core.telemetry import ClusterState
 from repro.service import events as E
 
@@ -58,6 +59,10 @@ class FleetShadow:
         self._ref_demand = self._demand.copy()
         self.dirty_apps: set[int] = set()
         self.capacity_dirty = False
+        # Latest latency measurement found live apps over budget (enables
+        # the drift detector's delta branch; cleared by a concluded solve
+        # or a newer in-budget measurement).
+        self.latency_breach = False
         self.collected_at = int(cluster.collected_at)
         # Integrity log: app id -> sequence numbers applied, in order.
         self.applied_seq: dict[int, list[int]] = {}
@@ -72,6 +77,8 @@ class FleetShadow:
             self._apply_telemetry(event, seq)
         elif kind == E.CAPACITY:
             self._apply_capacity(event)
+        elif kind == E.LATENCY:
+            self._apply_latency(event, seq)
         elif kind == E.ARRIVAL:
             self._apply_arrival(event, seq)
         elif kind == E.DEPARTURE:
@@ -111,6 +118,32 @@ class FleetShadow:
             self._hosts = np.asarray(ev.hosts_per_tier).copy()
             self._geometry_stale = True
         self.capacity_dirty = True
+
+    def _apply_latency(self, ev, seq: int) -> None:
+        """Re-stage the region-latency matrix WITHOUT the structural bit.
+
+        ``capacity_dirty`` stays False: shard boundaries and capacities
+        did not move, so a latency-SLO breach should cost a *delta* solve
+        over the breaching apps' shards, not a fleet-wide pass.  Breach =
+        an app whose current tier's worst-case region latency (the
+        ``RegionScheduler`` contract) exceeds the budget."""
+        self._region_latency = np.asarray(ev.region_latency).copy()
+        self._geometry_stale = True
+        self.collected_at = max(self.collected_at, int(ev.collected_at))
+        budget = (float(ev.budget_ms) if ev.budget_ms is not None
+                  else REGION_LATENCY_BUDGET_MS)
+        tiers = np.asarray(self._cluster.tier_regions, bool)     # [T, Rg]
+        lat = self._region_latency
+        worst = np.where(tiers[None, :, :], lat[:, None, :],
+                         -np.inf).max(axis=2)                    # [Rg, T]
+        app_region = np.asarray(self._cluster.app_region)
+        per_app = worst[app_region, self._x0]
+        breaching = np.where(self._valid & (per_app > budget))[0]
+        for n in breaching:
+            self.dirty_apps.add(int(n))
+            self._log(n, seq)
+        # Latest measurement wins: an in-budget matrix clears the flag.
+        self.latency_breach = bool(breaching.size)
 
     def _apply_arrival(self, ev, seq: int) -> None:
         n = int(ev.app_id)
@@ -166,10 +199,15 @@ class FleetShadow:
             self.dirty_apps.clear()
             self._ref_demand = self._demand.copy()
             self.capacity_dirty = False
+            self.latency_breach = False
             return
         ids = np.asarray(list(app_ids), np.int64)
         self._ref_demand[ids] = self._demand[ids]
         self.dirty_apps.difference_update(int(n) for n in ids)
+        # A scoped solve covered the breaching apps' shards (they were the
+        # dirty set that triggered it); a persisting breach re-raises on
+        # the next latency measurement.
+        self.latency_breach = False
 
     # -- materialization -----------------------------------------------------
     def stranded(self) -> int:

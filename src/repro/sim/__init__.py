@@ -8,20 +8,21 @@ provide.  See ``sim.scenario`` for the registry and
 """
 from repro.sim.events import (CapacityScale, ChurnRate, ControlPlaneFault,
                               FaultyLevel, FlashCrowd, FleetState,
-                              LevelFault, RegionOutage, RegionRestore,
+                              JitterStorm, LevelFault, LinkDegrade,
+                              LinkRestore, RegionOutage, RegionRestore,
                               ShardSkew, SolverBrownout, TelemetryBlackout,
                               TelemetryCorruption, TimedEvent,
                               faulty_hierarchy)
 from repro.sim.harness import (CHAOS_CONTROLLER, SIM_CONTROLLER, build_fleet,
                                place_arrivals, run_chaos_pair,
-                               run_overload_pair, run_pair, run_scenario,
-                               run_scenario_service, run_service_pair,
-                               strip_chaos)
+                               run_netlat_pair, run_overload_pair, run_pair,
+                               run_scenario, run_scenario_service,
+                               run_service_pair, strip_chaos)
 from repro.sim.scenario import (Scenario, get_scenario, list_scenarios,
                                 scenario)
 from repro.sim.slo import (SimReport, SloAccountant, TickStats, chaos_compare,
-                           compare, count_unsafe_moves, overload_compare,
-                           service_compare, utility_stats)
+                           compare, count_unsafe_moves, netlat_compare,
+                           overload_compare, service_compare, utility_stats)
 from repro.sim.workload import (WorkloadConfig, WorkloadState,
                                 inject_flash_crowd, make_workload_state,
                                 set_churn_rates, workload_step,
@@ -29,16 +30,18 @@ from repro.sim.workload import (WorkloadConfig, WorkloadState,
 
 __all__ = [
     "CapacityScale", "ChurnRate", "ControlPlaneFault", "FaultyLevel",
-    "FlashCrowd", "FleetState", "LevelFault", "RegionOutage",
-    "RegionRestore", "ShardSkew", "SolverBrownout", "TelemetryBlackout",
-    "TelemetryCorruption", "TimedEvent", "faulty_hierarchy",
+    "FlashCrowd", "FleetState", "JitterStorm", "LevelFault", "LinkDegrade",
+    "LinkRestore", "RegionOutage", "RegionRestore", "ShardSkew",
+    "SolverBrownout", "TelemetryBlackout", "TelemetryCorruption",
+    "TimedEvent", "faulty_hierarchy",
     "CHAOS_CONTROLLER", "SIM_CONTROLLER", "build_fleet", "place_arrivals",
-    "run_chaos_pair", "run_overload_pair", "run_pair", "run_scenario",
-    "run_scenario_service", "run_service_pair", "strip_chaos",
+    "run_chaos_pair", "run_netlat_pair", "run_overload_pair", "run_pair",
+    "run_scenario", "run_scenario_service", "run_service_pair",
+    "strip_chaos",
     "Scenario", "get_scenario", "list_scenarios", "scenario",
     "SimReport", "SloAccountant", "TickStats", "chaos_compare", "compare",
-    "count_unsafe_moves", "overload_compare", "service_compare",
-    "utility_stats",
+    "count_unsafe_moves", "netlat_compare", "overload_compare",
+    "service_compare", "utility_stats",
     "WorkloadConfig", "WorkloadState", "inject_flash_crowd",
     "make_workload_state", "set_churn_rates", "workload_step",
     "workload_trace_count",

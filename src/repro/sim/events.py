@@ -58,6 +58,17 @@ class FleetState:
     # Standing knobs (events edit these, then call refresh):
     tier_scale: np.ndarray         # f32[T] capacity scale per tier
     down_regions: set = dataclasses.field(default_factory=set)
+    # Network knobs (``LinkDegrade``/``JitterStorm`` edit these): a standing
+    # per-pair latency multiplier, and a jitter-storm window during which
+    # the effective matrix additionally wobbles per tick.  ``link_factor``
+    # stays None until a link event first fires (the common case pays
+    # nothing).  Jitter is a pure function of (jitter_seed, tick) so a
+    # trajectory and its oracle twin see bit-identical latency.
+    link_factor: np.ndarray | None = None  # f32[G, G] multiplier
+    jitter_until: int = 0
+    jitter_sigma: float = 0.0
+    jitter_seed: int = 0
+    tick: int = 0                  # harness-advanced; jitter reads it
     # Advisory channel (``core.planner.Advisory``): the maintenance events
     # this trajectory has *declared* in advance.  The harness hands it to
     # the controller's planner; surprises (flash crowds, churn) never
@@ -90,6 +101,14 @@ class FleetState:
         scale = np.maximum(self.tier_scale, MIN_TIER_SCALE)
         slo_allowed = self.base_slo_allowed.copy()
         lat = self.base_latency.copy()
+        if self.link_factor is not None:
+            lat = lat * self.link_factor
+        if self.jitter_active(self.tick):
+            # Per-tick wobble, only ever slowing links (a storm never makes
+            # a link faster than its standing latency).
+            jrng = np.random.default_rng([self.jitter_seed, self.tick])
+            lat = lat * np.maximum(
+                1.0, jrng.lognormal(0.0, self.jitter_sigma, size=lat.shape))
         if self.down_regions:
             down = np.zeros(G, bool)
             down[list(self.down_regions)] = True
@@ -120,6 +139,9 @@ class FleetState:
         self.cluster = dataclasses.replace(
             self.cluster, problem=problem, hosts_per_tier=hosts,
             region_latency=lat.astype(np.float32))
+
+    def jitter_active(self, tick: int) -> bool:
+        return self.jitter_sigma > 0.0 and tick < self.jitter_until
 
 
 @dataclasses.dataclass(frozen=True)
@@ -270,6 +292,71 @@ class ChurnRate(TimedEvent):
         fleet.wl = W.set_churn_rates(
             fleet.wl, arrival_rate=self.arrival_rate,
             retire_rate=self.retire_rate)
+
+
+# ---------------------------------------------------------------------------
+# network events (what the measured-latency control plane exists for)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkDegrade(TimedEvent):
+    """A WAN link (region pair) degrades: the effective latency between
+    ``src`` and ``dst`` becomes ``factor``x its as-built value (a routing
+    detour, a congested peering point).  Network weather is a surprise —
+    no advisory; only the measurement plane can see it."""
+
+    src: int = 0
+    dst: int = 1
+    factor: float = 4.0
+    symmetric: bool = True
+
+    def apply(self, fleet: FleetState) -> None:
+        if fleet.link_factor is None:
+            fleet.link_factor = np.ones_like(fleet.base_latency)
+        fleet.link_factor[self.src, self.dst] = self.factor
+        if self.symmetric:
+            fleet.link_factor[self.dst, self.src] = self.factor
+        fleet.refresh()
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkRestore(TimedEvent):
+    """The degraded link heals: the pair's multiplier returns to 1."""
+
+    src: int = 0
+    dst: int = 1
+    symmetric: bool = True
+
+    def apply(self, fleet: FleetState) -> None:
+        if fleet.link_factor is None:
+            return
+        fleet.link_factor[self.src, self.dst] = 1.0
+        if self.symmetric:
+            fleet.link_factor[self.dst, self.src] = 1.0
+        fleet.refresh()
+
+
+@dataclasses.dataclass(frozen=True)
+class JitterStorm(TimedEvent):
+    """``ticks`` ticks of fleet-wide latency jitter: every pair's effective
+    latency wobbles per tick by a lognormal factor (floored at 1 — storms
+    only slow links).  Deterministic per (seed, tick), so the trajectory
+    and its oracle twin observe identical weather."""
+
+    ticks: int = 6
+    sigma: float = 0.35
+    seed: int = 0
+
+    @property
+    def until(self) -> int:
+        return self.at + self.ticks
+
+    def apply(self, fleet: FleetState) -> None:
+        fleet.jitter_until = max(fleet.jitter_until, self.until)
+        fleet.jitter_sigma = self.sigma
+        fleet.jitter_seed = self.seed
+        fleet.refresh()
 
 
 # ---------------------------------------------------------------------------

@@ -328,10 +328,83 @@ def _admit_arrivals(fleet: FleetState, ctl: BalanceController,
     return x0
 
 
+def _advance_world(fleet: FleetState, sc: Scenario, tick: int) -> None:
+    """Step 2 of every tick: timed events rewrite the effective cluster /
+    workload knobs.  The fleet clock advances first (jitter reads it), and
+    an active jitter storm re-randomizes the effective latency every tick
+    of its window (plus one refresh after it closes, restoring calm) even
+    when no event fires."""
+    fleet.tick = tick
+    for ev in events_at(sc.events, tick):
+        ev.apply(fleet)
+    if fleet.jitter_sigma > 0.0 and tick <= fleet.jitter_until:
+        fleet.refresh()
+
+
+class _NetlatPlane:
+    """The measurement plane a netlat run arms: a per-tick prober feeding
+    the process-wide sketch bank, calibration after ``calibrate_ticks``
+    clean ticks, and link-health publication into the controller's
+    telemetry monitor.  ``budget_exceeding(...)`` is the per-tick audit the
+    scorecard integrates — moves whose destination tier has a pair over
+    its live measured budget."""
+
+    def __init__(self, sc: Scenario, num_regions: int,
+                 calibrate_ticks: int = 4):
+        from repro import netlat as NL
+        self._nl = NL
+        self.bank = NL.LinkSketchBank(num_regions)
+        self.source = NL.LinkMeasurementSource(seed=sc.seed + 31)
+        self.config = NL.NetlatConfig()
+        self.calibrate_ticks = calibrate_ticks
+        NL.install_bank(self.bank, config=self.config, now=0)
+
+    def observe(self, fleet: FleetState, ctl: BalanceController | None,
+                tick: int) -> None:
+        truth = np.asarray(fleet.cluster.region_latency, np.float64)
+        self.bank.ingest(self.source.measure(truth, tick), tick)
+        if not self.bank.calibrated and tick + 1 >= self.calibrate_ticks:
+            self.bank.calibrate(tick)
+        self._nl.set_now(tick)
+        if ctl is not None and getattr(ctl, "monitor", None) is not None:
+            ctl.monitor.note_signal(self.bank.signal_health(tick))
+
+    def budget_exceeding(self, fleet: FleetState, x_before: np.ndarray,
+                         x_after: np.ndarray, tick: int) -> int:
+        if not self.bank.calibrated:
+            return 0
+        c = fleet.cluster
+        valid = np.asarray(c.problem.valid, bool)
+        moved = np.where((np.asarray(x_before) != np.asarray(x_after))
+                         & valid)[0]
+        if moved.size == 0:
+            return 0
+        budget = np.clip(self.config.headroom * self.bank.calibrated_p99,
+                         self.config.min_ms, self.config.cap_ms)
+        bad_pair = self.bank.p99(tick) > budget                 # [G, G]
+        tier_bad = (bad_pair.astype(np.float64)
+                    @ c.tier_regions.T.astype(np.float64)) > 0  # [G, T]
+        tier_bad[:, ~c.tier_regions.any(axis=1)] = True
+        dst = np.asarray(x_after)[moved]
+        return int(np.sum(tier_bad[c.app_region[moved], dst]))
+
+    def extra(self) -> dict:
+        return {
+            "calibrated": self.bank.calibrated,
+            "calibrated_at": self.bank.calibrated_at,
+            "relax_factor": round(self.bank.relax_factor(
+                cap=self.config.max_relax), 4),
+            "quarantined": int(self.bank.quarantined_total),
+        }
+
+    def close(self) -> None:
+        self._nl.install_bank(None)
+
+
 def run_scenario(sc: Scenario, *, policy: str = "balanced",
                  config: ControllerConfig | None = None,
                  anticipation: bool = True, utility: bool = False,
-                 verbose: bool = False) -> SimReport:
+                 netlat: bool = False, verbose: bool = False) -> SimReport:
     """Run one scenario under one policy; returns the scored trajectory.
 
     ``anticipation`` hands the scenario's declared maintenance advisories
@@ -339,6 +412,15 @@ def run_scenario(sc: Scenario, *, policy: str = "balanced",
     scenario's ``move_budget`` (when set) becomes the controller's
     trajectory movement budget unless the caller's config already pins one
     — so the proactive evacuation is judged against what it spends.
+
+    ``netlat`` (or ``Scenario.netlat``) arms the measurement plane: a
+    deterministic per-tick link prober feeds the process-wide sketch bank,
+    budgets calibrate from the observed baseline, and link health is
+    published into the controller's telemetry monitor.  Whether the
+    controller *uses* the measurements is the stack's choice — a config
+    with ``levels=("netlat", "host")`` binds the latency-SLO level; the
+    default stack stays on the static constant, which is exactly the
+    contrast ``run_netlat_pair`` scores.
 
     ``utility`` arms the overload-resilient control plane on an overload
     scenario: utility curves attach to the controller's problem, arrivals
@@ -385,6 +467,8 @@ def run_scenario(sc: Scenario, *, policy: str = "balanced",
             ctl.ingest(AdvisoryBatch(advisories=tuple(fleet.declared_events)))
         if utility:
             ctl.admission = AdmissionController()
+    plane = (_NetlatPlane(sc, fleet.base_latency.shape[0])
+             if (netlat or sc.netlat) else None)
     acct = SloAccountant()
     pending: dict[int, int] = {}     # admission-deferred: app id -> retry tick
     overload_counters = {"infeasible_admissions": 0}
@@ -403,9 +487,11 @@ def run_scenario(sc: Scenario, *, policy: str = "balanced",
                 fleet.cluster.problem, demand=demand, tasks=tasks,
                 valid=valid))
 
-        # 2. Timed events rewrite the effective cluster / workload knobs.
-        for ev in events_at(sc.events, tick):
-            ev.apply(fleet)
+        # 2. Timed events rewrite the effective cluster / workload knobs;
+        # an armed measurement plane then probes the post-event truth.
+        _advance_world(fleet, sc, tick)
+        if plane is not None:
+            plane.observe(fleet, ctl, tick)
 
         # 3. Place arrivals (after events: admission sees drained capacity).
         # Overload + utility: arrivals (and retry-eligible deferred apps)
@@ -511,15 +597,22 @@ def run_scenario(sc: Scenario, *, policy: str = "balanced",
                 budget_limited=evr.budget_limited, unsafe_moves=unsafe,
                 mode=evr.mode, health_score=evr.health_score)
         elif ctl is not None:
+            x_before = np.asarray(fleet.cluster.problem.assignment0)
             evr = ctl.step(TickInput(cluster=fleet.cluster, now=tick))
             fleet.cluster = ctl.cluster
+            exceeding = 0
+            if plane is not None and evr.applied:
+                exceeding = plane.budget_exceeding(
+                    fleet, x_before,
+                    np.asarray(fleet.cluster.problem.assignment0), tick)
             stat = acct.observe(
                 fleet.cluster, moved=evr.moved if evr.applied else 0,
                 applied=evr.applied, triggered=evr.triggered,
                 solve_s=evr.time_s,
                 movement_cost=evr.movement_cost if evr.applied else 0.0,
                 budget_limited=evr.budget_limited,
-                mode=evr.mode, health_score=evr.health_score)
+                mode=evr.mode, health_score=evr.health_score,
+                budget_exceeding_moves=exceeding)
         else:
             stat = acct.observe(fleet.cluster)
         if verbose:
@@ -547,6 +640,9 @@ def run_scenario(sc: Scenario, *, policy: str = "balanced",
         report.extra.update(
             infeasible_admissions=overload_counters["infeasible_admissions"],
             deferred_backlog=len(pending))
+    if plane is not None:
+        report.extra.update(netlat=plane.extra())
+        plane.close()
     return report
 
 
@@ -618,6 +714,32 @@ def run_chaos_pair(sc: Scenario, *, config: ControllerConfig | None = None,
     }
 
 
+def run_netlat_pair(sc: Scenario, *, config: ControllerConfig | None = None,
+                    verbose: bool = False) -> dict:
+    """A network_degraded scenario two ways over the same trajectory: the
+    static-budget stack (region+host, the hard-coded 36 ms constant) and
+    the measured stack (netlat+host, per-pair budgets calibrated from the
+    sketch bank).  Both runs arm the measurement plane — the static twin
+    collects the same measurements so its budget-exceeding moves are
+    counted against the same live budgets — but only the measured twin's
+    controller binds the latency-SLO level.  The ``netlat`` record is the
+    scorecard the regression gate pins (p99 integral ratio < 1, zero
+    measured-stack budget-exceeding moves)."""
+    from repro.sim.slo import netlat_compare
+    base = config or SIM_CONTROLLER
+    measured_cfg = dataclasses.replace(
+        base, coop=dataclasses.replace(base.coop, levels=("netlat", "host")))
+    static = run_scenario(sc, policy="balanced", config=base, netlat=True,
+                          verbose=verbose)
+    measured = run_scenario(sc, policy="balanced", config=measured_cfg,
+                            netlat=True, verbose=verbose)
+    return {
+        "static": static,
+        "measured": measured,
+        "netlat": netlat_compare(static, measured),
+    }
+
+
 # -- streaming service adapter ---------------------------------------------
 
 def run_scenario_service(sc: Scenario, *,
@@ -646,7 +768,8 @@ def run_scenario_service(sc: Scenario, *,
         raise ValueError("service replay supports plain scenarios only")
     from repro.service import ServiceConfig, ServiceLoop
     from repro.service.events import (AdvisoryBatch, AppArrival, AppDeparture,
-                                      CapacityUpdate, TelemetryDelta)
+                                      CapacityUpdate, LatencyDelta,
+                                      TelemetryDelta)
 
     fleet = build_fleet(sc)
     cfg = config or SIM_CONTROLLER
@@ -683,8 +806,7 @@ def run_scenario_service(sc: Scenario, *,
             problem=dataclasses.replace(
                 fleet.cluster.problem, demand=demand, tasks=tasks,
                 valid=valid))
-        for ev in events_at(sc.events, tick):
-            ev.apply(fleet)
+        _advance_world(fleet, sc, tick)
         valid_np = np.asarray(fleet.cluster.problem.valid)
         arrivals = np.where(valid_np & ~prev_valid)[0]
         if arrivals.size:
@@ -712,7 +834,13 @@ def run_scenario_service(sc: Scenario, *,
             changed["region_latency"] = lat.copy()
         if not np.array_equal(hosts, prev_hosts):
             changed["hosts_per_tier"] = hosts.copy()
-        if changed:
+        if set(changed) == {"region_latency"}:
+            # Network weather only: a LatencyDelta keeps the delta path
+            # open (a breach dirties just the affected apps' shards),
+            # where a CapacityUpdate would force a fleet-wide full pass.
+            loop.submit(LatencyDelta(region_latency=lat.copy(),
+                                     collected_at=tick))
+        elif changed:
             loop.submit(CapacityUpdate(**changed))
         prev_cap, prev_klim, prev_slo_ok = cap, klim, slo_ok
         prev_lat, prev_hosts = lat, hosts

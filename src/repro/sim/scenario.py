@@ -37,6 +37,7 @@ import dataclasses
 from typing import Callable
 
 from repro.sim.events import (CapacityScale, ChurnRate, FlashCrowd,
+                              JitterStorm, LinkDegrade, LinkRestore,
                               RegionOutage, RegionRestore, ShardSkew,
                               SolverBrownout, TelemetryBlackout, TimedEvent)
 from repro.sim.workload import WorkloadConfig
@@ -83,6 +84,11 @@ class Scenario:
     # through an S-shard partitioned batched pass with coordinator-granted
     # boundary migrations.  None keeps the global Sptlb path.
     shards: int | None = None
+    # Network-degraded scenario: contains link events the static latency
+    # constant cannot see.  The harness arms the measurement plane (sketch
+    # bank + per-tick prober) and ``run_netlat_pair`` scores the measured
+    # netlat+host stack against the static-budget twin.
+    netlat: bool = False
     seed: int = 0
 
     @property
@@ -369,6 +375,71 @@ def _overload_capacity_loss(num_apps: int, ticks: int, seed: int) -> Scenario:
                 CapacityScale(at=(3 * ticks) // 4, tier=3, scale=1.0,
                               announced=False)),
         move_budget=2.0 * num_apps)
+
+
+# ---------------------------------------------------------------------------
+# network_degraded family: link weather the static 36 ms constant can't see
+# (PR 10 measured-latency acceptance)
+# ---------------------------------------------------------------------------
+
+def _netlat_workload(ticks: int) -> WorkloadConfig:
+    return WorkloadConfig(period=max(16, ticks // 2),
+                          diurnal_amp=0.20, burst_sigma=0.10)
+
+
+@scenario("network_degraded_slow_links", "adjacent-region links degrade to "
+          "~1.8x (still under the 36 ms constant): only measured per-pair "
+          "budgets see it and steer placements off the slow paths")
+def _network_slow_links(num_apps: int, ticks: int, seed: int) -> Scenario:
+    # One-hop links sit at ~19 ms as built; 1.8x lands them near ~34 ms —
+    # inside the static budget (the region level stays blind) but far
+    # outside a calibrated ~1.25 x baseline budget.  Degrading the links
+    # around region 1 makes every tier arc through it a measured no-go.
+    t0, t1 = ticks // 4, (3 * ticks) // 4
+    return Scenario(
+        name="network_degraded_slow_links", description="", ticks=ticks,
+        num_apps=num_apps, seed=seed, netlat=True,
+        workload=_netlat_workload(ticks),
+        events=(LinkDegrade(at=t0, src=0, dst=1, factor=1.8),
+                LinkDegrade(at=t0, src=1, dst=2, factor=1.8),
+                LinkDegrade(at=t0 + 2, src=2, dst=3, factor=1.7),
+                LinkRestore(at=t1, src=0, dst=1),
+                LinkRestore(at=t1, src=1, dst=2),
+                LinkRestore(at=t1, src=2, dst=3)))
+
+
+@scenario("network_degraded_asymmetric", "one direction of a link degrades "
+          "(routing detour): the per-pair sketch matrix is direction-aware "
+          "where the symmetric constant never was")
+def _network_asymmetric(num_apps: int, ticks: int, seed: int) -> Scenario:
+    t0, t1 = ticks // 4, (3 * ticks) // 4
+    return Scenario(
+        name="network_degraded_asymmetric", description="", ticks=ticks,
+        num_apps=num_apps, seed=seed, netlat=True,
+        workload=_netlat_workload(ticks),
+        events=(LinkDegrade(at=t0, src=0, dst=1, factor=1.9,
+                            symmetric=False),
+                LinkDegrade(at=t0 + 1, src=3, dst=4, factor=1.8,
+                            symmetric=False),
+                LinkRestore(at=t1, src=0, dst=1, symmetric=False),
+                LinkRestore(at=t1, src=3, dst=4, symmetric=False)))
+
+
+@scenario("network_degraded_jitter", "a fleet-wide jitter storm fattens "
+          "every pair's tail: live p99 estimates breach calibrated budgets "
+          "while the mean barely moves")
+def _network_jitter(num_apps: int, ticks: int, seed: int) -> Scenario:
+    t0 = ticks // 4
+    dur = max(6, ticks // 3)
+    return Scenario(
+        name="network_degraded_jitter", description="", ticks=ticks,
+        num_apps=num_apps, seed=seed, netlat=True,
+        workload=_netlat_workload(ticks),
+        events=(JitterStorm(at=t0, ticks=dur, sigma=0.45, seed=seed + 5),
+                # A crowd mid-storm makes the controller *want* to move —
+                # the measured stack must route its repairs around the
+                # fattened tails instead of through them.
+                FlashCrowd(at=t0 + dur // 3, frac=0.08, magnitude=5.0)))
 
 
 @scenario("churn_heavy", "app arrivals/retirements over a standby pool "

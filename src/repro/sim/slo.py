@@ -67,6 +67,14 @@ class TickStats:
     # maintenance placement mode's bounded degradation, surfaced so the
     # relaxed-evacuation tradeoff is priced, never silent.
     region_breach_apps: int = 0
+    # p99 network latency of the standing placement (the Fig. 4 spill
+    # model read as a state, ``core.metrics.placement_p99_ms``) — what the
+    # measured-latency control plane is scored on.
+    network_p99_ms: float = 0.0
+    # Moves committed this tick whose destination exceeded its *measured*
+    # live p99 budget (netlat runs only; the gate pins the measured stack
+    # to zero).
+    budget_exceeding_moves: int = 0
     # Live apps placed on a tier holding less than the shard locality
     # level's minimum of their data-shard mass (every window/join reads
     # remote state) — what the shard_skew scenario's third level protects.
@@ -190,7 +198,8 @@ class SloAccountant:
                 budget_limited: bool = False, unsafe_moves: int = 0,
                 mode: str = "normal", health_score: float = 1.0,
                 utility: dict | None = None, shed_capped_apps: int = 0,
-                shed_churn: int = 0) -> TickStats:
+                shed_churn: int = 0,
+                budget_exceeding_moves: int = 0) -> TickStats:
         s = score_cluster(cluster.problem)
         p = cluster.problem
         worst = RegionScheduler(cluster)._worst_ms   # memoized on the cluster
@@ -213,6 +222,8 @@ class SloAccountant:
                          health_score=health_score,
                          shed_capped_apps=shed_capped_apps,
                          shed_churn=shed_churn,
+                         network_p99_ms=M.placement_p99_ms(cluster),
+                         budget_exceeding_moves=budget_exceeding_moves,
                          **(utility or {}), **s)
         self.ticks.append(stat)
         return stat
@@ -259,6 +270,15 @@ class SimReport:
                 t.region_breach_apps for t in ts),
             "shard_misplaced_app_ticks": sum(
                 t.shard_misplaced_apps for t in ts),
+            # The latency-SLO scorecard: the placement-p99 integral (ms x
+            # ticks — holding a degraded placement for 10 ticks costs 10x
+            # its excess) and the worst tick.
+            "network_p99_integral": float(sum(
+                t.network_p99_ms for t in ts)),
+            "peak_network_p99_ms": float(max(
+                (t.network_p99_ms for t in ts), default=0.0)),
+            "budget_exceeding_moves": sum(
+                t.budget_exceeding_moves for t in ts),
             "rebalances": sum(1 for t in ts if t.applied),
             "triggers": sum(1 for t in ts if t.triggered),
             # Degraded-mode accounting: unsafe moves committed on faulted
@@ -299,6 +319,8 @@ class SimReport:
         """Per-tick time series (for BENCH_sim.json / plotting)."""
         return {
             "d2b": [round(t.d2b, 4) for t in self.ticks],
+            "network_p99_ms": [round(t.network_p99_ms, 1)
+                               for t in self.ticks],
             "slo_violating_apps": [t.slo_violating_apps for t in self.ticks],
             "over_ideal_tiers": [t.over_ideal_tiers for t in self.ticks],
             "live_apps": [t.live_apps for t in self.ticks],
@@ -455,6 +477,50 @@ def chaos_compare(degraded: SimReport, oracle: SimReport) -> dict:
         "telemetry_quarantined": audit.get("telemetry_quarantined", 0),
         "budget_overruns": d["budget_overruns"],
         "moves": {"degraded": d["total_moves"], "oracle": o["total_moves"]},
+    }
+
+
+def netlat_compare(static_budget: SimReport, measured: SimReport) -> dict:
+    """Measured-budget stack vs the static-36 ms stack, same trajectory
+    (network_degraded family).
+
+    ``static_budget`` ran the default region+host stack (the hard-coded
+    ``REGION_LATENCY_BUDGET_MS`` constant); ``measured`` ran netlat+host —
+    per-pair budgets calibrated from the sketch bank's observed baseline,
+    vetted against live p99 estimates.  The acceptance claim: the measured
+    stack holds a strictly better placement-p99 integral (ratio < 1) while
+    committing zero moves that exceed their live measured budget.
+    """
+    s, m = static_budget.summary(), measured.summary()
+    nl = measured.extra.get("netlat", {})
+
+    def ratio(key):
+        if s[key] > 0:
+            return m[key] / s[key]
+        return 1.0 if m[key] == 0 else None
+
+    return {
+        "network_p99_integral": {"static": s["network_p99_integral"],
+                                 "measured": m["network_p99_integral"],
+                                 "ratio": ratio("network_p99_integral")},
+        "peak_network_p99_ms": {"static": s["peak_network_p99_ms"],
+                                "measured": m["peak_network_p99_ms"]},
+        # The hard invariant the gate pins to zero: the measured stack must
+        # never commit a move whose destination exceeds its live budget.
+        # The static stack's count is the contrast — how often the blind
+        # constant let one through.
+        "budget_exceeding_moves": {
+            "static": s["budget_exceeding_moves"],
+            "measured": m["budget_exceeding_moves"]},
+        "slo_violation_ticks": {"static": s["slo_violation_ticks"],
+                                "measured": m["slo_violation_ticks"],
+                                "ratio": ratio("slo_violation_ticks")},
+        "moves": {"static": s["total_moves"], "measured": m["total_moves"]},
+        "movement_cost": {"static": s["movement_cost"],
+                          "measured": m["movement_cost"]},
+        "calibrated": bool(nl.get("calibrated", False)),
+        "relax_factor": nl.get("relax_factor"),
+        "quarantined_samples": nl.get("quarantined", 0),
     }
 
 

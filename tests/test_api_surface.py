@@ -46,16 +46,19 @@ _HOME = {
     "AppDeparture": "repro.service.events",
     "AdvisoryBatch": "repro.service.events",
     "FaultSignal": "repro.service.events",
+    "LatencyDelta": "repro.service.events",
     "DriftConfig": "repro.service.drift",
     "DriftDetector": "repro.service.drift",
     "FleetShadow": "repro.service.shadow",
     "Scenario": "repro.sim.scenario",
     "get_scenario": "repro.sim.scenario",
     "list_scenarios": "repro.sim.scenario",
+    "run_netlat_pair": "repro.sim.harness",
     "run_pair": "repro.sim.harness",
     "run_scenario": "repro.sim.harness",
     "run_scenario_service": "repro.sim.harness",
     "run_service_pair": "repro.sim.harness",
+    "netlat_compare": "repro.sim.slo",
     "service_compare": "repro.sim.slo",
     "StreamApp": "repro.streams.router",
     "StreamRouter": "repro.streams.router",

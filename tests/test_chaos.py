@@ -17,7 +17,7 @@ import pytest
 from _hypothesis_compat import hypothesis, st
 from repro.core import (BalanceController, ControllerConfig, CoopConfig,
                         FaultToleranceConfig, Mode, generate_cluster)
-from repro.core.controller import _MODE_RANK
+from repro.core.controller import _MODE_RANK, TickInput
 from repro.core.health import CLOSED, OPEN
 from repro.sim import (faulty_hierarchy, get_scenario, run_chaos_pair)
 
@@ -117,7 +117,7 @@ def test_safe_mode_only_commits_evacuations(seed, spike, n_spiked):
         fault=FaultToleranceConfig()))
     x_before = np.asarray(cluster.problem.assignment0).copy()
     # Telemetry 6 ticks old: score 0 -> SAFE on this very tick.
-    ev = ctl.tick(now=6, collected_at=0)
+    ev = ctl.step(TickInput(now=6, collected_at=0)).event
     assert ev.mode == Mode.SAFE.value
 
     p_after = ctl.cluster.problem     # sanitized view + committed mapping
@@ -190,21 +190,21 @@ def test_level_fault_trips_breaker_then_recovers():
 
     ctl.hierarchy_override = faulty
     for t in range(3):                # fail_threshold consecutive failures
-        ctl.tick(now=t, collected_at=t)
+        ctl.step(TickInput(now=t, collected_at=t))
     host = ctl.board.breaker("host")
     assert host.state == OPEN
     assert host.trips == 1
 
-    ctl.tick(now=3, collected_at=3)   # cooldown pass 1 of 2 (bypassed)
+    ctl.step(TickInput(now=3, collected_at=3))   # cooldown pass 1 of 2 (bypassed)
     assert host.state == OPEN
-    ctl.tick(now=4, collected_at=4)   # HALF_OPEN probe against still-faulty
+    ctl.step(TickInput(now=4, collected_at=4))   # HALF_OPEN probe against still-faulty
     assert host.state == OPEN         # probe failed: re-open...
     assert host.trips == 2
     assert host.cooldown == 4         # ...with the cooldown doubled
 
     ctl.hierarchy_override = None     # fault clears
     for t in range(5, 9):             # burn cooldown, then the clean probe
-        ctl.tick(now=t, collected_at=t)
+        ctl.step(TickInput(now=t, collected_at=t))
     assert host.state == CLOSED
     assert host.probes == 2
     # Region never faulted: its breaker never tripped.
@@ -219,7 +219,7 @@ def test_reject_all_level_trips_breaker():
     ctl.hierarchy_override = faulty_hierarchy(
         ("region", "host"), "host", "reject_all")
     for t in range(6):
-        ctl.tick(now=t, collected_at=t)
+        ctl.step(TickInput(now=t, collected_at=t))
         if ctl.board.breaker("host").trips:
             break
     assert ctl.board.breaker("host").trips >= 1

@@ -8,7 +8,15 @@ import numpy as np
 import pytest
 
 from repro.core import generate_cluster
-from repro.core.controller import BalanceController, ControllerConfig
+from repro.core.controller import (BalanceController, ControllerConfig,
+                                   TickInput)
+from repro.service.events import AdvisoryBatch
+
+
+def _tick(ctl, cluster=None, now=None, collected_at=None):
+    """One control round via the typed API; returns the audit event."""
+    return ctl.step(TickInput(cluster=cluster, now=now,
+                              collected_at=collected_at)).event
 
 
 @pytest.fixture()
@@ -19,12 +27,12 @@ def cluster():
 def test_cooldown_suppresses_triggers_across_ticks(cluster):
     ctl = BalanceController(cluster, ControllerConfig(cooldown_rounds=4,
                                                       timeout_s=4))
-    ev1 = ctl.tick()
+    ev1 = _tick(ctl)
     assert ev1.applied
     for _ in range(3):                       # rounds 2..4 are inside cooldown
-        ev = ctl.tick()
+        ev = _tick(ctl)
         assert not ev.triggered and "cooldown" in ev.reason
-    ev5 = ctl.tick()                         # cooldown expired
+    ev5 = _tick(ctl)                         # cooldown expired
     assert "cooldown" not in ev5.reason
 
 
@@ -33,7 +41,7 @@ def test_dry_run_never_mutates_across_ticks(cluster):
     ctl = BalanceController(cluster, ControllerConfig(
         dry_run=True, cooldown_rounds=1, timeout_s=4))
     for _ in range(3):
-        ev = ctl.tick()
+        ev = _tick(ctl)
         assert not ev.applied
     np.testing.assert_array_equal(
         np.asarray(ctl.cluster.problem.assignment0), before)
@@ -46,7 +54,7 @@ def test_audit_totals_match_event_history(cluster):
         trigger_d2b=0.0, trigger_over_ideal=0.0, cooldown_rounds=1,
         timeout_s=4))
     for _ in range(4):
-        ctl.tick()
+        _tick(ctl)
     audit = ctl.audit()
     applied = [e for e in ctl.history if e.applied]
     assert audit["rounds"] == len(ctl.history) == 4
@@ -60,15 +68,15 @@ def test_tick_accepts_externally_evolved_cluster(cluster):
     """The sim harness hands an evolved cluster to every tick; the reused
     balancer must re-sync before deciding."""
     ctl = BalanceController(cluster, ControllerConfig(timeout_s=4))
-    ctl.tick()
+    _tick(ctl)
     evolved = dataclasses.replace(cluster)   # fresh telemetry stand-in
-    ctl.tick(evolved)
+    _tick(ctl, evolved)
     # the controller may have applied a rebalance on top of the evolved
     # cluster — either way balancer and controller stay in lock-step
     assert ctl._sptlb.cluster is ctl.cluster
     # legacy path: direct assignment between ticks still re-syncs
     ctl.cluster = dataclasses.replace(ctl.cluster)
-    ctl.tick()
+    _tick(ctl)
     assert ctl._sptlb.cluster is ctl.cluster
 
 
@@ -104,7 +112,7 @@ def test_movement_budget_enforced_across_ticks(cluster):
         trigger_d2b=0.0, trigger_over_ideal=0.0, cooldown_rounds=1,
         timeout_s=4, movement_cost_budget=budget))
     for _ in range(4):
-        ctl.tick()
+        _tick(ctl)
     assert ctl.cost_spent <= budget + 1e-6
     audit = ctl.audit()
     assert audit["movement_cost"] <= budget + 1e-6
@@ -120,7 +128,7 @@ def test_movement_budget_enforced_across_ticks(cluster):
 
 def test_unbudgeted_controller_still_prices_movement(cluster):
     ctl = BalanceController(cluster, ControllerConfig(timeout_s=4))
-    ev = ctl.tick()
+    ev = _tick(ctl)
     assert ev.applied and ev.movement_cost > 0
     assert not ev.budget_limited
     assert ctl.audit()["budget_overruns"] == 0
@@ -136,10 +144,10 @@ def test_declared_event_never_fired_leaves_budget_untouched(cluster):
     from repro.core.planner import CAPACITY, Advisory
     ctl = BalanceController(cluster, ControllerConfig(
         **QUIET, movement_cost_budget=50.0))
-    ctl.set_advisories([Advisory(at=10_000, kind=CAPACITY, tier=2,
-                                 scale=0.05)])
+    ctl.ingest(AdvisoryBatch(advisories=(
+        Advisory(at=10_000, kind=CAPACITY, tier=2, scale=0.05),)))
     for tick in range(3):
-        ev = ctl.tick(now=tick)
+        ev = _tick(ctl, now=tick)
         assert not ev.triggered and ev.plan_pending == 0
     assert ctl.cost_spent == 0.0
     assert ctl.audit()["budget_overruns"] == 0
@@ -157,9 +165,9 @@ def test_declared_drain_triggers_proactively_and_pre_evacuates(cluster):
     before = int(((x0 == hot) & valid).sum())
 
     ctl = BalanceController(cluster, ControllerConfig(**QUIET))
-    ctl.set_advisories([Advisory(at=6, kind=CAPACITY, tier=hot,
-                                 scale=0.05)])
-    events = [ctl.tick(now=tick) for tick in range(4)]
+    ctl.ingest(AdvisoryBatch(advisories=(
+        Advisory(at=6, kind=CAPACITY, tier=hot, scale=0.05),)))
+    events = [_tick(ctl, now=tick) for tick in range(4)]
     assert any(e.triggered and "declared-maintenance" in e.reason
                for e in events)
     assert any(e.applied for e in events)
@@ -173,6 +181,6 @@ def test_controller_restart_rounds_threads_through(cluster):
     objective contract itself is asserted in test_hierarchy.py)."""
     ctl = BalanceController(cluster, ControllerConfig(timeout_s=4,
                                                       restart_rounds=2))
-    ev = ctl.tick()
+    ev = _tick(ctl)
     assert ev.triggered and ev.applied
     assert ev.d2b_after < ev.d2b_before

@@ -8,9 +8,11 @@ rejection counts at N in {64, 1000} for all three variants plus the
 premask-off / restart / cost-budget knob paths.
 
 Also covered here: a no-op custom level appended to the stack never
-changes results (property test over seeded clusters), and the PR-6 fault
+changes results (property test over seeded clusters), the PR-6 fault
 machinery is invisible when idle — a healthy ``BreakerBoard`` and a fresh
-``TelemetryMonitor`` leave results bit-identical to the goldens.
+``TelemetryMonitor`` leave results bit-identical to the goldens — and the
+PR-10 measured-latency level is inert without a sketch bank: swapping
+``netlat`` in for ``region`` reproduces the goldens bit-for-bit.
 """
 
 import dataclasses
@@ -48,7 +50,7 @@ def _decide(cluster, config):
     return Sptlb(cluster).balance("local", timeout_s=4, config=config)
 
 
-def _record(cluster, decision):
+def _record(cluster, decision, region_level="region"):
     x = np.asarray(decision.assignment, np.int64)
     rec = {
         "assignment_sha": hashlib.sha256(x.tobytes()).hexdigest(),
@@ -62,7 +64,7 @@ def _record(cluster, decision):
             rounds=int(tm["rounds"]),
             feedback_rounds=int(decision.cooperation.feedback_rounds),
             num_rejections=int(decision.cooperation.num_rejections),
-            region_rejections=int(tm["region_rejections"]),
+            region_rejections=int(tm[f"{region_level}_rejections"]),
             host_rejections=int(tm["host_rejections"]),
             accepted=bool(decision.cooperation.accepted),
             movement_cost=float(tm.get("movement_cost", 0.0)),
@@ -208,6 +210,29 @@ def test_inactive_shed_plan_is_bit_identical():
             cluster, _decide(cluster, CoopConfig(max_rounds=8, shed=shed))
         )
         assert got == GOLDEN["N64/manual_cnst"], shed
+
+
+def test_inert_netlat_level_is_the_static_region_contract():
+    """PR 10's measured-latency level with no bank installed degrades to
+    exactly the static region contract: swapping region -> netlat in the
+    stack reproduces the PR-5 goldens bit-for-bit (the level reports its
+    rejections under its own name), and merely importing the package —
+    which registers the level — perturbs nothing."""
+    import repro.netlat as netlat
+
+    netlat.install_bank(None)  # explicit: no measurement state bound
+    for name in ("N64/manual_cnst", "N1000/manual_cnst"):
+        num_apps, kw = CASES[name]
+        cluster = generate_cluster(num_apps=num_apps, seed=3)
+        cfg = CoopConfig(max_rounds=8, levels=("netlat", "host"), **kw)
+        got = _record(cluster, _decide(cluster, cfg), region_level="netlat")
+        want = GOLDEN[name]
+        assert got == want, {k: (want[k], got[k]) for k in want if got[k] != want[k]}
+    # Registration alone is side-effect free: the default region+host
+    # stack still matches its golden with the netlat package imported.
+    cluster = generate_cluster(num_apps=64, seed=3)
+    got = _record(cluster, _decide(cluster, CoopConfig(max_rounds=8)))
+    assert got == GOLDEN["N64/manual_cnst"]
 
 
 def test_controller_config_legacy_fields_fold_into_coop():

@@ -7,7 +7,8 @@ import numpy as np
 import pytest
 
 from repro.core import generate_cluster
-from repro.core.controller import BalanceController, ControllerConfig
+from repro.core.controller import (BalanceController, ControllerConfig,
+                                   TickInput)
 from repro.distributed.compress import GradCompressor
 from repro.launch.serve import Request, RequestQueue, main as serve_main
 
@@ -88,7 +89,7 @@ def test_none_mode_is_identity():
 def test_controller_triggers_and_applies():
     cluster = generate_cluster(num_apps=200, seed=5)
     ctl = BalanceController(cluster, ControllerConfig(cooldown_rounds=2))
-    ev = ctl.tick()
+    ev = ctl.step(TickInput()).event
     assert ev.triggered                      # tier 3 is hot by construction
     assert ev.applied
     assert ev.d2b_after < ev.d2b_before
@@ -97,9 +98,9 @@ def test_controller_triggers_and_applies():
 def test_controller_cooldown_and_hysteresis():
     cluster = generate_cluster(num_apps=200, seed=5)
     ctl = BalanceController(cluster, ControllerConfig(cooldown_rounds=5))
-    ev1 = ctl.tick()
+    ev1 = ctl.step(TickInput()).event
     assert ev1.applied
-    ev2 = ctl.tick()                         # inside cooldown
+    ev2 = ctl.step(TickInput()).event                         # inside cooldown
     assert not ev2.triggered and "cooldown" in ev2.reason
     audit = ctl.audit()
     assert audit["rebalances"] == 1
@@ -111,7 +112,7 @@ def test_controller_dry_run_does_not_mutate():
     before = np.asarray(cluster.problem.assignment0).copy()
     ctl = BalanceController(cluster,
                             ControllerConfig(dry_run=True))
-    ev = ctl.tick()
+    ev = ctl.step(TickInput()).event
     assert ev.triggered and not ev.applied
     np.testing.assert_array_equal(
         np.asarray(ctl.cluster.problem.assignment0), before)

@@ -1,6 +1,6 @@
 """Invariant fuzzing over random trajectories (ISSUE 7 satellite).
 
-Five fuzz surfaces, >= 200 random trajectories total, each asserting the
+Six fuzz surfaces, >= 200 random trajectories total, each asserting the
 control plane's hard invariants — the properties the regression gate pins
 on two curated scenarios, checked here across a randomized family:
 
@@ -17,7 +17,11 @@ on two curated scenarios, checked here across a randomized family:
     the demand skew;
   * sharded fleet passes (PR 8): partition -> merge stays a bijection,
     the merged mapping strands nobody and never worsens the incumbent,
-    whatever the shard count or demand skew.
+    whatever the shard count or demand skew;
+  * measured-latency trajectories (PR 10): whatever random link weather a
+    network scenario throws (degrades, detours, jitter storms), the
+    measured netlat+host stack never commits a move whose destination
+    tier has a pair over its live p99 budget.
 
 ``FUZZ_TRAJECTORIES`` scales every surface proportionally: unset (CI) it
 keeps the per-surface defaults below (256 total); a nightly-style run sets
@@ -49,14 +53,15 @@ from repro.shard import (
 )
 from repro.shard.solve import ShardSolveConfig
 from repro.sim import Scenario, WorkloadConfig, run_scenario
-from repro.sim.events import CapacityScale, ChurnRate, FlashCrowd
+from repro.sim.events import CapacityScale, ChurnRate, FlashCrowd, JitterStorm, LinkDegrade
 from repro.streams.admission import AdmissionController, AdmissionState
 
 # Per-surface example counts at the CI default, before the env knob.
 _BASE_SIM, _BASE_ADMISSION, _BASE_PREMASK, _BASE_SHARD = 48, 120, 40, 24
-_BASE_SERVICE = 24
-_BASE_TOTAL = (_BASE_SIM + _BASE_ADMISSION + _BASE_PREMASK + _BASE_SHARD
-               + _BASE_SERVICE)
+_BASE_SERVICE, _BASE_NETLAT = 24, 8
+_BASE_TOTAL = (
+    _BASE_SIM + _BASE_ADMISSION + _BASE_PREMASK + _BASE_SHARD + _BASE_SERVICE + _BASE_NETLAT
+)
 _SCALE = max(1.0, int(os.environ.get("FUZZ_TRAJECTORIES", "0")) / _BASE_TOTAL)
 
 # ---------------------------------------------------------------------------
@@ -413,6 +418,71 @@ def test_fuzz_service_event_streams_hold_integrity(seed):
         assert all(a < b for a, b in zip(seqs, seqs[1:])), seed
 
 
+# ---------------------------------------------------------------------------
+# 6. measured-latency trajectories (PR 10): random link weather, one bucket
+# ---------------------------------------------------------------------------
+
+N_NETLAT_TRAJECTORIES = int(round(_BASE_NETLAT * _SCALE))
+
+
+def _random_network_scenario(seed: int) -> Scenario:
+    """A small random network_degraded scenario: the pool shape stays
+    fixed (one jit bucket) while the link weather — which pairs degrade,
+    how hard, whether a detour is one-directional, whether a jitter storm
+    fattens every tail — is drawn fresh per example.  Degrade factors stay
+    under the sketch bank's plausibility jump limit, as real detours do."""
+    rng = np.random.default_rng(seed ^ 0x9E7147)
+    t0 = int(rng.integers(1, 3))
+    events = []
+    for _ in range(int(rng.integers(1, 4))):
+        src, dst = (int(r) for r in rng.choice(5, size=2, replace=False))
+        events.append(
+            LinkDegrade(
+                at=t0,
+                src=src,
+                dst=dst,
+                factor=float(rng.uniform(1.4, 2.4)),
+                symmetric=bool(rng.random() < 0.7),
+            )
+        )
+    if rng.random() < 0.5:
+        events.append(
+            JitterStorm(at=t0 + 1, ticks=3, sigma=float(rng.uniform(0.2, 0.5)), seed=seed)
+        )
+    return Scenario(
+        name=f"fuzz_network_{seed}",
+        description="",
+        ticks=6,
+        num_apps=24,
+        seed=seed,
+        netlat=True,
+        workload=WorkloadConfig(period=8, diurnal_amp=0.2, burst_sigma=0.1),
+        events=tuple(events),
+    )
+
+
+@hypothesis.settings(max_examples=N_NETLAT_TRAJECTORIES, deadline=None)
+@hypothesis.given(st.integers(0, 10_000))
+def test_fuzz_measured_stack_never_exceeds_live_budget(seed):
+    from repro.sim.harness import SIM_CONTROLLER
+
+    sc = _random_network_scenario(seed)
+    cfg = dataclasses.replace(
+        SIM_CONTROLLER,
+        coop=dataclasses.replace(SIM_CONTROLLER.coop, levels=("netlat", "host")),
+    )
+    report = run_scenario(sc, config=cfg, netlat=True)
+    summary = report.summary()
+    # The measured-latency hard invariant: zero committed moves whose
+    # destination tier holds a pair over its live p99 budget, whatever
+    # the weather.  (The static stack leaks these by design — that contrast
+    # is the regression gate's job; this surface pins the measured stack.)
+    assert summary["budget_exceeding_moves"] == 0, (seed, summary)
+    # The plane calibrated (budgets were real, not the inert fallback) and
+    # the run kept its feasibility contract.
+    assert report.extra["netlat"]["calibrated"], seed
+
+
 def test_fuzz_counts_cover_the_contract():
     """The satellite's floor: at least 200 random trajectories total (and
     the env knob only ever scales the coverage up)."""
@@ -422,6 +492,7 @@ def test_fuzz_counts_cover_the_contract():
         + N_PREMASK_TRAJECTORIES
         + N_SHARD_TRAJECTORIES
         + N_SERVICE_TRAJECTORIES
+        + N_NETLAT_TRAJECTORIES
     )
     assert total >= 200
     assert total >= _BASE_TOTAL

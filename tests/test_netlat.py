@@ -1,0 +1,389 @@
+"""Measured-latency control plane (ISSUE 10): sketches, level, service path.
+
+Three suites:
+
+* ``P2QuantileBank`` — the batched P² estimator's contracts: quantile
+  accuracy against ``np.quantile`` on held streams, fixed-size state
+  whatever the stream length, and the count-weighted merge (commutative,
+  associative to within sketch tolerance, consistent with pooling).
+* ``LinkSketchBank`` / ``LatencySLOScheduler`` — quarantine and staleness
+  semantics, calibration refusal on half-empty banks, and the level's
+  vet/premask/relax contract: calibrated budgets only ever *tighten* the
+  static constant, the inert fallback reproduces the static region
+  contract, and maintenance relax uses the measured tail ratio.
+* service latency path — ``LatencyDelta`` is a non-structural signal: the
+  shadow marks breaching apps dirty without raising ``capacity_dirty``,
+  and a latency-SLO breach lets the drift detector's delta branch fire on
+  a perfectly balanced fleet.
+"""
+
+import dataclasses
+import types
+
+import numpy as np
+import pytest
+
+from repro.core import generate_cluster
+from repro.core.health import HealthConfig
+from repro.core.levels import (
+    Proposal,
+    REGION_LATENCY_BUDGET_MS,
+    RELAX_LATENCY_FACTOR,
+)
+from repro.netlat import (
+    LatencySLOScheduler,
+    LinkMeasurementSource,
+    LinkSketchBank,
+    NetlatConfig,
+    P2QuantileBank,
+    SourceConfig,
+)
+from repro.service import LatencyDelta, ServiceLoop
+from repro.service.drift import DELTA, NOOP, DriftDetector
+from repro.service.shadow import FleetShadow
+
+# ---------------------------------------------------------------------------
+# P² quantile bank
+# ---------------------------------------------------------------------------
+
+
+def _feed(bank, samples):
+    for s in samples:
+        bank.update(np.asarray(s).reshape(bank.shape))
+
+
+def test_p2_quantile_accuracy_vs_numpy():
+    """A single long stream: the sketch's p50/p99 land within a few
+    percent of the exact empirical quantiles."""
+    rng = np.random.default_rng(0)
+    samples = rng.lognormal(3.0, 0.25, size=4000)
+    bank = P2QuantileBank((1,))
+    _feed(bank, samples)
+    for p, tol in ((0.5, 0.03), (0.99, 0.06)):
+        est = float(bank.quantile(p)[0])
+        exact = float(np.quantile(samples, p))
+        assert abs(est - exact) <= tol * exact, (p, est, exact)
+
+
+def test_p2_batched_streams_are_independent():
+    """A [2, 2] grid of scaled copies of one base stream: every stream's
+    estimate is the base estimate scaled — one update call per grid
+    observation, no cross-stream leakage."""
+    rng = np.random.default_rng(1)
+    base = rng.lognormal(2.0, 0.2, size=1500)
+    scale = np.array([[1.0, 2.0], [5.0, 0.5]])
+    bank = P2QuantileBank((2, 2))
+    _feed(bank, [b * scale for b in base])
+    med = bank.quantile(0.5)
+    ref = float(np.quantile(base, 0.5))
+    assert np.allclose(med, ref * scale, rtol=0.05), med
+
+
+def test_p2_state_is_fixed_size():
+    """No sample retention: the state arrays keep their shapes (and the
+    buffer its five slots) from observation 10 to observation 10_000."""
+    bank = P2QuantileBank((3, 3))
+    rng = np.random.default_rng(2)
+    _feed(bank, rng.uniform(1.0, 50.0, size=(10, 3, 3)))
+    shapes = {k: getattr(bank, k).shape for k in ("heights", "pos", "desired", "count", "_buf")}
+    _feed(bank, rng.uniform(1.0, 50.0, size=(10_000, 3, 3)))
+    for k, shape in shapes.items():
+        assert getattr(bank, k).shape == shape, k
+    assert int(bank.count.min()) == 10_010
+
+
+def test_p2_empirical_phase_answers_exactly_and_empty_is_nan():
+    bank = P2QuantileBank((1,))
+    assert np.isnan(bank.quantile(0.5)[0])
+    xs = [4.0, 1.0, 9.0]
+    _feed(bank, xs)
+    assert float(bank.quantile(0.5)[0]) == pytest.approx(np.quantile(xs, 0.5))
+
+
+def test_p2_merge_commutative_and_pool_consistent():
+    rng = np.random.default_rng(3)
+    sa = rng.lognormal(3.0, 0.3, size=1200)
+    sb = rng.lognormal(3.2, 0.3, size=800)
+    a, b = P2QuantileBank((1,)), P2QuantileBank((1,))
+    _feed(a, sa)
+    _feed(b, sb)
+    ab, ba = a.merge(b), b.merge(a)
+    assert int(ab.count[0]) == sa.size + sb.size
+    for p in (0.5, 0.99):
+        assert float(ab.quantile(p)[0]) == pytest.approx(float(ba.quantile(p)[0]), rel=1e-9)
+        pooled = float(np.quantile(np.concatenate([sa, sb]), p))
+        assert float(ab.quantile(p)[0]) == pytest.approx(pooled, rel=0.08)
+
+
+def test_p2_merge_associative_within_tolerance():
+    """(a + b) + c vs a + (b + c): identical marker probabilities queried,
+    so the two orders agree to within the sketches' own approximation
+    error — the mergeability contract per-shard probers rely on."""
+    rng = np.random.default_rng(4)
+    banks, streams = [], []
+    for i in range(3):
+        s = rng.lognormal(2.5 + 0.2 * i, 0.25, size=900)
+        bank = P2QuantileBank((1,))
+        _feed(bank, s)
+        banks.append(bank)
+        streams.append(s)
+    a, b, c = banks
+    left = a.merge(b).merge(c)
+    right = a.merge(b.merge(c))
+    pooled = np.concatenate(streams)
+    # The merge interpolates five CDF points per sketch, so the tail is
+    # coarser than the body — hence the looser p99 accuracy bound.
+    for p, tol in ((0.5, 0.06), (0.99, 0.15)):
+        lq, rq = float(left.quantile(p)[0]), float(right.quantile(p)[0])
+        exact = float(np.quantile(pooled, p))
+        assert abs(lq - rq) <= 0.05 * exact, (p, lq, rq)
+        assert abs(lq - exact) <= tol * exact, (p, lq, exact)
+
+
+# ---------------------------------------------------------------------------
+# link sketch bank: quarantine, staleness, calibration, health
+# ---------------------------------------------------------------------------
+
+
+def _warm_bank(num_regions=3, ticks=8, seed=5, base=20.0):
+    bank = LinkSketchBank(num_regions)
+    rng = np.random.default_rng(seed)
+    lat = base * rng.uniform(0.5, 2.0, size=(num_regions, num_regions))
+    for t in range(ticks):
+        bank.ingest(lat * rng.uniform(0.95, 1.05, size=lat.shape), now=t)
+    return bank, lat, ticks - 1
+
+
+def test_bank_quarantines_implausible_samples():
+    bank, lat, now = _warm_bank()
+    before = bank.p99()
+    bad = lat.copy()
+    bad[0, 1] = np.nan
+    bad[1, 0] = -3.0
+    bad[2, 2] = lat[2, 2] * 50.0  # jump far beyond max_jump_factor x median
+    n_bad = bank.ingest(bad, now=now + 1)
+    assert n_bad == 3
+    assert bank.quarantined_total >= 3
+    # The poisoned entries never reached the sketch: estimates are stable.
+    assert np.allclose(bank.p99(), before, rtol=0.05)
+    # Quarantined-only pairs did not refresh their last_update stamp.
+    assert bank.last_update[0, 1] == now
+    assert bank.last_update[2, 2] == now
+
+
+def test_bank_staleness_inflates_p99():
+    bank, _, now = _warm_bank()
+    cfg = HealthConfig()
+    fresh = bank.p99(now)
+    assert np.allclose(fresh, bank.p99(), rtol=1e-12)  # no inflation yet
+    over = 4
+    stale = bank.p99(now + cfg.stale_after + over)
+    factor = min(cfg.max_inflation, (1.0 + cfg.uncertainty_growth) ** over)
+    assert np.allclose(stale, fresh * factor, rtol=1e-9)
+    blind = bank.p99(now + 10_000)
+    assert np.allclose(blind, fresh * cfg.max_inflation, rtol=1e-9)
+
+
+def test_bank_refuses_calibration_until_observed():
+    bank = LinkSketchBank(3)
+    assert not bank.calibrate(now=0)
+    assert not bank.calibrated
+    bank.ingest(np.full((3, 3), 10.0), now=0)  # 1 sample/pair: empirical
+    assert not bank.observed
+    assert not bank.calibrate(now=0)
+    bank2, _, now = _warm_bank()
+    assert bank2.observed
+    assert bank2.calibrate(now)
+    assert bank2.calibrated and bank2.calibrated_at == now
+    assert np.isfinite(bank2.calibrated_p99).all()
+
+
+def test_bank_relax_factor_is_measured_tail_ratio():
+    bank = LinkSketchBank(2)
+    assert bank.relax_factor() == RELAX_LATENCY_FACTOR  # unobserved default
+    # A deliberately fat tail so the p999/p99 gap is visible to the sketch.
+    source = LinkMeasurementSource(
+        seed=9, config=SourceConfig(samples_per_tick=8, tail_prob=0.05, tail_factor=3.0)
+    )
+    lat = np.array([[1.0, 20.0], [20.0, 1.0]])
+    for t in range(200):
+        bank.ingest(source.measure(lat, t), now=t)
+    f = bank.relax_factor(cap=2.5)
+    assert 1.0 < f <= 2.5
+    assert bank.relax_factor(cap=1.01) <= 1.01  # cap clips
+
+
+def test_bank_signal_health_scores():
+    bank, _, now = _warm_bank()
+    cfg = HealthConfig()
+    h = bank.signal_health(now)
+    assert h.name == "link_latency" and h.score == 1.0
+    assert bank.signal_health(now + cfg.blind_after + 1).score == 0.0
+
+
+# ---------------------------------------------------------------------------
+# the latency-SLO scheduler level
+# ---------------------------------------------------------------------------
+
+
+def _static_feasibility(cluster, budget=REGION_LATENCY_BUDGET_MS):
+    """bool[N, T] the static region contract: every pair from the app's
+    region to the tier's regions within the scalar budget."""
+    lat = np.asarray(cluster.region_latency, np.float64)
+    tiers = np.asarray(cluster.tier_regions, bool)
+    worst = np.where(tiers[None, :, :], lat[:, None, :], -np.inf).max(axis=2)
+    feas = worst[np.asarray(cluster.app_region)] <= budget
+    feas[:, ~tiers.any(axis=1)] = False
+    return feas
+
+
+def _calibrated_bank(cluster, ticks=8, seed=21):
+    lat = np.asarray(cluster.region_latency, np.float64)
+    bank = LinkSketchBank(lat.shape[0])
+    source = LinkMeasurementSource(seed=seed)
+    for t in range(ticks):
+        bank.ingest(source.measure(lat, t), now=t)
+    assert bank.calibrate(ticks - 1)
+    return bank, ticks - 1
+
+
+def test_level_inert_fallback_matches_static_region_contract():
+    cluster = generate_cluster(num_apps=48, seed=13)
+    level = LatencySLOScheduler(cluster)  # no bank
+    assert level.counters()["measured"] == 0
+    feas = level.feasibility_matrix()
+    assert np.array_equal(feas, _static_feasibility(cluster))
+    assert np.array_equal(level.premask(cluster.problem), ~feas)
+
+
+def test_level_calibrated_budgets_only_tighten_the_static_contract():
+    cluster = generate_cluster(num_apps=48, seed=13)
+    bank, now = _calibrated_bank(cluster)
+    cfg = NetlatConfig()
+    level = LatencySLOScheduler(cluster, bank=bank, config=cfg, now=now)
+    assert level.counters()["measured"] == 1
+    assert (level._budget <= cfg.cap_ms + 1e-9).all()
+    assert (level._budget >= cfg.min_ms - 1e-9).all()
+    # Measured feasibility is a subset of the static contract: nothing the
+    # region level would veto is admitted by the measured budgets.
+    assert not (level.feasibility_matrix() & ~_static_feasibility(cluster)).any()
+
+
+def test_level_vet_rejects_budget_breaching_moves():
+    cluster = generate_cluster(num_apps=48, seed=13)
+    bank, now = _calibrated_bank(cluster)
+    # Degrade one pair's live estimate far past any budget (but under the
+    # plausibility jump limit — a real routing detour, not corruption):
+    # every tier reachable through it becomes a measured no-go.
+    degraded = np.asarray(cluster.region_latency, np.float64).copy()
+    degraded[0, 1] *= 5.0
+    for t in range(now + 1, now + 7):
+        bank.ingest(LinkMeasurementSource(seed=3).measure(degraded, t), now=t)
+    level = LatencySLOScheduler(cluster, bank=bank, now=now + 6)
+    feas = level.feasibility_matrix()
+    bad_tiers = np.where(np.asarray(cluster.tier_regions)[:, 1])[0]
+    src0 = np.where(np.asarray(cluster.app_region) == 0)[0]
+    assert bad_tiers.size and src0.size  # the fixture covers the arc
+    assert not feas[np.ix_(src0, bad_tiers)].any()
+    # vet: candidates into infeasible tiers come back rejected, feasible
+    # ones pass, and the rejection counter advances.
+    x0 = np.asarray(cluster.problem.assignment0).copy()
+    n_bad, n_ok = int(src0[0]), None
+    x = x0.copy()
+    x[n_bad] = bad_tiers[0]
+    for n in range(feas.shape[0]):
+        ok_t = np.where(feas[n])[0]
+        if n != n_bad and ok_t.size:
+            n_ok, x[n] = n, ok_t[0]
+            break
+    rejected = level.vet(Proposal(x=x, x0=x0, candidates=np.array([n_bad, n_ok])))
+    assert n_bad in rejected and n_ok not in rejected
+    assert level.counters()["rejections"] == 1
+
+
+def test_level_relax_uses_measured_tail_ratio():
+    cluster = generate_cluster(num_apps=48, seed=13)
+    bank, now = _calibrated_bank(cluster)
+    level = LatencySLOScheduler(cluster, bank=bank, now=now)
+    measured_factor = level._relax_factor
+    assert measured_factor == pytest.approx(
+        bank.relax_factor(cap=NetlatConfig().max_relax), abs=1e-9
+    )
+    x0 = np.asarray(cluster.problem.assignment0)
+    relax_tiers = np.zeros(np.asarray(cluster.tier_regions).shape[0], bool)
+    relax_tiers[x0[0]] = True
+    plan = types.SimpleNamespace(relax_home_tiers=relax_tiers, relax_latency_factor=99.0)
+    level.relax(plan, cluster)
+    # Measured mode ignores the plan's declared factor; the relaxed apps
+    # are exactly the residents of the drained tier.
+    assert level._relax_factor == measured_factor != 99.0
+    assert np.array_equal(level._relax_apps, relax_tiers[x0])
+    # Uncalibrated level honors the declared factor (static parity).
+    inert = LatencySLOScheduler(cluster)
+    inert.relax(plan, cluster)
+    assert inert._relax_factor == 99.0
+
+
+# ---------------------------------------------------------------------------
+# service latency path: LatencyDelta -> shadow -> drift
+# ---------------------------------------------------------------------------
+
+
+def test_latency_delta_is_not_structural():
+    cluster = generate_cluster(num_apps=24, seed=3)
+    shadow = FleetShadow(cluster)
+    calm = np.asarray(cluster.region_latency, np.float64) * 0.5
+    shadow.apply(LatencyDelta(region_latency=calm, collected_at=1), seq=1)
+    assert not shadow.capacity_dirty
+    assert not shadow.latency_breach
+    assert not shadow.dirty_apps
+    # The staged matrix is the delta's, not the cluster's original.
+    assert np.allclose(shadow.view(1).region_latency, calm)
+
+
+def test_latency_delta_breach_marks_apps_dirty_without_capacity_dirty():
+    cluster = generate_cluster(num_apps=24, seed=3)
+    shadow = FleetShadow(cluster)
+    storm = np.asarray(cluster.region_latency, np.float64) * 10.0
+    np.fill_diagonal(storm, 0.0)
+    shadow.apply(LatencyDelta(region_latency=storm, collected_at=2), seq=1)
+    assert shadow.latency_breach
+    assert not shadow.capacity_dirty
+    live = set(np.where(np.asarray(cluster.problem.valid))[0].tolist())
+    assert shadow.dirty_apps == live
+    for n in shadow.dirty_apps:
+        assert shadow.applied_seq[n][-1] == 1
+    shadow.clean()
+    assert not shadow.latency_breach and not shadow.dirty_apps
+
+
+def test_latency_breach_bypasses_the_delta_d2b_gate():
+    det = DriftDetector()
+    base = dict(
+        loads=np.full(4, 0.4),
+        capacity_dirty=False,
+        outlook_active=False,
+        stranded=0,
+        dirty_shards=(1,),
+        pending_membership=False,
+        d2b=0.0,
+    )
+    calm = det.decide(now=0, **base)
+    assert calm.action == NOOP
+    breach = det.decide(now=1, latency_breach=True, **base)
+    assert breach.action == DELTA
+    assert breach.reason.startswith("latency-SLO breach")
+    assert breach.dirty_shards == (1,)
+
+
+def test_service_loop_latency_breach_triggers_delta_solve():
+    cluster = generate_cluster(num_apps=24, seed=3)
+    loop = ServiceLoop(cluster)
+    loop.step(0)  # initial full pass; the fleet settles
+    storm = np.asarray(cluster.region_latency, np.float64) * 10.0
+    np.fill_diagonal(storm, 0.0)
+    loop.submit(LatencyDelta(region_latency=storm, collected_at=1))
+    out = loop.step(1)
+    assert out.action == DELTA, (out.action, out.reason)
+    assert "latency-SLO breach" in out.reason
+    assert loop.dropped_events == 0

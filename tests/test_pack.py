@@ -8,7 +8,8 @@ import numpy as np
 
 from repro.core import (CoopConfig, HostScheduler, RegionScheduler, Sptlb,
                         generate_cluster)
-from repro.core.controller import BalanceController, ControllerConfig
+from repro.core.controller import (BalanceController, ControllerConfig,
+                                   TickInput)
 from repro.core.hierarchy import region_overlap_avoid
 from repro.kernels.pack import pack_ffd, pack_ffd_tiers, pack_trace_count
 
@@ -208,11 +209,11 @@ def test_controller_reuses_balancer_and_cluster_stays_consistent():
         timeout_s=4))
     balancer = ctl._sptlb
     for _ in range(2):
-        ctl.tick()
+        ctl.step(TickInput())
     assert ctl._sptlb is balancer                # reused, not re-instantiated
     assert ctl._sptlb.cluster is ctl.cluster     # tracks applied rebalances
     # caller swaps in fresh telemetry between ticks: tick must re-sync the
     # balancer before deciding, not solve the stale cluster
     ctl.cluster = dataclasses.replace(ctl.cluster)
-    ctl.tick()
+    ctl.step(TickInput())
     assert ctl._sptlb.cluster is ctl.cluster

@@ -1,4 +1,4 @@
-"""Streaming control service: events, drift, delta solves, API shims.
+"""Streaming control service: events, drift, delta solves, typed API.
 
 Covers the ISSUE 9 tentpole and satellites:
 
@@ -12,8 +12,8 @@ Covers the ISSUE 9 tentpole and satellites:
 * the service loop end-to-end (noop/delta/full behaviour, asyncio serve);
 * the stale-advisory fix: deadlines that pass while the controller is held
   are expired explicitly, audited, and trigger one catch-up rebalance;
-* the API redesign: ``step(TickInput) -> TickResult`` is golden-parity
-  with the deprecated ``tick`` shim, and the old entry points warn.
+* the API redesign: ``step(TickInput) -> TickResult`` is the only entry
+  point — the pre-PR-9 shims are gone and stale callers fail loudly.
 """
 
 import asyncio
@@ -369,32 +369,8 @@ def test_acted_advisory_expires_without_catchup():
 
 
 # ---------------------------------------------------------------------------
-# API redesign: step/TickInput vs the deprecated shims
+# API redesign: step/TickInput is the only entry point
 # ---------------------------------------------------------------------------
-
-def test_tick_shim_golden_parity_with_step():
-    cluster = _cluster(seed=9)
-    a = BalanceController(cluster, ControllerConfig(timeout_s=4))
-    b = BalanceController(cluster, ControllerConfig(timeout_s=4))
-    rng = np.random.default_rng(9)
-    world = cluster
-    for t in range(4):
-        skew = rng.uniform(0.9, 1.3,
-                           size=(world.problem.num_apps, 1)).astype(np.float32)
-        world = dataclasses.replace(
-            world, problem=dataclasses.replace(
-                world.problem,
-                demand=world.problem.demand * jnp.asarray(skew)))
-        with pytest.warns(DeprecationWarning):
-            old = a.tick(world, now=t, collected_at=t)
-        new = b.step(TickInput(cluster=world, now=t, collected_at=t))
-        assert old.triggered == new.triggered
-        assert old.applied == new.applied
-        assert old.reason == new.reason
-        assert np.isclose(old.d2b_before, new.d2b_before)
-        assert np.array_equal(np.asarray(a.cluster.problem.assignment0),
-                              np.asarray(b.cluster.problem.assignment0))
-
 
 def test_tickresult_delegates_to_event():
     ctl = BalanceController(_cluster(), ControllerConfig(timeout_s=4))
@@ -407,15 +383,16 @@ def test_tickresult_delegates_to_event():
         res.not_a_field
 
 
-def test_legacy_entry_points_warn():
+def test_legacy_entry_points_removed():
+    """The pre-PR-9 shims are gone for good — the typed API is the only
+    surface, so a stale caller fails loudly instead of silently warning."""
     cluster = _cluster()
     ctl = BalanceController(cluster, ControllerConfig(timeout_s=4))
-    with pytest.warns(DeprecationWarning):
-        ctl.set_advisories(())
-    with pytest.warns(DeprecationWarning):
-        ctl.observe(cluster)
-    with pytest.warns(DeprecationWarning):
-        ctl.tick(cluster, now=0)
+    for legacy in ("tick", "observe", "set_advisories", "admit"):
+        assert not hasattr(ctl, legacy), legacy
+    # The internal equivalents the typed API routes through still exist.
+    for private in ("_observe", "_set_advisories", "_admit"):
+        assert hasattr(ctl, private), private
 
 
 def test_ingest_membership_mutates_standalone_cluster():

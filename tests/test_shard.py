@@ -16,7 +16,8 @@ from repro.core import (
     pad_problem,
     solve_local,
 )
-from repro.core.controller import BalanceController, ControllerConfig
+from repro.core.controller import (BalanceController, ControllerConfig,
+                                   TickInput)
 from repro.core.goals import objective
 from repro.core.levels import CoopConfig, Proposal, level_factory
 from repro.core.problem import tier_loads
@@ -294,7 +295,7 @@ def test_controller_routes_through_sharded_path(cluster):
             trigger_over_ideal=0.0,
         ),
     )
-    ev = ctl.tick()
+    ev = ctl.step(TickInput()).event
     assert ev.triggered and ev.applied
     assert ctl.audit()["rebalances"] == 1
     assert (
